@@ -1,0 +1,53 @@
+"""Paper Fig. 2: attention-distribution fidelity — KL(softmax || HCCS) for
+broad vs focused heads, plus probability-curve summary statistics.
+
+Claims validated: calibrated KL ~ 0.1-0.3; broad heads keep slow decay,
+focused heads keep top-rank concentration.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.calibrate import calibrate_rows
+from repro.core.hccs import HCCSParams, hccs_probs
+
+
+def _head_rows(kind: str, n: int, R: int, rng):
+    temp = {"broad": 0.6, "focused": 4.0}[kind]
+    return rng.normal(0, temp, (R, n)).astype(np.float32)
+
+
+def run(fast: bool = True):
+    rng = np.random.default_rng(0)
+    n, R = 64, 128
+    out = []
+    print("\n# Fig 2: head_type, calibrated_KL, top1_mass_ref, top1_mass_hccs,"
+          " entropy_ref, entropy_hccs")
+    for kind in ("broad", "focused"):
+        rows = _head_rows(kind, n, R, rng)
+        scale = np.abs(rows).max() / 127
+        (B, S, D), kl = calibrate_rows(rows, scale, n)
+        p = HCCSParams(B=jnp.int32(B), S=jnp.int32(S), D=jnp.int32(D))
+        xq = jnp.asarray(np.clip(np.round(rows / scale), -128, 127), jnp.int32)
+        q = np.asarray(hccs_probs(xq, p, "i16_div"))
+        q = q / np.maximum(q.sum(-1, keepdims=True), 1e-9)
+        ref = np.asarray(jax.nn.softmax(jnp.asarray(rows), -1))
+        top1_ref = float(np.sort(ref, -1)[:, -1].mean())
+        top1_hccs = float(np.sort(q, -1)[:, -1].mean())
+        ent = lambda p_: float(-(p_ * np.log(np.maximum(p_, 1e-12))).sum(-1).mean())
+        print("fig2,%s,%.3f,%.3f,%.3f,%.3f,%.3f" %
+              (kind, kl, top1_ref, top1_hccs, ent(ref), ent(q)))
+        out.append(dict(kind=kind, kl=kl, top1_ref=top1_ref,
+                        top1_hccs=top1_hccs, entropy_ref=ent(ref),
+                        entropy_hccs=ent(q), theta=(B, S, D)))
+    # structural claims
+    broad, focused = out
+    assert broad["entropy_hccs"] > focused["entropy_hccs"], \
+        "broad heads must stay higher-entropy than focused heads under HCCS"
+    return out
+
+
+if __name__ == "__main__":
+    run()

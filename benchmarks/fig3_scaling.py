@@ -1,0 +1,47 @@
+"""Paper Fig. 3: aggregate softmax throughput vs tile count.
+
+The paper's own method: rows are independent, tiles share nothing, so
+aggregate throughput = measured single-tile throughput x tile count. We
+measure the single-"tile" (single-core XLA) throughput for both HCCS
+configurations and model the scaling curve to 184 tiles, plus the TPU analogue
+(per-core Pallas grid rows scale across cores/chips the same way — the dry-run
+proves the data axis shards).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.constraints import default_params
+from repro.kernels import ref as REF
+
+
+def run(fast: bool = True):
+    rng = np.random.default_rng(0)
+    n, rows = 64, 8192
+    x_i = jnp.asarray(rng.integers(-128, 128, (rows, n)), jnp.int8)
+    B, S, D = default_params(n)
+    theta = jnp.tile(jnp.asarray([[B, S, D]], jnp.int32), (rows, 1))
+    out = []
+    print("\n# Fig 3: kernel, tiles, aggregate_G_elems_per_s (modeled linear)")
+    for mode, label in (("i16_div", "hccs_i16_div"), ("i8_clb", "hccs_i8_clb")):
+        fn = jax.jit(lambda x, t, m=mode: REF.hccs_rows_ref(x, t, m))
+        fn(x_i, theta).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(10):
+            r = fn(x_i, theta)
+        r.block_until_ready()
+        dt = (time.perf_counter() - t0) / 10
+        single = rows * n / dt
+        for tiles in (1, 8, 32, 92, 184):
+            agg = single * tiles
+            print("fig3,%s,%d,%.3f" % (label, tiles, agg / 1e9))
+            out.append(dict(kernel=label, tiles=tiles, agg_elems_per_s=agg))
+    return out
+
+
+if __name__ == "__main__":
+    run()

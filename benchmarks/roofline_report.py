@@ -1,0 +1,39 @@
+"""Roofline table from the dry-run JSON records (EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_records(out_dir="experiments/dryrun"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(fast: bool = True, out_dir="experiments/dryrun"):
+    recs = [r for r in load_records(out_dir) if not r.get("tag")]
+    print("\n# Roofline: arch, shape, mesh, ok, dominant, compute_s, memory_s,"
+          " collective_s, roofline_frac, useful_ratio")
+    rows = []
+    for r in recs:
+        if not r.get("ok"):
+            print("roofline,%s,%s,%s,FAIL,,,,," % (r["arch"], r["shape"],
+                                                   r["mesh"]))
+            continue
+        t = r["roofline"]
+        print("roofline,%s,%s,%s,OK,%s,%.4f,%.4f,%.4f,%.4f,%.3f" % (
+            r["arch"], r["shape"], r["mesh"], t["dominant"],
+            t["compute_s"], t["memory_s"], t["collective_s"],
+            t["roofline_fraction"], r.get("useful_flops_ratio", 0.0)))
+        rows.append(r)
+    n_ok = len(rows)
+    print(f"roofline_summary,cells_ok,{n_ok},of,{len(recs)}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

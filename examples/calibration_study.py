@@ -1,0 +1,37 @@
+"""Calibration granularity study (paper Table II mechanics, standalone):
+generate heterogeneous attention heads, calibrate at three granularities,
+report the KL each achieves and the chosen theta_h per head.
+
+    PYTHONPATH=src python examples/calibration_study.py
+"""
+import numpy as np
+
+from repro.core.calibrate import calibrate_heads
+from repro.core.constraints import b_upper, score_floor
+
+L, H, R, N = 2, 4, 48, 64
+rng = np.random.default_rng(0)
+
+# heads with very different temperature (focused <-> broad)
+rows = np.zeros((L, H, R, N), np.float32)
+temps = np.linspace(0.4, 5.0, L * H).reshape(L, H)
+for l in range(L):
+    for h in range(H):
+        rows[l, h] = rng.normal(0, temps[l, h], (R, N))
+scales = np.abs(rows).max(axis=(2, 3)) / 127.0
+
+print(f"feasible band at n={N}: floor={score_floor(N)}, B_max={b_upper(N)}\n")
+for gran in ("global", "per_layer", "per_head"):
+    params, kl = calibrate_heads(rows, scales, N, granularity=gran)
+    print(f"{gran:10s} mean KL {kl.mean():.4f}  per-head KL "
+          f"{np.round(kl.flatten(), 3).tolist()}")
+
+params, kl = calibrate_heads(rows, scales, N, granularity="per_head")
+print("\nper-head calibrated theta (B, S, D) vs head temperature:")
+for l in range(L):
+    for h in range(H):
+        print(f"  layer {l} head {h}: temp={temps[l, h]:.2f} -> "
+              f"B={int(params.B[l, h])}, S={int(params.S[l, h])}, "
+              f"D={int(params.D[l, h])}, KL={kl[l, h]:.3f}")
+print("\nfocused (high-temp) heads get steeper effective decay; broad heads "
+      "flatter — exactly the heterogeneity per-head calibration captures.")

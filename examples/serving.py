@@ -1,0 +1,56 @@
+"""End-to-end driver (the paper is an inference paper): serve a small LM with
+batched requests through the wave engine, HCCS integer attention end to end.
+
+Trains a small model briefly first (so generations aren't pure noise), then
+serves a mixed queue of requests and reports throughput.
+
+    PYTHONPATH=src python examples/serving.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.data import LMStream, LMStreamConfig
+from repro.serve import Request, ServeEngine
+from repro.train import make_train_state, make_train_step, train_loop
+
+VOCAB, SEQ = 512, 64
+
+cfg = ModelConfig(
+    name="serve-demo", family="dense", num_layers=4, d_model=128,
+    num_heads=4, num_kv_heads=2, d_ff=512, vocab_size=VOCAB,
+    vocab_pad_multiple=1, attention_prob="hccs", hccs_mode="i16_div",
+    attention_impl="dense")
+
+print("[1/2] quick pre-train so generations follow the planted bigrams ...")
+tcfg = TrainConfig(total_steps=60, warmup_steps=6, learning_rate=3e-3)
+state = make_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+step = jax.jit(make_train_step(cfg, tcfg), donate_argnums=0)
+stream = LMStream(LMStreamConfig(vocab_size=VOCAB, seq_len=SEQ, global_batch=8))
+state, hist = train_loop(
+    state, step, lambda s: {k: jnp.asarray(v)
+                            for k, v in stream.batch_at(s).items()},
+    total_steps=60, log_every=20)
+
+print("[2/2] serving a batched queue (HCCS i16+div attention) ...")
+eng = ServeEngine(state["params"], cfg, max_batch=8, max_len=128)
+rng = np.random.default_rng(0)
+n_req = 16
+for i in range(n_req):
+    plen = int(rng.choice([8, 8, 8, 16]))          # two wave lengths
+    eng.submit(Request(uid=i,
+                       prompt=rng.integers(0, VOCAB, plen).astype(np.int32),
+                       max_new_tokens=24,
+                       temperature=0.7 if i % 2 else 0.0))
+t0 = time.perf_counter()
+done = eng.run()
+dt = time.perf_counter() - t0
+tokens = sum(len(r.out_tokens) for r in done)
+print(f"served {len(done)} requests / {tokens} tokens in {dt:.2f}s "
+      f"({tokens / dt:.1f} tok/s)")
+sample = done[0]
+print(f"sample request {sample.uid}: prompt={sample.prompt[:6].tolist()}... "
+      f"-> {sample.out_tokens[:12]}...")

@@ -1,0 +1,4 @@
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.configs.registry import (ARCH_IDS, get_config, input_specs,
+                                    iter_cells, reduced_config)
+from repro.configs.shapes import SHAPES, shape_applicable

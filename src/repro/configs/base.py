@@ -1,0 +1,112 @@
+"""Model/config dataclasses shared by every architecture config."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm | encoder
+    num_layers: int
+    d_model: int
+    num_heads: int                   # 0 for attention-free archs
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # default d_model // num_heads
+    activation: str = "swiglu"       # swiglu | gelu | geglu | squared_relu
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    rope: str = "rope"               # rope | mrope | none | learned
+    rope_theta: float = 10000.0
+    mrope_sections: tuple[int, ...] = (16, 24, 24)
+    causal: bool = True
+    # --- HCCS (the paper's technique) ---
+    attention_prob: str = "hccs"     # softmax | hccs  (per-arch default: hccs on)
+    hccs_mode: str = "wide"          # wide | i16_div | i8_div | i16_clb | i8_clb
+    # ("wide" = 32-bit-lane normalization, the TPU adaptation for rows > 128;
+    #  bit-faithful integer modes are used at paper-scale row lengths)
+    hccs_router: bool = False        # beyond-paper: HCCS for the MoE router
+    # --- MoE ---
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_capacity_factor: float = 1.25
+    moe_groups: int = 0              # dispatch groups (0 = auto by token count)
+    # --- SSM (mamba2 / hybrid) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_groups: int = 1
+    ssm_chunk: int = 128
+    # --- hybrid (hymba) ---
+    hybrid: bool = False             # parallel attn + SSM heads per block
+    window: int = 0                  # sliding-window attention (0 = full)
+    # --- frontends / misc ---
+    input_mode: str = "tokens"       # tokens | embeddings (audio/vlm stubs)
+    num_classes: int = 0             # >0: classification head (BERT-style)
+    tie_embeddings: bool = True
+    dtype: str = "float32"           # param/compute dtype ("bfloat16" at scale)
+    attention_impl: str = "auto"     # dense | blockwise | auto
+    blockwise_threshold: int = 2048  # seq len above which blockwise is used
+    block_k: int = 512               # kv block for blockwise attention
+    remat: str = "dots"              # none | dots | full
+    scan_unroll: int = 1             # layer-scan unroll (dry-run measurement)
+    max_position: int = 1 << 20
+    # vocab padded to a TP-friendly multiple (Megatron-style); pad logits are
+    # masked to -inf in lm_logits so semantics are unchanged
+    vocab_pad_multiple: int = 2048
+    # decode hot buffer (tokens): >0 appends decoded KV to a small REPLICATED
+    # buffer instead of dynamic-updating the seq-sharded main cache (which
+    # forces SPMD to gather the whole cache every token — see §Perf D).
+    # Prefill fills the main cache at static offsets; decode attention merges
+    # the two segments with a shared max. 0 = classic single-cache decode.
+    hot_buffer: int = 0
+
+    def __post_init__(self):
+        if self.num_heads and not self.head_dim:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return -(-self.vocab_size // m) * m
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One (input-shape) cell: training or serving geometry."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    moe_aux_weight: float = 0.01
+    grad_compression: str = "none"   # none | int8
+    seed: int = 0

@@ -1,0 +1,129 @@
+"""Offline per-head calibration of HCCS parameters (paper §III-C, eq. 10).
+
+Grid search over the feasible integer region, minimizing the expected
+KL( softmax(x_fp) || HCCS_int16(x_q; theta) ) over representative logit rows.
+The objective is evaluated in int16 space (the paper finds the int8 objective
+non-smooth due to rounding local optima); the winning theta transfers to the
+uint8 output path.
+
+Vectorization: the whole grid is evaluated in one vmapped pass per chunk of
+candidate triples — this is the JAX-native analogue of the paper's offline scan.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import constraints
+from repro.core.hccs import HCCSParams, hccs_scores, normalize
+
+Granularity = Literal["global", "per_layer", "per_head"]
+
+
+@partial(jax.jit, static_argnames=("mode",))
+def _kl_for_grid(x_q: jax.Array, p_ref: jax.Array, grid: jax.Array,
+                 mode: str = "i16_div") -> jax.Array:
+    """Mean KL over rows for every candidate triple.
+
+    x_q:   (R, n) int32 quantized logit rows
+    p_ref: (R, n) float32 reference softmax of the *float* logits
+    grid:  (G, 3) int32 candidate (B, S, D)
+    returns (G,) float32 mean KL.
+    """
+    def one(theta):
+        B, S, D = theta[0], theta[1], theta[2]
+        s, Z = hccs_scores(x_q, B, S, D)
+        p_int = normalize(s, Z, mode)                       # (R, n) int32
+        p = p_int.astype(jnp.float32)
+        p = p / jnp.maximum(p.sum(-1, keepdims=True), 1.0)
+        # KL(p_ref || p); clamp q away from 0 (integer truncation can zero a lane)
+        q = jnp.maximum(p, 1e-9)
+        kl = jnp.sum(p_ref * (jnp.log(jnp.maximum(p_ref, 1e-20)) - jnp.log(q)), -1)
+        return jnp.mean(kl)
+
+    return jax.lax.map(one, grid, batch_size=64)
+
+
+def calibrate_rows(x_fp: np.ndarray, scale: float, n: int,
+                   mode: str = "i16_div", grid: np.ndarray | None = None,
+                   ) -> tuple[tuple[int, int, int], float]:
+    """Calibrate one parameter set from float logit rows x_fp: (R, n).
+
+    scale: int8 quantization scale for the logits (x_q = round(x/scale)).
+    Returns ((B, S, D), best_kl).
+    """
+    if grid is None:
+        grid = constraints.feasible_grid(n)
+    x_q = np.clip(np.round(np.asarray(x_fp, np.float64) / scale), -128, 127)
+    x_q = jnp.asarray(x_q, jnp.int32)
+    p_ref = jax.nn.softmax(jnp.asarray(x_fp, jnp.float32), axis=-1)
+    kls = np.asarray(_kl_for_grid(x_q, p_ref, jnp.asarray(grid), mode))
+    best = int(np.argmin(kls))
+    B, S, D = (int(v) for v in grid[best])
+    constraints.validate_params(B, S, D, n)
+    return (B, S, D), float(kls[best])
+
+
+def calibrate_heads(logit_rows: np.ndarray, scale: np.ndarray, n: int,
+                    granularity: Granularity = "per_head",
+                    mode: str = "i16_div") -> tuple[HCCSParams, np.ndarray]:
+    """Calibrate theta at the requested granularity (paper Table II ablation).
+
+    logit_rows: (L, H, R, n) float — R representative rows per (layer, head).
+    scale:      (L, H) float int8 scales per head (or broadcastable).
+    Returns (HCCSParams with arrays shaped (L, H) broadcast-ready, kl (L, H)).
+    """
+    L, H, R, n_ = logit_rows.shape
+    assert n_ == n
+    scale = np.broadcast_to(np.asarray(scale, np.float64), (L, H))
+    grid = constraints.feasible_grid(n)
+    B = np.zeros((L, H), np.int32)
+    S = np.zeros((L, H), np.int32)
+    D = np.zeros((L, H), np.int32)
+    kl = np.zeros((L, H), np.float64)
+
+    if granularity == "global":
+        rows = logit_rows.reshape(L * H * R, n)
+        (b, s, d), k = calibrate_rows(rows, float(scale.mean()), n, mode, grid)
+        B[:], S[:], D[:], kl[:] = b, s, d, k
+    elif granularity == "per_layer":
+        for l in range(L):
+            rows = logit_rows[l].reshape(H * R, n)
+            (b, s, d), k = calibrate_rows(rows, float(scale[l].mean()), n, mode, grid)
+            B[l], S[l], D[l], kl[l] = b, s, d, k
+    elif granularity == "per_head":
+        for l in range(L):
+            for h in range(H):
+                (b, s, d), k = calibrate_rows(logit_rows[l, h], float(scale[l, h]),
+                                              n, mode, grid)
+                B[l, h], S[l, h], D[l, h], kl[l, h] = b, s, d, k
+    else:
+        raise ValueError(granularity)
+
+    params = HCCSParams(B=jnp.asarray(B), S=jnp.asarray(S), D=jnp.asarray(D))
+    return params, kl
+
+
+def collect_attention_logits(logit_batches, max_rows_per_head: int = 256,
+                             seed: int = 0) -> np.ndarray:
+    """Stack per-head logit rows from a list of (L, H, B, T, n) score tensors
+    into the (L, H, R, n) calibration tensor, subsampling rows."""
+    rng = np.random.default_rng(seed)
+    rows = None
+    for batch in logit_batches:
+        arr = np.asarray(batch)
+        L, H = arr.shape[:2]
+        flat = arr.reshape(L, H, -1, arr.shape[-1])
+        take = min(max_rows_per_head, flat.shape[2])
+        idx = rng.choice(flat.shape[2], size=take, replace=False)
+        sel = flat[:, :, idx]
+        rows = sel if rows is None else np.concatenate([rows, sel], axis=2)
+    assert rows is not None, "no calibration batches provided"
+    if rows.shape[2] > max_rows_per_head:
+        idx = rng.choice(rows.shape[2], size=max_rows_per_head, replace=False)
+        rows = rows[:, :, idx]
+    return rows

@@ -1,0 +1,240 @@
+"""Head-Calibrated Clipped-Linear Softmax (HCCS) — the paper's core contribution.
+
+Implements Algorithm 1 of the paper bit-exactly in int32 lanes (the container/TPU
+VPU has no native int8 MAC; semantics are identical), plus the differentiable
+float/STE path used for quantization-aware training (QAT).
+
+Modes (paper §III-B):
+  i16+div : T=32767, exact Q0 reciprocal rho = floor(T/Z),      p = s*rho
+  i8+div  : rho_u8 = floor(255*2^R / Z), R=INV_SHIFT=15,        p = (s*rho_u8) >> (R+OUT_SHIFT)
+  i16+clb : rho approx T / 2^floor(log2 Z) (leading-bit detect), p = s*rho
+  i8+clb  : rho_u8 approx (255<<R) >> floor(log2 Z),             p = (s*rho_u8) >> (R+OUT_SHIFT)
+
+All functions operate on the last axis (the key/column axis of an attention row).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+INV_SHIFT = 15          # R in the paper's eq. (8)
+OUT_SHIFT = 0           # extra down-shift on the int8 output path
+T_I16 = 32767           # target integer scale, int16 output
+T_I8 = 255              # target integer scale, int8 output
+
+Mode = Literal["i16_div", "i8_div", "i16_clb", "i8_clb", "wide"]
+MODES: tuple[str, ...] = ("i16_div", "i8_div", "i16_clb", "i8_clb")
+# "wide" is the TPU adaptation for long rows: the AIE constraint n*B <= 32767
+# comes from 16-bit vector lanes and degenerates for n >~ 256 (B forced to 1).
+# TPU VPU lanes are 32-bit natively, so normalization runs at full precision
+# (p = s / Z) while stages 1-4 keep the exact integer pipeline. Bit-faithful
+# i16/i8 modes remain for paper-scale rows (n <= 128) and the kernels.
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class HCCSParams:
+    """Per-head calibration constants theta_h = (B_h, S_h, D_max,h).
+
+    Arrays of any broadcastable shape; scalar for global calibration,
+    (num_layers, 1) for per-layer, (num_layers, num_heads) for per-head.
+    Stored as int32 (they are small integers by construction).
+    """
+    B: jax.Array
+    S: jax.Array
+    D: jax.Array
+
+    def astuple(self):
+        return self.B, self.S, self.D
+
+
+def leading_bit(z: jax.Array) -> jax.Array:
+    """floor(log2(z)) for positive int32 z, via arithmetic leading-bit detection.
+
+    The AIE kernel uses a CLB (count-leading-bits) instruction; TPU has no scalar
+    CLB exposed, so we detect the MSB with a branch-free shift cascade — the same
+    cost class (a handful of VPU ops), and bit-exact.
+    """
+    z = z.astype(jnp.int32)
+    k = jnp.zeros_like(z)
+    for shift in (16, 8, 4, 2, 1):
+        gt = (z >> shift) > 0
+        k = k + jnp.where(gt, shift, 0)
+        z = jnp.where(gt, z >> shift, z)
+    return k
+
+
+def hccs_scores(x_i8: jax.Array, B, S, D) -> tuple[jax.Array, jax.Array]:
+    """Stages 1-4 of the paper's pipeline: max-reduce, distance+clamp, affine
+    score, sum-reduce. Returns (s, Z) as int32.
+
+    x_i8: integer logits (int8 values, any int dtype), last axis = row.
+    """
+    x = x_i8.astype(jnp.int32)
+    m = jnp.max(x, axis=-1, keepdims=True)                    # stage 1
+    delta = jnp.minimum(m - x, jnp.asarray(D, jnp.int32))     # stage 2 (uint8 range)
+    s = jnp.asarray(B, jnp.int32) - jnp.asarray(S, jnp.int32) * delta  # stage 3
+    Z = jnp.sum(s, axis=-1, keepdims=True)                    # stage 4 (32-bit acc)
+    return s, Z
+
+
+def normalize(s: jax.Array, Z: jax.Array, mode: Mode = "i16_div",
+              out_shift: int = OUT_SHIFT) -> jax.Array:
+    """Stage 5: reciprocal-based normalization. Bit-exact integer arithmetic.
+
+    Returns int32 values in [0, 32767] (i16 modes) or [0, 255] (i8 modes).
+    """
+    Z = jnp.maximum(Z, 1)  # guard; calibration constraint guarantees Z >= 256
+    if mode == "i16_div":
+        rho = T_I16 // Z                                       # Q0 reciprocal
+        return s * rho
+    if mode == "i16_clb":
+        k = leading_bit(Z)
+        rho = T_I16 >> k                                       # T / 2^floor(log2 Z)
+        return jnp.minimum(s * rho, T_I16)
+    if mode == "i8_div":
+        rho = (T_I8 << INV_SHIFT) // Z                         # eq. (8)
+        return jnp.minimum((s * rho) >> (INV_SHIFT + out_shift), T_I8)
+    if mode == "i8_clb":
+        k = leading_bit(Z)
+        rho = (T_I8 << INV_SHIFT) >> k
+        return jnp.minimum((s * rho) >> (INV_SHIFT + out_shift), T_I8)
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def hccs_int(x_i8: jax.Array, params: HCCSParams, mode: Mode = "i16_div") -> jax.Array:
+    """Full integer HCCS (Algorithm 1). int logits -> scaled int probabilities."""
+    B, S, D = params.astuple()
+    s, Z = hccs_scores(x_i8, B, S, D)
+    return normalize(s, Z, mode)
+
+
+def hccs_probs(x_i8: jax.Array, params: HCCSParams, mode: Mode = "i16_div") -> jax.Array:
+    """Integer HCCS, rescaled to float probabilities in [0, 1] (sum ~ 1)."""
+    p = hccs_int(x_i8, params, mode).astype(jnp.float32)
+    T = T_I16 if mode.startswith("i16") else T_I8
+    return p / T
+
+
+# ---------------------------------------------------------------------------
+# Differentiable path for QAT (paper §III-C / §V-B)
+# ---------------------------------------------------------------------------
+
+def _ste_round(x: jax.Array) -> jax.Array:
+    """round() with a straight-through gradient."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def _ste_floor(x: jax.Array) -> jax.Array:
+    return x + jax.lax.stop_gradient(jnp.floor(x) - x)
+
+
+def quantize_logits(x_fp: jax.Array, scale: jax.Array) -> jax.Array:
+    """Fake-quantize float attention logits to the int8 grid with STE.
+
+    scale: positive float (per-head broadcastable). q = clip(round(x/scale), -128, 127).
+    Returns float-valued integers (so gradients flow through the STE).
+    """
+    q = _ste_round(x_fp / scale)
+    return jnp.clip(q, -128.0, 127.0)
+
+
+def hccs_qat(x_fp: jax.Array, scale: jax.Array, params: HCCSParams,
+             mode: Mode = "i16_div", hard: bool = True,
+             mask: jax.Array | None = None) -> jax.Array:
+    """Differentiable HCCS on float logits: fake-quant -> surrogate -> probs.
+
+    hard=True rounds every integer stage with STE (bit-faithful forward, smooth
+    backward). hard=False is the fully-smooth relaxation (no rounding at all),
+    useful early in QAT.
+
+    mask: optional bool (..., n); masked lanes get score 0 and are excluded
+    from Z (the causal-attention generalization; the paper's encoder rows are
+    unmasked).
+
+    Returns float probabilities (rows sum to ~1).
+    """
+    B = jnp.asarray(params.B, jnp.float32)
+    S = jnp.asarray(params.S, jnp.float32)
+    D = jnp.asarray(params.D, jnp.float32)
+    if mask is not None:
+        x_fp = jnp.where(mask, x_fp, -1e30)
+    q = quantize_logits(x_fp, scale)                     # float ints in [-128,127]
+    m = jnp.max(q, axis=-1, keepdims=True)
+    delta = jnp.minimum(m - q, D)
+    s = B - S * delta                                    # >= 0 by calibration
+    if mask is not None:
+        s = jnp.where(mask, s, 0.0)
+    Z = jnp.sum(s, axis=-1, keepdims=True)
+    Z = jnp.maximum(Z, 1.0)
+    if not hard or mode == "wide":
+        return s / Z
+    T = float(T_I16 if mode.startswith("i16") else T_I8)
+    if mode.endswith("div"):
+        if mode == "i16_div":
+            rho = _ste_floor(T / Z)
+            p = s * rho / T_I16
+        else:
+            rho = _ste_floor((T_I8 * (1 << INV_SHIFT)) / Z)
+            p = _ste_floor(s * rho / (1 << (INV_SHIFT + OUT_SHIFT)))
+            p = jnp.minimum(p, T_I8) / T_I8
+    else:  # clb
+        k = jax.lax.stop_gradient(jnp.floor(jnp.log2(Z)))
+        pow2 = jnp.exp2(k)
+        if mode == "i16_clb":
+            rho = _ste_floor(T_I16 / pow2)
+            p = jnp.minimum(s * rho, T_I16) / T_I16
+        else:
+            rho = _ste_floor(T_I8 * (1 << INV_SHIFT) / pow2)
+            p = _ste_floor(s * rho / (1 << (INV_SHIFT + OUT_SHIFT)))
+            p = jnp.minimum(p, T_I8) / T_I8
+    return p
+
+
+def softmax_fp(x: jax.Array) -> jax.Array:
+    """Reference float softmax (the paper's float32 baseline)."""
+    return jax.nn.softmax(x, axis=-1)
+
+
+def hccs_static_max_qat(x_fp: jax.Array, scale: jax.Array, params: HCCSParams,
+                        mask: jax.Array | None = None) -> jax.Array:
+    """Beyond-paper variant: STATIC-max HCCS (ConSmax-inspired).
+
+    Stage 1 (the row max reduction) is dropped entirely: distances are taken
+    against the int8 ceiling (127) instead of the row max, so the whole row
+    pipeline is a single pass — on TPU this removes the first QK^T sweep of
+    the fused kernel (2x matmul flops -> 1x) and the row-synchronization
+    barrier the paper keeps. The price: rows whose true max sits far below
+    the ceiling see all their distances clamped (uniform attention), so the
+    logit scale must be calibrated to place row maxima near 127. Ordering
+    and non-negativity guarantees are unchanged.
+    """
+    B = jnp.asarray(params.B, jnp.float32)
+    S = jnp.asarray(params.S, jnp.float32)
+    D = jnp.asarray(params.D, jnp.float32)
+    if mask is not None:
+        x_fp = jnp.where(mask, x_fp, -1e30)
+    q = quantize_logits(x_fp, scale)
+    delta = jnp.minimum(127.0 - q, D)      # no max reduction
+    s = B - S * delta
+    if mask is not None:
+        s = jnp.where(mask, s, 0.0)
+    Z = jnp.maximum(jnp.sum(s, axis=-1, keepdims=True), 1.0)
+    return s / Z
+
+
+def hccs_attention_prob_fn(params: HCCSParams, scale: jax.Array,
+                           mode: Mode = "i16_div", hard: bool = True):
+    """Factory: returns prob_fn(logits) -> probs, pluggable into attention.
+
+    The returned function consumes *float* logits (post q·k/sqrt(d)) and applies
+    fake-quant + HCCS with STE, so it is usable both for QAT training and for
+    bit-faithful inference simulation.
+    """
+    def prob_fn(logits: jax.Array) -> jax.Array:
+        return hccs_qat(logits, scale, params, mode=mode, hard=hard)
+    return prob_fn

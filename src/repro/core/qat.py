@@ -1,0 +1,53 @@
+"""Quantization-aware training helpers (paper §V-B).
+
+The paper's recipe: freeze the calibrated HCCS parameters theta_h, then retrain
+the surrounding model weights so the network adapts to the fixed surrogate —
+exactly analogous to holding quantization bounds fixed during QAT.
+
+This module provides the fake-quant primitives and the logit-scale observer used
+to pick the int8 scale per attention head before calibration.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def ste_round(x: jax.Array) -> jax.Array:
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def fake_quant_int8(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """Symmetric int8 fake-quantization with STE. Returns dequantized floats."""
+    q = jnp.clip(ste_round(x / scale), -128.0, 127.0)
+    return q * scale
+
+
+@dataclasses.dataclass
+class AbsMaxObserver:
+    """Running abs-max observer for picking per-head int8 logit scales.
+
+    scale = max|x| / 127 with a small EMA so outlier batches don't dominate.
+    """
+    momentum: float = 0.9
+    amax: np.ndarray | None = None
+
+    def update(self, x: np.ndarray, head_axes: tuple[int, ...]) -> None:
+        """x: logits; head_axes: axes to KEEP (e.g. (0,1) for (L,H,...))."""
+        reduce_axes = tuple(i for i in range(x.ndim) if i not in head_axes)
+        amax = np.abs(np.asarray(x)).max(axis=reduce_axes)
+        if self.amax is None:
+            self.amax = amax
+        else:
+            self.amax = self.momentum * self.amax + (1 - self.momentum) * amax
+
+    def scales(self) -> np.ndarray:
+        assert self.amax is not None, "observer never updated"
+        return np.maximum(self.amax, 1e-6) / 127.0
+
+
+def logit_scale_from_amax(amax) -> jax.Array:
+    return jnp.maximum(jnp.asarray(amax, jnp.float32), 1e-6) / 127.0

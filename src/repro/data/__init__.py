@@ -1,0 +1,2 @@
+from repro.data.synthetic import (ClsTask, ClsTaskConfig, LMStream,
+                                  LMStreamConfig, make_embedding_batch)

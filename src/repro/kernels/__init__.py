@@ -1,0 +1,6 @@
+# Pallas TPU kernels for the paper's compute hot-spot (the softmax surrogate):
+#   hccs.py         — standalone HCCS row softmax (Algorithm 1, 5 stages)
+#   softmax_bf16.py — exp-based reference baseline (paper's comparison target)
+#   attention.py    — fused two-pass HCCS flash-attention (beyond-paper)
+# ops.py holds the jit'd wrappers; ref.py the pure-jnp oracles.
+from repro.kernels.ops import hccs_softmax, softmax_reference, hccs_attention

@@ -1,0 +1,142 @@
+"""Pallas TPU kernel: fused two-pass HCCS flash-attention (beyond-paper).
+
+The paper computes softmax on materialized score tiles. On TPU we fuse the
+HCCS pipeline into a flash-style attention kernel so int8 score tiles never
+touch HBM:
+
+  pass 0 (phase 0): stream KV blocks, compute quantized logits, track the
+                    running row max (the paper's Stage 1 becomes a KV sweep);
+  pass 1 (phase 1): recompute logits per KV block, apply distance/clamp/affine
+                    (Stages 2-3), accumulate Z (Stage 4) and s @ V in f32,
+                    normalize once at the end (Stage 5).
+
+Because HCCS is *linear* in the active window, pass 1 needs no per-block
+rescaling (flash attention's exp(m_old - m_new) correction) — only the single
+final 1/Z scale. The price is recomputing Q.K^T in each pass (2x MXU flops on
+the score matmul); the win is zero HBM traffic for scores and no exp at all.
+
+Grid: (B*H, num_q_blocks, 2, num_kv_blocks) — the TPU grid is sequential in
+trailing dims, so scratch (running max, Z, accumulator) persists across the
+phase/kv loops of one (batch*head, q_block).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_BIG = -(2 ** 30)
+
+
+def _fused_kernel(scale_ref, theta_ref, nk_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, z_scr, acc_scr, *, num_heads: int, block_q: int,
+                  block_k: int, causal: bool, sm_scale: float):
+    bh = pl.program_id(0)
+    qi = pl.program_id(1)
+    ph = pl.program_id(2)
+    ki = pl.program_id(3)
+    h = jax.lax.rem(bh, num_heads)
+
+    @pl.when((ph == 0) & (ki == 0))
+    def _():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_BIG)
+
+    @pl.when((ph == 1) & (ki == 0))
+    def _():
+        z_scr[...] = jnp.zeros_like(z_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                   # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)                   # (bk, d)
+    logits = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    logits = logits * sm_scale                            # (bq, bk) on the MXU
+    scale = scale_ref[h]
+    q_int = jnp.clip(jnp.round(logits / scale), -128., 127.).astype(jnp.int32)
+
+    rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, q_int.shape, 0)
+    cols = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, q_int.shape, 1)
+    mask = cols < nk_ref[0]
+    if causal:
+        mask = mask & (cols <= rows)
+    q_int = jnp.where(mask, q_int, _NEG_BIG)
+
+    @pl.when(ph == 0)
+    def _():  # Stage 1: row-max over the KV sweep
+        bmax = jnp.max(q_int, axis=-1, keepdims=True)     # (bq, 1)
+        m_scr[...] = jnp.maximum(m_scr[...], jnp.broadcast_to(bmax, m_scr.shape))
+
+    @pl.when(ph == 1)
+    def _():  # Stages 2-4 + PV accumulation
+        m = m_scr[:, 0:1]
+        B = theta_ref[h, 0]
+        S = theta_ref[h, 1]
+        D = theta_ref[h, 2]
+        delta = jnp.minimum(m - q_int, D)
+        s = B - S * delta
+        s = jnp.where(mask, s, 0).astype(jnp.float32)     # masked lanes drop out
+        zpart = jnp.sum(s, axis=-1, keepdims=True)
+        z_scr[...] += jnp.broadcast_to(zpart, z_scr.shape)
+        v = v_ref[0, 0].astype(jnp.float32)               # (bk, d)
+        acc_scr[...] += jax.lax.dot_general(
+            s, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when((ph == 1) & (ki == pl.num_programs(3) - 1))
+    def _():  # Stage 5: single final normalization
+        z = jnp.maximum(z_scr[:, 0:1], 1.0)
+        o_ref[0, 0] = (acc_scr[...] / z).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def hccs_mha_fused(q: jax.Array, k: jax.Array, v: jax.Array,
+                   scale: jax.Array, theta: jax.Array, *, causal: bool = True,
+                   block_q: int = 128, block_k: int = 128,
+                   interpret: bool = True) -> jax.Array:
+    """Fused HCCS attention. q: (B,H,Tq,d); k,v: (B,Hkv,Tk,d); GQA supported.
+
+    scale: (H,) f32 per-head int8 logit scales; theta: (H,3) int32 (B,S,D).
+    """
+    b, h, tq, d = q.shape
+    _, hkv, tk, _ = k.shape
+    assert h % hkv == 0
+    sm_scale = 1.0 / float(d) ** 0.5
+    d_pad = max(-(-d // 128) * 128, 128)
+    tq_pad = -(-tq // block_q) * block_q
+    tk_pad = -(-tk // block_k) * block_k
+    qp = jnp.zeros((b, h, tq_pad, d_pad), q.dtype).at[:, :, :tq, :d].set(q)
+    kp = jnp.zeros((b, hkv, tk_pad, d_pad), k.dtype).at[:, :, :tk, :d].set(k)
+    vp = jnp.zeros((b, hkv, tk_pad, d_pad), v.dtype).at[:, :, :tk, :d].set(v)
+    rep = h // hkv
+    nk = jnp.asarray([tk], jnp.int32)
+    grid = (b * h, tq_pad // block_q, 2, tk_pad // block_k)
+
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, num_heads=h, block_q=block_q,
+                          block_k=block_k, causal=causal, sm_scale=sm_scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),        # scale (H,)
+            pl.BlockSpec(memory_space=pltpu.SMEM),        # theta (H,3)
+            pl.BlockSpec(memory_space=pltpu.SMEM),        # nk (1,)
+            pl.BlockSpec((1, 1, block_q, d_pad),
+                         lambda bh, qi, ph, ki, H=h: (bh // H, bh % H, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d_pad),
+                         lambda bh, qi, ph, ki, H=h, R=rep: (bh // H, (bh % H) // R, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d_pad),
+                         lambda bh, qi, ph, ki, H=h, R=rep: (bh // H, (bh % H) // R, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d_pad),
+                               lambda bh, qi, ph, ki, H=h: (bh // H, bh % H, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, tq_pad, d_pad), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.int32),        # running max
+            pltpu.VMEM((block_q, 128), jnp.float32),      # Z accumulator
+            pltpu.VMEM((block_q, d_pad), jnp.float32),    # s @ V accumulator
+        ],
+        interpret=interpret,
+    )(scale.astype(jnp.float32), theta.astype(jnp.int32), nk, qp, kp, vp)
+    return out[:, :, :tq, :d]

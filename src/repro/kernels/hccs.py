@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: standalone HCCS row softmax (the paper's §IV kernel).
+
+Five integer stages per row, exactly Algorithm 1:
+  1. vector max reduction           (int32 lanes after int8 widen)
+  2. unsigned distance + clamp
+  3. affine score s = B - S*delta   (the int8 MAC stage on AIE; VPU mul/sub here)
+  4. 32-bit sum reduction
+  5. reciprocal normalization       (exact Q0 divide, or CLB leading-bit shift)
+
+Tiling: grid over row blocks; each block holds (block_rows, C) int8 logits in
+VMEM plus a (block_rows, 128)-padded theta tile. C is the full row — attention
+rows up to 8k in int8 are < 8 KiB/row, so a (256, 4096) block is 1 MiB of VMEM;
+rows are fully resident, matching the paper's row-per-tile mapping. Rows are
+independent across grid steps (the paper's multi-tile parallelism maps onto the
+Pallas grid + the mesh data axis).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.hccs import INV_SHIFT, OUT_SHIFT, T_I16, T_I8
+
+_NEG_BIG = -(2 ** 30)
+
+
+def _leading_bit(z: jax.Array) -> jax.Array:
+    """Branch-free floor(log2 z) via shift cascade (TPU has no scalar CLB)."""
+    k = jnp.zeros_like(z)
+    for shift in (16, 8, 4, 2, 1):
+        gt = (z >> shift) > 0
+        k = k + jnp.where(gt, shift, 0)
+        z = jnp.where(gt, z >> shift, z)
+    return k
+
+
+def _hccs_kernel(x_ref, theta_ref, n_ref, o_ref, *, mode: str):
+    # Stage 0: widen int8 -> int32 (VPU lanes are 32-bit on TPU)
+    x = x_ref[...].astype(jnp.int32)                      # (R, C)
+    B = theta_ref[:, 0:1]
+    S = theta_ref[:, 1:2]
+    D = theta_ref[:, 2:3]
+    c = x.shape[-1]
+    # column-validity mask for padded rows (n_ref holds the true row length)
+    n = n_ref[0]
+    col = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    valid = col < n
+    x = jnp.where(valid, x, _NEG_BIG)
+    # Stage 1: vector max reduce
+    m = jnp.max(x, axis=-1, keepdims=True)
+    # Stage 2: unsigned distance + clamp (uint8 range by construction)
+    delta = jnp.minimum(m - x, D)
+    # Stage 3: affine score (the int8 MAC on AIE)
+    s = B - S * delta
+    s = jnp.where(valid, s, 0)
+    # Stage 4: 32-bit sum reduce
+    Z = jnp.maximum(jnp.sum(s, axis=-1, keepdims=True), 1)
+    # Stage 5: reciprocal normalization
+    if mode == "i16_div":
+        p = s * (T_I16 // Z)
+    elif mode == "i16_clb":
+        p = jnp.minimum(s * (T_I16 >> _leading_bit(Z)), T_I16)
+    elif mode == "i8_div":
+        rho = (T_I8 << INV_SHIFT) // Z
+        p = jnp.minimum((s * rho) >> (INV_SHIFT + OUT_SHIFT), T_I8)
+    elif mode == "i8_clb":
+        rho = (T_I8 << INV_SHIFT) >> _leading_bit(Z)
+        p = jnp.minimum((s * rho) >> (INV_SHIFT + OUT_SHIFT), T_I8)
+    else:
+        raise ValueError(mode)
+    o_ref[...] = p
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "block_rows", "interpret"))
+def hccs_rows(x_int8: jax.Array, theta: jax.Array, *, mode: str = "i16_div",
+              block_rows: int = 256, interpret: bool = True) -> jax.Array:
+    """HCCS softmax over rows of x_int8: (N, C) int8 -> (N, C) int32.
+
+    theta: (N, 3) int32 per-row (B, S, D); broadcast per-head params to rows
+    before calling. C may be unpadded; it is padded to a 128 multiple here.
+    """
+    n_rows, c = x_int8.shape
+    c_pad = -(-c // 128) * 128
+    r_pad = -(-n_rows // block_rows) * block_rows
+    x = jnp.zeros((r_pad, c_pad), jnp.int8).at[:n_rows, :c].set(x_int8.astype(jnp.int8))
+    th = jnp.zeros((r_pad, 4), jnp.int32).at[:n_rows, :3].set(theta.astype(jnp.int32))
+    # guard padded rows: B=1,S=0,D=0 keeps Z >= 1 without affecting real rows
+    th = th.at[n_rows:, 0].set(1)
+    n_arr = jnp.asarray([c], jnp.int32)
+
+    grid = (r_pad // block_rows,)
+    out = pl.pallas_call(
+        functools.partial(_hccs_kernel, mode=mode),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, c_pad), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 4), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((block_rows, c_pad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r_pad, c_pad), jnp.int32),
+        interpret=interpret,
+    )(x, th, n_arr)
+    return out[:n_rows, :c]

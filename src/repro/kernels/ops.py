@@ -1,0 +1,37 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+interpret defaults to True off-TPU (this container is CPU-only; the kernels are
+validated bit-exactly in interpret mode and lower to Mosaic on real TPUs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hccs import hccs_rows as _hccs_rows
+from repro.kernels.softmax_bf16 import softmax_bf16 as _softmax_bf16
+from repro.kernels.attention import hccs_mha_fused as _hccs_mha_fused
+
+
+def _interp() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def hccs_softmax(x_int8: jax.Array, theta: jax.Array, mode: str = "i16_div",
+                 block_rows: int = 256) -> jax.Array:
+    """Standalone HCCS row softmax: (N, C) int8 logits -> (N, C) int32 probs."""
+    return _hccs_rows(x_int8, theta, mode=mode, block_rows=block_rows,
+                      interpret=_interp())
+
+
+def softmax_reference(x: jax.Array, block_rows: int = 256) -> jax.Array:
+    """Exp-based BF16 softmax baseline (paper's AMD reference analogue)."""
+    return _softmax_bf16(x, block_rows=block_rows, interpret=_interp())
+
+
+def hccs_attention(q, k, v, scale, theta, causal: bool = True,
+                   block_q: int = 128, block_k: int = 128) -> jax.Array:
+    """Fused two-pass HCCS flash-attention (see kernels/attention.py)."""
+    return _hccs_mha_fused(q, k, v, scale, theta, causal=causal,
+                           block_q=block_q, block_k=block_k,
+                           interpret=_interp())

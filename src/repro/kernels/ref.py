@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are asserted against (interpret=True on
+CPU, real Mosaic lowering on TPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hccs import (INV_SHIFT, OUT_SHIFT, T_I16, T_I8, leading_bit)
+
+
+def hccs_rows_ref(x_int: jax.Array, theta: jax.Array, mode: str = "i16_div") -> jax.Array:
+    """Oracle for the standalone HCCS row-softmax kernel.
+
+    x_int: (N, C) integer logits (int8 values in any int dtype)
+    theta: (N, 3) int32 per-row (B, S, D) — caller broadcasts per-head params.
+    Returns (N, C) int32 scaled probabilities.
+    """
+    x = x_int.astype(jnp.int32)
+    B = theta[:, 0:1]
+    S = theta[:, 1:2]
+    D = theta[:, 2:3]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    delta = jnp.minimum(m - x, D)
+    s = B - S * delta
+    Z = jnp.maximum(jnp.sum(s, axis=-1, keepdims=True), 1)
+    if mode == "i16_div":
+        return s * (T_I16 // Z)
+    if mode == "i16_clb":
+        return jnp.minimum(s * (T_I16 >> leading_bit(Z)), T_I16)
+    if mode == "i8_div":
+        rho = (T_I8 << INV_SHIFT) // Z
+        return jnp.minimum((s * rho) >> (INV_SHIFT + OUT_SHIFT), T_I8)
+    if mode == "i8_clb":
+        rho = (T_I8 << INV_SHIFT) >> leading_bit(Z)
+        return jnp.minimum((s * rho) >> (INV_SHIFT + OUT_SHIFT), T_I8)
+    raise ValueError(mode)
+
+
+def softmax_bf16_ref(x: jax.Array) -> jax.Array:
+    """Oracle for the exp-based reference kernel (AMD BF16 baseline analogue)."""
+    x32 = x.astype(jnp.float32)
+    m = jnp.max(x32, axis=-1, keepdims=True)
+    e = jnp.exp(x32 - m)
+    return (e / jnp.sum(e, axis=-1, keepdims=True)).astype(x.dtype)
+
+
+def hccs_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                       scale: jax.Array, theta: jax.Array,
+                       causal: bool = True) -> jax.Array:
+    """Oracle for the fused HCCS attention kernel.
+
+    q: (B, H, Tq, d), k/v: (B, Hkv, Tk, d) float; GQA via head repetition.
+    scale: (H,) float int8 logit scales; theta: (H, 3) int32.
+    Integer score pipeline (stages 1-4 of the paper), float PV + normalization
+    (the MXU consumes float; exactness of the integer normalization modes is
+    covered by the standalone kernel).
+    """
+    b, h, tq, d = q.shape
+    hkv = k.shape[1]
+    rep = h // hkv
+    kf = jnp.repeat(k, rep, axis=1)
+    vf = jnp.repeat(v, rep, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kf).astype(jnp.float32)
+    logits = logits / jnp.sqrt(jnp.float32(d))
+    q_int = jnp.clip(jnp.round(logits / scale[None, :, None, None]), -128, 127)
+    q_int = q_int.astype(jnp.int32)
+    if causal:
+        mask = jnp.tril(jnp.ones((tq, k.shape[2]), bool))
+        q_int = jnp.where(mask[None, None], q_int, jnp.int32(-(2 ** 30)))
+    B = theta[None, :, None, None, 0]
+    S = theta[None, :, None, None, 1]
+    D = theta[None, :, None, None, 2]
+    m = jnp.max(q_int, axis=-1, keepdims=True)
+    delta = jnp.minimum(m - q_int, D)
+    s = B - S * delta
+    if causal:
+        s = jnp.where(mask[None, None], s, 0)
+    sf = s.astype(jnp.float32)
+    Z = jnp.maximum(sf.sum(-1, keepdims=True), 1.0)
+    out = jnp.einsum("bhqk,bhkd->bhqd", sf / Z, vf)
+    return out.astype(q.dtype)

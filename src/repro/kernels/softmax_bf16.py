@@ -1,0 +1,51 @@
+"""Pallas TPU kernel: exp-based BF16 softmax — the paper's baseline.
+
+Mirrors AMD's reference design (max-subtract for stability, explicit exp, sum,
+reciprocal multiply), expressed natively for TPU: bf16 rows in VMEM, exp on the
+VPU transcendental path, f32 accumulation. This is the kernel HCCS is
+benchmarked against (paper Table III).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _softmax_kernel(x_ref, n_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    n = n_ref[0]
+    col = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    valid = col < n
+    x = jnp.where(valid, x, -jnp.inf)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)                       # the expensive transcendental stage
+    e = jnp.where(valid, e, 0.0)
+    z = jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = (e / z).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def softmax_bf16(x: jax.Array, *, block_rows: int = 256,
+                 interpret: bool = True) -> jax.Array:
+    """Row softmax for x: (N, C) bf16 -> (N, C) bf16 via explicit exp."""
+    n_rows, c = x.shape
+    c_pad = -(-c // 128) * 128
+    r_pad = -(-n_rows // block_rows) * block_rows
+    xp = jnp.zeros((r_pad, c_pad), x.dtype).at[:n_rows, :c].set(x)
+    n_arr = jnp.asarray([c], jnp.int32)
+    out = pl.pallas_call(
+        _softmax_kernel,
+        grid=(r_pad // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, c_pad), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((block_rows, c_pad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r_pad, c_pad), x.dtype),
+        interpret=interpret,
+    )(xp, n_arr)
+    return out[:n_rows, :c]

@@ -1,0 +1,70 @@
+"""HLO introspection for hillclimbing: per-collective-op breakdown of a cell.
+
+    PYTHONPATH=src python -m repro.launch.inspect_hlo --arch granite-3-2b \
+        --shape prefill_32k --mesh pod [--layers 2]
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count="
+    f"{os.environ.get('REPRO_DRYRUN_DEVICES', '512')} "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import collections
+import re
+
+from repro.launch.dryrun import build_cell
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import _SHAPE_RE, _shape_bytes
+
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[\w\[\]{},: ]+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(", re.M)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--layers", type=int, default=2,
+                    help="compile with N layers unrolled (per-layer view)")
+    ap.add_argument("--prob", default=None)
+    ap.add_argument("--seq-parallel", default="on", choices=["on", "off"])
+    ap.add_argument("--top", type=int, default=18)
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multipod"))
+    lower_fn, meta = build_cell(
+        args.arch, args.shape, mesh, prob=args.prob,
+        num_layers=args.layers, scan_unroll=max(args.layers, 1),
+        seq_parallel=(args.seq_parallel == "on"))
+    with mesh:
+        lowered, _ = lower_fn()
+        compiled = lowered.compile()
+        txt = compiled.as_text()
+    buckets = collections.defaultdict(lambda: [0, 0])
+    for m in _OP_LINE.finditer(txt):
+        name, shape_str, kind, start = m.groups()
+        if start and "-done" in name:
+            continue
+        nbytes = _shape_bytes(shape_str)
+        key = (kind, shape_str.strip()[:70])
+        buckets[key][0] += nbytes
+        buckets[key][1] += 1
+    rows = sorted(buckets.items(), key=lambda kv: -kv[1][0])
+    total = sum(v[0] for v in buckets.values())
+    print(f"\n== {args.arch} x {args.shape} x {args.mesh} "
+          f"(L={args.layers}, SP={args.seq_parallel}) ==")
+    print(f"total collective bytes (result shapes): {total/2**30:.2f} GiB")
+    for (kind, shape_str), (b, c) in rows[:args.top]:
+        print(f"  {b/2**30:8.3f} GiB  x{c:<3d} {kind:20s} {shape_str}")
+    ca = compiled.cost_analysis() or {}
+    print(f"flops {ca.get('flops', 0):.3e}  bytes {ca.get('bytes accessed', 0):.3e}")
+    mem = compiled.memory_analysis()
+    print(f"temp {mem.temp_size_in_bytes/2**30:.2f} GiB")
+
+
+if __name__ == "__main__":
+    main()

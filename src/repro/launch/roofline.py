@@ -1,0 +1,115 @@
+"""Roofline term extraction from compiled dry-run artifacts.
+
+Hardware model (TPU v5e-class, per chip):
+    peak bf16 compute : 197 TFLOP/s
+    HBM bandwidth     : 819 GB/s
+    ICI link bandwidth: ~50 GB/s per link
+
+Terms per (arch, shape, mesh):
+    compute_s    = HLO_FLOPs / (chips * peak)
+    memory_s     = HLO_bytes / (chips * hbm_bw)
+    collective_s = collective_bytes / (chips * link_bw)
+
+HLO_FLOPs / bytes come from compiled.cost_analysis(); collective bytes are
+NOT in cost_analysis, so we parse the (post-SPMD) HLO text and sum the result
+shapes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops.
+"""
+from __future__ import annotations
+
+import re
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g. "bf16[256,4096,512]{2,1,0}" or "f32[]"
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+# "%x.y = <shape or (tuple)> <opname>(" — capture everything up to the op name
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\]{},: ]+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-op-kind byte totals (result-shape bytes) + counts, from HLO text.
+
+    '-start'/'-done' async pairs are counted once (on start).
+    """
+    out = {k: {"bytes": 0, "count": 0} for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        line = m.group(0)
+        if "-done(" in line:
+            continue
+        out[kind]["bytes"] += _shape_bytes(shape_str)
+        out[kind]["count"] += 1
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float) -> dict:
+    """All inputs are PER-DEVICE quantities (XLA compiles one partition)."""
+    compute_s = flops_per_dev / PEAK_FLOPS
+    memory_s = bytes_per_dev / HBM_BW
+    collective_s = coll_bytes_per_dev / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dom = max(terms, key=terms.get)
+    bound_s = terms[dom]
+    terms.update(dominant=dom.replace("_s", ""),
+                 step_s_lower_bound=bound_s,
+                 roofline_fraction=(compute_s / bound_s if bound_s > 0 else 0.0))
+    return terms
+
+
+def model_flops(cfg, n_params: float, n_active: float, tokens: int,
+                kind: str) -> float:
+    """6*N*D for training, 2*N*D forward-only (prefill/decode), active params
+    for MoE."""
+    n = n_active if cfg.is_moe else n_params
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def count_params(weights_shapes) -> float:
+    import jax
+    return float(sum(l.size for l in jax.tree.leaves(weights_shapes)))
+
+
+def count_active_params(cfg, weights_shapes) -> float:
+    """MoE: experts contribute k/E of their params per token."""
+    import jax
+    total = 0.0
+    flat = jax.tree_util.tree_flatten_with_path(weights_shapes)[0]
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        if "experts" in name and cfg.is_moe:
+            total += leaf.size * cfg.experts_per_token / cfg.num_experts
+        else:
+            total += leaf.size
+    return float(total)

@@ -1,0 +1,1 @@
+from repro.models import model, attention, blocks, layers, moe, ssm

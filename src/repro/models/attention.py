@@ -1,0 +1,380 @@
+"""GQA attention with a pluggable probability function — this is where HCCS
+plugs into every architecture.
+
+Two XLA implementations with identical semantics (plus the Pallas fused kernel
+in kernels/attention.py for TPU runtime):
+  dense     — materialize (B,H,Tq,Tk) scores; short sequences & decode rows.
+  blockwise — two-pass lax.scan over KV blocks, O(Tq * block_k) live memory;
+              the XLA analogue of the fused kernel, used for long sequences.
+
+HCCS semantics are the differentiable QAT form (fake-quant + STE integer
+pipeline) so the same code trains and serves. Masked lanes score 0 and are
+excluded from Z (the causal generalization of the paper's unmasked rows).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hccs import HCCSParams, hccs_qat
+from repro.models.layers import apply_mrope, apply_rope
+from repro.parallel.sharding import constrain
+
+NEG_INF = -1e30
+
+# eager-mode capture hook for offline calibration: inside
+# `capture_attention_logits()` every dense-attention call appends its float
+# logits (B, H, Tq, Tk). Run UNJITTED (the calibration pass is tiny).
+_CAPTURE: list | None = None
+
+
+class capture_attention_logits:
+    def __enter__(self):
+        global _CAPTURE
+        _CAPTURE = []
+        return _CAPTURE
+
+    def __exit__(self, *a):
+        global _CAPTURE
+        _CAPTURE = None
+        return False
+
+
+def init_attention(rng, cfg):
+    d, h, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(rng, 4)
+    dt = jnp.dtype(cfg.dtype)
+    std = d ** -0.5
+    return {
+        "wq": jax.random.normal(ks[0], (d, h * hd), dt) * std,
+        "wk": jax.random.normal(ks[1], (d, hkv * hd), dt) * std,
+        "wv": jax.random.normal(ks[2], (d, hkv * hd), dt) * std,
+        "wo": jax.random.normal(ks[3], (h * hd, d), dt) * (h * hd) ** -0.5,
+    }
+
+
+def init_hccs_head_params(cfg, n_ref: int = 128) -> dict:
+    """Per-head HCCS (B, S, D) + int8 logit scale for one layer: shapes (H,).
+
+    Initialized at the constraint-feasible default; replaced by offline
+    calibration (core/calibrate.py). Stacked to (L, H) by the model init.
+    """
+    from repro.core.constraints import default_params
+    B, S, D = default_params(n_ref)
+    h = max(cfg.num_heads, 1)
+    return {
+        "B": jnp.full((h,), B, jnp.int32),
+        "S": jnp.full((h,), S, jnp.int32),
+        "D": jnp.full((h,), D, jnp.int32),
+        "scale": jnp.full((h,), 0.1, jnp.float32),
+    }
+
+
+def _ste(v_hard, v_soft):
+    return v_soft + jax.lax.stop_gradient(v_hard - v_soft)
+
+
+def _block_valid(cfg, q_pos, k_pos, k_len=None):
+    """Validity mask (B, 1, Tq, Tk_blk) from positions, computed lazily.
+
+    q_pos: (B, Tq); k_pos: (Tk_blk,) global key positions; k_len: (B,) or None.
+    """
+    qp = q_pos[:, None, :, None]
+    kp = k_pos[None, None, None, :]
+    valid = jnp.ones(qp.shape[:3] + (k_pos.shape[0],), bool)
+    if cfg.causal:
+        valid &= kp <= qp
+    if cfg.window:
+        valid &= kp > qp - cfg.window
+    if k_len is not None:
+        valid &= kp < k_len[:, None, None, None]
+    return valid
+
+
+def _dense_attention(q, k, v, valid, cfg, hccs):
+    """q: (B,H,Tq,hd), k/v: (B,Hkv,Tk,hd), valid: (B,1,Tq,Tk)."""
+    b, h, tq, hd = q.shape
+    hkv, tk = k.shape[1], k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, tq, hd)
+    logits = jnp.einsum("bkgqd,bktd->bkgqt", qg, k).astype(jnp.float32)
+    logits = (logits / jnp.sqrt(jnp.float32(hd))).reshape(b, h, tq, tk)
+    if _CAPTURE is not None:
+        _CAPTURE.append(logits)
+    if cfg.attention_prob == "hccs" and hccs is not None:
+        params = HCCSParams(B=hccs["B"][:, None, None], S=hccs["S"][:, None, None],
+                            D=hccs["D"][:, None, None])
+        p = hccs_qat(logits, hccs["scale"][:, None, None], params,
+                     mode=cfg.hccs_mode, hard=True, mask=valid)
+    else:
+        p = jax.nn.softmax(jnp.where(valid, logits, NEG_INF), axis=-1)
+    pg = p.reshape(b, hkv, g, tq, tk).astype(v.dtype)
+    out = jnp.einsum("bkgqt,bktd->bkgqd", pg, v)
+    return out.reshape(b, h, tq, hd)
+
+
+def _blockwise_attention(q, k, v, q_pos, k_len, cfg, hccs):
+    """Two-pass KV-block scan; per-block masks computed from positions.
+
+    HCCS: pass 1 = row max of quantized logits (the paper's Stage 1 over a KV
+    sweep); pass 2 = distance/clamp/affine (Stages 2-3), Z (Stage 4) and s@V,
+    with a single final normalization (Stage 5) — no per-block rescale, since
+    HCCS is linear in the active window. Softmax: classic online rescale.
+    """
+    b, h, tq, hd = q.shape
+    hkv, tk = k.shape[1], k.shape[2]
+    g = h // hkv
+    bk = min(cfg.block_k, tk)
+    nblk = -(-tk // bk)
+    tk_pad = nblk * bk
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, tk_pad - tk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, tk_pad - tk), (0, 0)))
+    kb = jnp.moveaxis(kp.reshape(b, hkv, nblk, bk, hd), 2, 0)
+    vb = jnp.moveaxis(vp.reshape(b, hkv, nblk, bk, hd), 2, 0)
+    starts = jnp.arange(nblk) * bk
+    if k_len is None:
+        k_len = jnp.full((b,), tk, jnp.int32)
+    qg = q.reshape(b, hkv, g, tq, hd)
+    sm = 1.0 / jnp.sqrt(jnp.float32(hd))
+
+    def logits_of(kblk):
+        lg = jnp.einsum("bkgqd,bktd->bkgqt", qg, kblk).astype(jnp.float32) * sm
+        return lg.reshape(b, h, tq, bk)
+
+    if cfg.attention_prob == "hccs" and hccs is not None:
+        scale = hccs["scale"][:, None, None]
+        B = hccs["B"][:, None, None].astype(jnp.float32)
+        S = hccs["S"][:, None, None].astype(jnp.float32)
+        D = hccs["D"][:, None, None].astype(jnp.float32)
+
+        def qint_of(kblk, start):
+            k_pos = start + jnp.arange(bk)
+            vmask = _block_valid(cfg, q_pos, k_pos, k_len)
+            lg = logits_of(kblk) / scale
+            qi = _ste(jnp.clip(jnp.round(lg), -128.0, 127.0), lg)
+            qi = jnp.where(vmask, qi, -1e9)
+            return qi, vmask
+
+        def max_step(m, xs):
+            kblk, start = xs
+            qi, _ = qint_of(kblk, start)
+            return jnp.maximum(m, qi.max(-1)), None
+
+        m0 = jnp.full((b, h, tq), -1e9, jnp.float32)
+        m, _ = jax.lax.scan(max_step, m0, (kb, starts))
+        m = jax.lax.stop_gradient(m)[..., None]
+
+        def acc_step(carry, xs):
+            acc, zsum = carry
+            kblk, vblk, start = xs
+            qi, vmask = qint_of(kblk, start)
+            delta = jnp.minimum(m - qi, D)
+            s = jnp.where(vmask, B - S * delta, 0.0)
+            zsum = zsum + s.sum(-1)
+            sg = s.reshape(b, hkv, g, tq, bk).astype(vblk.dtype)
+            acc = acc + jnp.einsum("bkgqt,bktd->bkgqd", sg, vblk).reshape(
+                b, h, tq, hd)
+            return (acc, zsum), None
+
+        acc0 = jnp.zeros((b, h, tq, hd), v.dtype)
+        z0 = jnp.zeros((b, h, tq), jnp.float32)
+        (acc, zsum), _ = jax.lax.scan(acc_step, (acc0, z0), (kb, vb, starts))
+        z = jnp.maximum(zsum, 1.0)[..., None]
+        # mode-aware final scale: HCCS linearity lets the integer rho
+        # truncation be applied to the accumulated numerator post-hoc
+        # (sum_i s_i*rho*v_i = rho * sum_i s_i*v_i), keeping blockwise
+        # bit-consistent with the dense path for the i16 modes.
+        mode = cfg.hccs_mode
+        if mode == "i16_div":
+            inv = jnp.floor(32767.0 / z) / 32767.0
+        elif mode == "i16_clb":
+            inv = jnp.exp2(-jnp.floor(jnp.log2(z)))
+            inv = jnp.floor(32767.0 * inv) / 32767.0
+        else:  # "wide" (default for long rows) and i8 approximations
+            inv = 1.0 / z
+        return (acc.astype(jnp.float32) * inv).astype(q.dtype)
+
+    def step(carry, xs):
+        acc, zsum, m = carry
+        kblk, vblk, start = xs
+        k_pos = start + jnp.arange(bk)
+        vmask = _block_valid(cfg, q_pos, k_pos, k_len)
+        lg = jnp.where(vmask, logits_of(kblk), NEG_INF)
+        m_new = jnp.maximum(m, lg.max(-1))
+        corr = jnp.exp(m - m_new)
+        e = jnp.exp(lg - m_new[..., None])
+        zsum = zsum * corr + e.sum(-1)
+        eg = e.reshape(b, hkv, g, tq, bk).astype(vblk.dtype)
+        pv = jnp.einsum("bkgqt,bktd->bkgqd", eg, vblk).reshape(b, h, tq, hd)
+        acc = acc * corr[..., None].astype(acc.dtype) + pv
+        return (acc, zsum, m_new), None
+
+    acc0 = jnp.zeros((b, h, tq, hd), v.dtype)
+    z0 = jnp.zeros((b, h, tq), jnp.float32)
+    m0 = jnp.full((b, h, tq), NEG_INF, jnp.float32)
+    (acc, zsum, _), _ = jax.lax.scan(step, (acc0, z0, m0), (kb, vb, starts))
+    z = jnp.maximum(zsum, 1e-20)[..., None]
+    return (acc.astype(jnp.float32) / z).astype(q.dtype)
+
+
+def _merge_segments(parts, cfg, hccs):
+    """Combine per-segment attention partials computed against a SHARED max.
+
+    parts: list of (s_sum (B,H,Tq), acc (B,H,Tq,hd)) — for HCCS these are
+    sums of clipped-linear scores (linear => additive); for softmax they are
+    exp-sums against the shared max. out = sum(acc) / sum(Z).
+    """
+    zsum = sum(p[0] for p in parts)
+    acc = sum(p[1] for p in parts)
+    z = jnp.maximum(zsum, 1.0 if (cfg.attention_prob == "hccs" and hccs)
+                    else 1e-20)[..., None]
+    return (acc.astype(jnp.float32) / z)
+
+
+def _segment_partials(q, k, v, valid, m, cfg, hccs):
+    """One segment's (Z_partial, acc_partial) against shared max m (B,H,Tq,1).
+
+    HCCS: s = B - S*min(m - qint, D) on valid lanes (clipped-linear — partial
+    sums are exact). Softmax: e = exp(logits - m).
+    """
+    b, h, tq, hd = q.shape
+    hkv, tk = k.shape[1], k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, tq, hd)
+    logits = jnp.einsum("bkgqd,bktd->bkgqt", qg, k).astype(jnp.float32)
+    logits = (logits / jnp.sqrt(jnp.float32(hd))).reshape(b, h, tq, tk)
+    if cfg.attention_prob == "hccs" and hccs is not None:
+        scale = hccs["scale"][:, None, None]
+        B = hccs["B"][:, None, None].astype(jnp.float32)
+        S = hccs["S"][:, None, None].astype(jnp.float32)
+        D = hccs["D"][:, None, None].astype(jnp.float32)
+        qi = _ste(jnp.clip(jnp.round(logits / scale), -128., 127.),
+                  logits / scale)
+        qi = jnp.where(valid, qi, -1e9)
+        s = jnp.where(valid, B - S * jnp.minimum(m - qi, D), 0.0)
+    else:
+        s = jnp.where(valid, jnp.exp(logits - m), 0.0)
+    sg = s.reshape(b, hkv, g, tq, tk).astype(v.dtype)
+    acc = jnp.einsum("bkgqt,bktd->bkgqd", sg, v).reshape(b, h, tq, hd)
+    return s.sum(-1), acc
+
+
+def _segment_max(q, k, valid, cfg, hccs):
+    """Per-row max of (quantized) logits over one segment; (B,H,Tq)."""
+    b, h, tq, hd = q.shape
+    hkv, tk = k.shape[1], k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, tq, hd)
+    logits = jnp.einsum("bkgqd,bktd->bkgqt", qg, k).astype(jnp.float32)
+    logits = (logits / jnp.sqrt(jnp.float32(hd))).reshape(b, h, tq, tk)
+    if cfg.attention_prob == "hccs" and hccs is not None:
+        logits = jnp.round(jnp.clip(logits / hccs["scale"][:, None, None],
+                                    -128., 127.))
+    return jnp.where(valid, logits, -1e9).max(-1)
+
+
+def apply_attention(p, x, cfg, hccs=None, positions=None, cache=None,
+                    mrope_positions=None):
+    """x: (B, T, D). Returns (out, new_cache).
+
+    cache: None (self-attention over x) or dict(k, v, length) for decode —
+    k/v: (B, Hkv, Tmax, hd); new k/v are written at offset `length`.
+    With cfg.hot_buffer > 0 the cache also carries (hot_k, hot_v, hot_len):
+    decode appends there (replicated, static-shard-safe) and attention merges
+    the main + hot segments against a shared max.
+    """
+    b, t, d = x.shape
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    # constrain the flat projections (h*hd is always divisible by the TP
+    # degree even when the head count is not, e.g. hymba's 25 heads);
+    # 'attn_seq' is None under the TP training profile and carries the
+    # sequence shard under the serve_sp inference profile
+    qf = constrain(x @ p["wq"], "batch", "attn_seq", "model")
+    kf = constrain(x @ p["wk"], "batch", "attn_seq", "kv_model")
+    vf = constrain(x @ p["wv"], "batch", "attn_seq", "kv_model")
+    q = qf.reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    k = kf.reshape(b, t, hkv, hd).transpose(0, 2, 1, 3)
+    v = vf.reshape(b, t, hkv, hd).transpose(0, 2, 1, 3)
+
+    if positions is None:
+        base = cache["length"] if cache is not None else 0
+        positions = base + jnp.arange(t)[None, :]
+        positions = jnp.broadcast_to(positions, (b, t))
+    if cfg.rope == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope == "mrope":
+        p3 = mrope_positions
+        if p3 is None:
+            p3 = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        q = apply_mrope(q, p3, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, p3, cfg.rope_theta, cfg.mrope_sections)
+
+    # ---- hot-buffer decode: append to the small replicated buffer and
+    # merge main + hot segments against a shared max (see §Perf D) ----
+    if cache is not None and "hot_k" in cache and t <= 8:
+        hot_len = cache["hot_len"]
+        hk = jax.lax.dynamic_update_slice(
+            cache["hot_k"], k.astype(cache["hot_k"].dtype),
+            (0, 0, hot_len, 0))
+        hv = jax.lax.dynamic_update_slice(
+            cache["hot_v"], v.astype(cache["hot_v"].dtype),
+            (0, 0, hot_len, 0))
+        new_cache = dict(cache, hot_k=hk, hot_v=hv, hot_len=hot_len + t,
+                         length=cache["length"] + t)
+        main_len_s = cache["length"] - hot_len          # prompt tokens
+        mk, mv = cache["k"], cache["v"]
+        valid_main = _block_valid(cfg, positions, jnp.arange(mk.shape[2]),
+                                  jnp.full((b,), main_len_s, jnp.int32))
+        hot_pos = main_len_s + jnp.arange(hk.shape[2])
+        valid_hot = _block_valid(cfg, positions, hot_pos,
+                                 jnp.full((b,), cache["length"] + t, jnp.int32))
+        m = jnp.maximum(_segment_max(q, mk, valid_main, cfg, hccs),
+                        _segment_max(q, hk, valid_hot, cfg, hccs))
+        m = jax.lax.stop_gradient(m)[..., None]
+        parts = [_segment_partials(q, mk, mv, valid_main, m, cfg, hccs),
+                 _segment_partials(q, hk, hv, valid_hot, m, cfg, hccs)]
+        out = _merge_segments(parts, cfg, hccs).astype(q.dtype)
+        out = out.transpose(0, 2, 1, 3).reshape(b, t, h * hd)
+        out = out @ p["wo"]
+        return constrain(out, "batch", "seq_act", "embed"), new_cache
+
+    new_cache = None
+    k_len = None
+    if cache is not None:
+        if cache["k"].shape[2] == t:
+            # prompt fills the whole cache (prefill at max_len): a plain
+            # overwrite avoids the dynamic-update-slice on the sharded seq
+            # dim, which XLA can only partition via a full gather
+            kc = k.astype(cache["k"].dtype)
+            vc = v.astype(cache["v"].dtype)
+        else:
+            kc = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype),
+                (0, 0, cache["length"], 0))
+            vc = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype),
+                (0, 0, cache["length"], 0))
+        # dict(cache, ...) preserves extra entries (hot buffers during the
+        # prefill pass of a hot-buffer cache)
+        new_cache = dict(cache, k=kc, v=vc, length=cache["length"] + t)
+        k, v = kc, vc
+        k_len = jnp.full((b,), cache["length"] + t, jnp.int32)
+
+    tk = k.shape[2]
+    use_blockwise = (cfg.attention_impl == "blockwise" or
+                     (cfg.attention_impl == "auto" and t > 1 and
+                      tk >= cfg.blockwise_threshold))
+    if use_blockwise:
+        # single explicit gather point: both HCCS passes (max + accumulate)
+        # read the same seq-replicated K/V instead of re-gathering per pass
+        k = constrain(k, "batch", "kv_model", None, None)
+        v = constrain(v, "batch", "kv_model", None, None)
+        out = _blockwise_attention(q, k, v, positions, k_len, cfg, hccs)
+    else:
+        valid = _block_valid(cfg, positions, jnp.arange(tk), k_len)
+        out = _dense_attention(q, k, v, valid, cfg, hccs)
+
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, h * hd)
+    out = out @ p["wo"]
+    return constrain(out, "batch", "seq_act", "embed"), new_cache

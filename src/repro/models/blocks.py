@@ -1,0 +1,117 @@
+"""Transformer blocks: dense, MoE, Mamba2(SSD), and Hymba-style hybrid.
+
+All blocks share a uniform signature so the model can lax.scan over stacked
+layer params:
+
+    apply_block(p, x, cfg, hccs, cache, positions, mrope_positions)
+        -> (x, new_cache, aux)
+
+cache is a per-layer dict (may contain 'k','v' for attention and/or 'ssm'
+state); `length` is carried by the model, not per layer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import apply_mlp, apply_norm, init_mlp, init_norm
+
+
+def init_block(rng, cfg):
+    ks = jax.random.split(rng, 4)
+    p: dict = {"norm1": init_norm(cfg)}
+    fam = cfg.family
+    if fam in ("dense", "moe", "audio", "vlm", "encoder", "hybrid"):
+        p["attn"] = attn.init_attention(ks[0], cfg)
+    if fam == "hybrid":
+        p["ssm"] = ssm_mod.init_ssm(ks[1], cfg)
+    if fam == "ssm":
+        p["ssm"] = ssm_mod.init_ssm(ks[1], cfg)
+    if fam == "moe":
+        p["norm2"] = init_norm(cfg)
+        p["moe"] = moe_mod.init_moe(ks[2], cfg)
+    elif fam != "ssm" and cfg.d_ff > 0:
+        p["norm2"] = init_norm(cfg)
+        p["mlp"] = init_mlp(ks[3], cfg)
+    return p
+
+
+def init_layer_cache(cfg, batch, max_len, cache_dtype=jnp.bfloat16):
+    """Zero cache for ONE layer (the model stacks L of these)."""
+    c: dict = {}
+    if cfg.family in ("dense", "moe", "audio", "vlm", "hybrid"):
+        hkv, hd = cfg.num_kv_heads, cfg.head_dim
+        c["k"] = jnp.zeros((batch, hkv, max_len, hd), cache_dtype)
+        c["v"] = jnp.zeros((batch, hkv, max_len, hd), cache_dtype)
+        if cfg.hot_buffer > 0:
+            c["hot_k"] = jnp.zeros((batch, hkv, cfg.hot_buffer, hd),
+                                   cache_dtype)
+            c["hot_v"] = jnp.zeros((batch, hkv, cfg.hot_buffer, hd),
+                                   cache_dtype)
+    if cfg.family in ("ssm", "hybrid"):
+        c["ssm"] = jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state,
+                              cfg.ssm_head_dim), jnp.float32)
+    return c
+
+
+def apply_block(p, x, cfg, hccs=None, cache=None, length=None, positions=None,
+                mrope_positions=None, decode: bool = False):
+    """Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: dict = {}
+    fam = cfg.family
+    h = apply_norm(p["norm1"], x, cfg)
+
+    if fam == "ssm":
+        if decode:
+            y, st = ssm_mod.apply_ssd_step(p["ssm"], h, cfg, cache["ssm"])
+        else:
+            st0 = cache["ssm"] if cache is not None else None
+            y, st = ssm_mod.apply_ssd(p["ssm"], h, cfg, st0)
+        if cache is not None:
+            new_cache["ssm"] = st
+        x = x + y
+    elif fam == "hybrid":
+        ac = None
+        if cache is not None:
+            ac = {k_: v_ for k_, v_ in cache.items() if k_ != "ssm"}
+            ac["length"] = length
+        ya, nc = attn.apply_attention(p["attn"], h, cfg, hccs, positions, ac,
+                                      mrope_positions)
+        if decode:
+            ys, st = ssm_mod.apply_ssd_step(p["ssm"], h, cfg, cache["ssm"])
+        else:
+            st0 = cache["ssm"] if cache is not None else None
+            ys, st = ssm_mod.apply_ssd(p["ssm"], h, cfg, st0)
+        if cache is not None:
+            new_cache.update({k_: v_ for k_, v_ in nc.items()
+                              if k_ != "length"})
+            new_cache["ssm"] = st
+        x = x + 0.5 * (ya + ys)      # mean-fused parallel heads (Hymba-style)
+    else:
+        ac = None
+        if cache is not None:
+            ac = dict(cache)
+            ac["length"] = length
+        y, nc = attn.apply_attention(p["attn"], h, cfg, hccs, positions, ac,
+                                     mrope_positions)
+        if cache is not None:
+            new_cache.update({k_: v_ for k_, v_ in nc.items()
+                              if k_ != "length"})
+        x = x + y
+
+    if "moe" in p:
+        y, aux = moe_mod.apply_moe(p["moe"], apply_norm(p["norm2"], x, cfg), cfg)
+        x = x + y
+    elif "mlp" in p:
+        x = x + apply_mlp(p["mlp"], apply_norm(p["norm2"], x, cfg), cfg)
+    # Megatron-style sequence parallelism on the residual stream: between
+    # blocks the carry is sharded over ("batch", seq->model); with remat=full
+    # this shrinks the saved per-layer carry by the TP degree. 'seq_act' maps
+    # to None unless the launcher enables it (decode steps keep t=1).
+    from repro.parallel.sharding import constrain as _c
+    x = _c(x, "batch", "seq_act", None)
+    return x, new_cache, aux

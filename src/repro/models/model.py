@@ -1,0 +1,207 @@
+"""The LM: embedding -> lax.scan over stacked blocks -> norm -> logits.
+
+scan-over-layers keeps HLO size O(1) in depth (94-layer MoE compiles in the
+same HLO footprint as a 2-layer toy) and is the natural remat unit.
+
+Params layout:
+    {"weights": {"embed": ..., "pos_embed"?: ..., "layers": <stacked block
+     pytree>, "final_norm": ..., "lm_head"?: ..., "cls_head"?: ...},
+     "hccs": {"B","S","D","scale" : (L, H)} | {} }
+
+`hccs` holds the paper's frozen per-head calibration constants — they are
+deliberately OUTSIDE "weights" so the optimizer never touches them (the paper
+freezes theta during QAT) while still being checkpointed and shardable.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks
+from repro.models.attention import init_hccs_head_params
+from repro.models.layers import (apply_norm, embed_tokens, init_embed,
+                                 init_norm, lm_logits)
+from repro.parallel.sharding import constrain
+
+
+def init_params(rng, cfg, hccs_n_ref: int = 128):
+    kE, kL, kH, kC = jax.random.split(rng, 4)
+    layer_keys = jax.random.split(kL, cfg.num_layers)
+    layers = jax.vmap(lambda k: blocks.init_block(k, cfg))(layer_keys)
+    weights = {"embed": init_embed(kE, cfg), "layers": layers,
+               "final_norm": init_norm(cfg)}
+    if cfg.rope == "learned":
+        weights["pos_embed"] = (
+            jax.random.normal(kH, (cfg.max_position, cfg.d_model),
+                              jnp.dtype(cfg.dtype)) * 0.02)
+    if not cfg.tie_embeddings:
+        weights["lm_head"] = (
+            jax.random.normal(kH, (cfg.d_model, cfg.padded_vocab),
+                              jnp.dtype(cfg.dtype)) * cfg.d_model ** -0.5)
+    if cfg.num_classes:
+        weights["cls_head"] = (
+            jax.random.normal(kC, (cfg.d_model, cfg.num_classes),
+                              jnp.dtype(cfg.dtype)) * cfg.d_model ** -0.5)
+
+    hccs = {}
+    if cfg.attention_prob == "hccs" and cfg.num_heads > 0:
+        one = init_hccs_head_params(cfg, n_ref=hccs_n_ref)
+        hccs = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape), one)
+        hccs = jax.tree.map(jnp.asarray, hccs)
+    return {"weights": weights, "hccs": hccs}
+
+
+def _block_caller(cfg, decode):
+    def call(lp, x, hc, cache, length, positions, mrope_positions):
+        return blocks.apply_block(lp, x, cfg, hc, cache, length, positions,
+                                  mrope_positions, decode=decode)
+
+    if cfg.remat == "full":
+        return jax.checkpoint(call)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            call, policy=jax.checkpoint_policies.checkpoint_dots)
+    return call
+
+
+def forward(weights, hccs, batch, cfg, cache=None, decode: bool = False):
+    """batch: {"tokens": (B,T)} or {"embeddings": (B,T,D)}, optional
+    "positions" (B,T), "mrope_positions" (3,B,T).
+
+    Returns (hidden/logits, new_cache, aux). cache is the full model cache:
+        {"layers": <stacked per-layer cache>, "length": int32 scalar}
+    """
+    if cfg.input_mode == "embeddings" and "embeddings" in batch:
+        x = batch["embeddings"].astype(jnp.dtype(cfg.dtype))
+    else:
+        x = embed_tokens(weights["embed"], batch["tokens"], cfg)
+    b, t = x.shape[:2]
+    length = cache["length"] if cache is not None else jnp.zeros((), jnp.int32)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = length + jnp.arange(t)[None, :]
+        positions = jnp.broadcast_to(positions, (b, t))
+    if cfg.rope == "learned":
+        x = x + jnp.take(weights["pos_embed"], positions, axis=0)
+    mrope_positions = batch.get("mrope_positions")
+    x = constrain(x, "batch", "seq_act", "embed")
+    # hot-buffer decode: tokens past prompt_len live in the replicated hot
+    # buffer; per-layer attention needs the split point
+    hot_len = None
+    if cache is not None and cfg.hot_buffer > 0:
+        hot_len = length - cache.get("prompt_len", jnp.zeros((), jnp.int32))
+
+    hccs = jax.tree.map(jax.lax.stop_gradient, hccs)  # theta frozen (paper QAT)
+    call = _block_caller(cfg, decode)
+
+    hccs_xs = hccs if hccs else None
+    cache_xs = cache["layers"] if cache is not None else None
+    xs = (weights["layers"], hccs_xs, cache_xs)
+    # lax.scan requires every xs leaf to have leading dim L; None legs are
+    # replaced by dummy per-layer zeros.
+    L = cfg.num_layers
+    if hccs_xs is None:
+        xs = (xs[0], jnp.zeros((L,)), xs[2])
+    if cache_xs is None:
+        xs = (xs[0], xs[1], jnp.zeros((L,)))
+
+    def scan_body(carry, xs_):
+        lp, hc, lc = xs_
+        hc = hc if isinstance(hc, dict) else None
+        lc = lc if isinstance(lc, dict) else None
+        if lc is not None and hot_len is not None:
+            lc = dict(lc, hot_len=hot_len)
+        x, aux = carry
+        x, new_lc, aux_l = call(lp, x, hc, lc, length, positions,
+                                mrope_positions)
+        if new_lc and "hot_len" in new_lc:
+            new_lc = {k_: v_ for k_, v_ in new_lc.items() if k_ != "hot_len"}
+        return (x, aux + aux_l), (new_lc if new_lc else jnp.zeros(()))
+
+    (x, aux), new_layer_caches = jax.lax.scan(
+        scan_body, (x, jnp.zeros((), jnp.float32)), xs,
+        unroll=min(cfg.scan_unroll, L))
+
+    x = apply_norm(weights["final_norm"], x, cfg)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"layers": new_layer_caches, "length": length + t}
+        if "prompt_len" in cache:
+            new_cache["prompt_len"] = cache["prompt_len"]
+    return x, new_cache, aux
+
+
+def logits_from_hidden(weights, x, cfg):
+    return lm_logits(weights["embed"], weights, x, cfg)
+
+
+def lm_loss(weights, hccs, batch, cfg):
+    """Next-token cross-entropy. batch needs "labels" (B, T) with -100 = pad.
+
+    The gold logit is gathered with a one-hot einsum (not take_along_axis):
+    under vocab-sharded logits the einsum reduces over the sharded axis with
+    a cheap partial-sum + all-reduce instead of all-gathering the full
+    (B, T, V) logits tensor.
+    """
+    x, _, aux = forward(weights, hccs, batch, cfg)
+    logits = logits_from_hidden(weights, x, cfg)
+    labels = batch["labels"]
+    mask = labels >= 0
+    labels_c = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    onehot = jax.nn.one_hot(labels_c, logits.shape[-1], dtype=logits.dtype)
+    onehot = constrain(onehot, "batch", "attn_seq", "vocab")
+    gold = jnp.einsum("btv,btv->bt", logits, onehot).astype(jnp.float32)
+    nll = (logz - gold) * mask
+    loss = nll.sum() / jnp.maximum(mask.sum(), 1)
+    return loss, {"lm_loss": loss, "aux_loss": aux}
+
+
+def cls_loss(weights, hccs, batch, cfg):
+    """Sequence classification via first-token pooling (BERT-style)."""
+    x, _, aux = forward(weights, hccs, batch, cfg)
+    pooled = x[:, 0]
+    logits = (pooled @ weights["cls_head"]).astype(jnp.float32)
+    labels = batch["cls_labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], -1)[:, 0]
+    loss = jnp.mean(logz - gold)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"cls_loss": loss, "acc": acc, "aux_loss": aux}
+
+
+def init_cache(cfg, batch_size: int, max_len: int, cache_dtype=jnp.bfloat16):
+    one = blocks.init_layer_cache(cfg, batch_size, max_len, cache_dtype)
+    layers = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape), one)
+    layers = jax.tree.map(jnp.asarray, layers)
+    c = {"layers": layers, "length": jnp.zeros((), jnp.int32)}
+    if cfg.hot_buffer > 0:
+        c["prompt_len"] = jnp.zeros((), jnp.int32)
+    return c
+
+
+def prefill(weights, hccs, batch, cfg, max_len: int, cache_dtype=jnp.bfloat16):
+    """Run the prompt through the model, filling the cache. Returns
+    (last-token logits, cache)."""
+    b, t = (batch["tokens"].shape if "tokens" in batch
+            else batch["embeddings"].shape[:2])
+    cache = init_cache(cfg, b, max_len, cache_dtype)
+    x, cache, _ = forward(weights, hccs, batch, cfg, cache=cache)
+    if cfg.hot_buffer > 0:
+        cache = dict(cache, prompt_len=cache["length"])
+    logits = logits_from_hidden(weights, x[:, -1:], cfg)
+    return logits[:, 0], cache
+
+
+def decode_step(weights, hccs, tokens, cache, cfg, embeddings=None):
+    """One-token decode. tokens: (B, 1) (or embeddings (B,1,D)).
+    Returns (logits (B, vocab), new_cache)."""
+    batch = ({"embeddings": embeddings} if embeddings is not None
+             else {"tokens": tokens})
+    x, cache, _ = forward(weights, hccs, batch, cfg, cache=cache, decode=True)
+    logits = logits_from_hidden(weights, x, cfg)
+    return logits[:, 0], cache

@@ -1,0 +1,158 @@
+"""Mamba2 SSD (state-space duality) block — chunked parallel form for
+training/prefill, O(1) recurrent form for decode.
+
+Follows arXiv:2405.21060: per head h with state size N, head dim P:
+    h_t = exp(a_t) * h_{t-1} + dt_t * B_t^T x_t        (a_t = -exp(A_log)*dt_t)
+    y_t = C_t h_t + D * x_t
+Chunked algorithm: within-chunk attention-like masked matmul (the "duality"),
+across-chunk scan over per-chunk states — all einsums, MXU-friendly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+
+
+def init_ssm(rng, cfg):
+    d = cfg.d_model
+    di = cfg.d_inner
+    nh = cfg.ssm_heads
+    g = cfg.ssm_groups
+    n = cfg.ssm_state
+    ks = jax.random.split(rng, 4)
+    dt = jnp.dtype(cfg.dtype)
+    # in_proj emits: x_inner (di), z gate (di), B (g*n), C (g*n), dt (nh)
+    proj_out = 2 * di + 2 * g * n + nh
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, proj_out), dt) * d ** -0.5,
+        "out_proj": jax.random.normal(ks[1], (di, d), dt) * di ** -0.5,
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm": jnp.ones((di,), dt),
+    }
+
+
+def _split_proj(p, x, cfg):
+    di, g, n, nh = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = x @ p["in_proj"]
+    zxbcdt = constrain(zxbcdt, "batch", "attn_seq", "model")
+    z, xi, Bm, Cm, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + g * n, 2 * di + 2 * g * n], axis=-1)
+    return z, xi, Bm, Cm, dt
+
+
+def _gated_norm(p, y, z, cfg, eps=1e-6):
+    yf = (y * jax.nn.silu(z.astype(jnp.float32))).astype(jnp.float32)
+    ms = jnp.mean(jnp.square(yf), -1, keepdims=True)
+    return (yf * jax.lax.rsqrt(ms + eps) * p["norm"].astype(jnp.float32)).astype(y.dtype)
+
+
+def apply_ssd(p, x, cfg, state=None):
+    """x: (B, T, D). state: None or (B, nh, P, N) for streaming prefill.
+
+    Returns (out (B,T,D), final_state).
+    """
+    b, t, d = x.shape
+    nh, hp, g, n, L = (cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_groups,
+                       cfg.ssm_state, min(cfg.ssm_chunk, x.shape[1]))
+    z, xi, Bm, Cm, dt = _split_proj(p, x, cfg)
+    xh = xi.reshape(b, t, nh, hp).astype(jnp.float32)
+    Bh = Bm.reshape(b, t, g, n).astype(jnp.float32)
+    Ch = Cm.reshape(b, t, g, n).astype(jnp.float32)
+    rep = nh // g
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])        # (b,t,nh)
+    a = -jnp.exp(p["A_log"]) * dt                                      # (b,t,nh) <= 0
+
+    nc = -(-t // L)
+    t_pad = nc * L
+    pad = ((0, 0), (0, t_pad - t)) + ((0, 0),) * 2
+    xh = jnp.pad(xh, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+    Bh = jnp.pad(Bh, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+    Ch = jnp.pad(Ch, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+    dtp = jnp.pad(dt, ((0, 0), (0, t_pad - t), (0, 0)))
+    ap = jnp.pad(a, ((0, 0), (0, t_pad - t), (0, 0)))
+
+    # chunk views: (b, nc, L, ...) — chunks shard over the TP axis (they are
+    # independent except for the small inter-chunk state scan)
+    xc = constrain(xh.reshape(b, nc, L, nh, hp), "batch", "ssd_chunk",
+                   None, None, None)
+    Bc = constrain(Bh.reshape(b, nc, L, g, n), "batch", "ssd_chunk",
+                   None, None, None)
+    Cc = constrain(Ch.reshape(b, nc, L, g, n), "batch", "ssd_chunk",
+                   None, None, None)
+    dtc = constrain(dtp.reshape(b, nc, L, nh), "batch", "ssd_chunk", None, None)
+    ac = constrain(ap.reshape(b, nc, L, nh), "batch", "ssd_chunk", None, None)
+
+    cum = jnp.cumsum(ac, axis=2)                                       # (b,nc,L,nh)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]                # (b,nc,Lq,Lk,nh)
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+
+    # group-broadcast B/C inside the einsums (materializing repeated
+    # (b,nc,L,nh,n) tensors costs GBs at hymba/mamba2 scale)
+    xg = xc.reshape(b, nc, L, g, rep, hp)
+    dtg = dtc.reshape(b, nc, L, g, rep)
+    # intra-chunk ("attention") term, per group
+    cb = jnp.einsum("bclgn,bcsgn->bclsg", Cc, Bc)                      # (b,nc,L,L,g)
+    wg = cb[..., None] * decay.reshape(b, nc, L, L, g, rep)[:, :, :, :]
+    wg = wg * dtg[:, :, None]                                          # (b,nc,Lq,Lk,g,rep)
+    y_intra = jnp.einsum("bclsgr,bcsgrp->bclgrp", wg, xg).reshape(
+        b, nc, L, nh, hp)
+
+    # per-chunk input state contribution
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)                    # (b,nc,L,nh)
+    wde = (decay_to_end * dtc).reshape(b, nc, L, g, rep)
+    Sc = jnp.einsum("bclgn,bclgr,bclgrp->bcgrnp", Bc, wde, xg).reshape(
+        b, nc, nh, n, hp)
+    a_tot = cum[:, :, -1, :]                                           # (b,nc,nh)
+
+    # inter-chunk recurrence: h_c = exp(a_tot_c) h_{c-1} + S_c
+    def scan_fn(h, xs):
+        s_c, atot_c = xs
+        h_new = jnp.exp(atot_c)[..., None, None] * h + s_c
+        return h_new, h            # emit the state ENTERING this chunk
+    h0 = (jnp.zeros((b, nh, n, hp), jnp.float32) if state is None
+          else state.astype(jnp.float32))
+    hT, h_all = jax.lax.scan(scan_fn, h0, (jnp.moveaxis(Sc, 1, 0),
+                                           jnp.moveaxis(a_tot, 1, 0)))
+    h_in = jnp.moveaxis(h_all, 0, 1)   # (b,nc,nh,n,hp): state entering chunk c
+
+    decay_from_start = jnp.exp(cum).reshape(b, nc, L, g, rep)          # (b,nc,L,g,rep)
+    hg = h_in.reshape(b, nc, g, rep, n, hp)
+    y_inter = jnp.einsum("bclgn,bclgr,bcgrnp->bclgrp", Cc,
+                         decay_from_start, hg).reshape(b, nc, L, nh, hp)
+
+    y_sum = constrain(y_intra + y_inter, "batch", "ssd_chunk",
+                      None, None, None)
+    y = y_sum.reshape(b, t_pad, nh, hp)[:, :t]
+    y = y + p["D"][None, None, :, None] * xh[:, :t].reshape(b, t, nh, hp)
+    y = y.reshape(b, t, cfg.d_inner).astype(x.dtype)
+    y = _gated_norm(p, y, z, cfg)
+    out = y @ p["out_proj"]
+    return constrain(out, "batch", "seq_act", "embed"), hT.astype(jnp.float32)
+
+
+def apply_ssd_step(p, x, cfg, state):
+    """Single-token recurrent step. x: (B, 1, D); state: (B, nh, N, P)."""
+    b = x.shape[0]
+    nh, hp, g, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state
+    z, xi, Bm, Cm, dt = _split_proj(p, x, cfg)
+    xh = xi.reshape(b, nh, hp).astype(jnp.float32)
+    Bh = Bm.reshape(b, g, n).astype(jnp.float32)
+    Ch = Cm.reshape(b, g, n).astype(jnp.float32)
+    rep = nh // g
+    Br = jnp.repeat(Bh, rep, axis=1)                                   # (b,nh,n)
+    Cr = jnp.repeat(Ch, rep, axis=1)
+    dt1 = jax.nn.softplus(dt.reshape(b, nh).astype(jnp.float32) + p["dt_bias"])
+    a = jnp.exp(-jnp.exp(p["A_log"]) * dt1)                            # (b,nh)
+    upd = jnp.einsum("bhn,bhp->bhnp", Br, xh * dt1[..., None])
+    new_state = a[..., None, None] * state.astype(jnp.float32) + upd
+    y = jnp.einsum("bhn,bhnp->bhp", Cr, new_state)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(b, 1, cfg.d_inner).astype(x.dtype)
+    y = _gated_norm(p, y, z, cfg)
+    out = y @ p["out_proj"]
+    return constrain(out, "batch", None, "embed"), new_state.astype(jnp.float32)

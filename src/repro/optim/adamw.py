@@ -1,0 +1,83 @@
+"""AdamW with decoupled weight decay, cosine schedule and global-norm clipping.
+
+Functional, pytree-based (no optax offline). Optimizer state keeps f32 moments
+regardless of param dtype; integer leaves (e.g. nothing today, but guarded) are
+passed through untouched.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWState:
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+jax.tree_util.register_dataclass(
+    AdamWState, data_fields=["step", "mu", "nu"], meta_fields=[])
+
+
+def _is_float(x):
+    return jnp.issubdtype(x.dtype, jnp.floating)
+
+
+def _zeros_like_tree(params):
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32) if _is_float(p) else None,
+        params)
+
+
+def init(params) -> AdamWState:
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=_zeros_like_tree(params), nu=_zeros_like_tree(params))
+
+
+def cosine_lr(step, base_lr, warmup, total):
+    warm = base_lr * (step + 1) / max(warmup, 1)
+    t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree) if x is not None]
+    return jnp.sqrt(sum(leaves))
+
+
+def apply_updates(params, grads, state: AdamWState, tcfg) -> tuple[Any, AdamWState, dict]:
+    """One AdamW step. tcfg: TrainConfig. Returns (params, state, stats)."""
+    step = state.step
+    lr = cosine_lr(step, tcfg.learning_rate, tcfg.warmup_steps, tcfg.total_steps)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, tcfg.grad_clip / (gnorm + 1e-9))
+    b1, b2, eps, wd = tcfg.beta1, tcfg.beta2, tcfg.eps, tcfg.weight_decay
+
+    def upd(p, g, mu, nu):
+        if g is None or not _is_float(p):
+            return p, mu, nu
+        g = g.astype(jnp.float32) * clip
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * jnp.square(g)
+        mu_hat = mu / (1 - b1 ** (step + 1))
+        nu_hat = nu / (1 - b2 ** (step + 1))
+        delta = mu_hat / (jnp.sqrt(nu_hat) + eps) + wd * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = tdef.flatten_up_to(state.mu)
+    flat_nu = tdef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_mu = tdef.unflatten([o[1] for o in out])
+    new_nu = tdef.unflatten([o[2] for o in out])
+    new_state = AdamWState(step=step + 1, mu=new_mu, nu=new_nu)
+    return new_p, new_state, {"lr": lr, "grad_norm": gnorm}

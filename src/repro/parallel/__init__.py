@@ -1,0 +1,2 @@
+from repro.parallel.sharding import (constrain, named_sharding_tree,
+                                     param_spec_tree, spec, use_rules)

@@ -1,0 +1,2 @@
+from repro.quant.int8 import (dequantize, fake_quant, per_channel_scale,
+                              quantize, quantize_weights_tree)

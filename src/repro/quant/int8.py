@@ -1,0 +1,47 @@
+"""int8 quantization utilities for the integer attention pipeline.
+
+Symmetric per-tensor / per-channel quantizers with STE, plus the activation
+observer used to pick per-head logit scales before HCCS calibration.
+(The HCCS-specific pieces live in core/qat.py; this module is the generic
+substrate shared by weight quantization in the examples.)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def quantize(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """Real int8 quantization (no STE): returns int8 values."""
+    return jnp.clip(jnp.round(x / scale), -128, 127).astype(jnp.int8)
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def fake_quant(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """STE fake-quant: float in, float out, int8 grid forward."""
+    q = jnp.clip(jnp.round(x / scale), -128.0, 127.0)
+    y = q * scale
+    return x + jax.lax.stop_gradient(y - x)
+
+
+def per_channel_scale(x: np.ndarray, axis: int) -> np.ndarray:
+    reduce_axes = tuple(i for i in range(x.ndim) if i != axis)
+    amax = np.abs(x).max(axis=reduce_axes)
+    return np.maximum(amax, 1e-6) / 127.0
+
+
+def quantize_weights_tree(weights, rng_unused=None):
+    """Fake-quantize every >=2D float leaf (per-tensor scale); returns a new
+    tree. Used by the int8-everything example to stress HCCS under full
+    quantization."""
+    def one(leaf):
+        if not isinstance(leaf, jax.Array) or leaf.ndim < 2 or \
+           not jnp.issubdtype(leaf.dtype, jnp.floating):
+            return leaf
+        scale = jnp.maximum(jnp.max(jnp.abs(leaf)), 1e-6) / 127.0
+        return fake_quant(leaf.astype(jnp.float32), scale).astype(leaf.dtype)
+    return jax.tree.map(one, weights)

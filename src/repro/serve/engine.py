@@ -1,0 +1,119 @@
+"""Batched serving engine: wave-scheduled prefill + decode.
+
+Requests are grouped into waves by prompt length (static shapes — the
+TPU-friendly batching discipline: no dynamic padding, no recompilation).
+Each wave batch-prefills together, then decodes lockstep one token/step until
+every member finishes; finished slots simply stop sampling (their tokens are
+discarded) so shapes never change mid-wave.
+
+HCCS inference runs the same integer-STE path used during QAT, so served
+logits match the trained model bit-for-bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (t,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, params, cfg, *, max_batch: int = 8,
+                 max_len: int = 512, eos_id: int | None = None,
+                 cache_dtype=jnp.float32):
+        self.w = params["weights"]
+        self.hccs = params["hccs"]
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.cache_dtype = cache_dtype
+        self._queue: list[Request] = []
+        self._key = jax.random.PRNGKey(0)
+        cfg_ = cfg
+
+        @jax.jit
+        def _decode(w, hccs, tokens, cache):
+            return M.decode_step(w, hccs, tokens, cache, cfg_)
+
+        self._decode = _decode
+
+    def submit(self, req: Request):
+        self._queue.append(req)
+
+    def _sample(self, logits, temps: np.ndarray):
+        greedy = np.asarray(jnp.argmax(logits, axis=-1))
+        if (temps > 0).any():
+            self._key, sub = jax.random.split(self._key)
+            sampled = np.asarray(jax.random.categorical(
+                sub, logits / jnp.maximum(jnp.asarray(temps)[:, None], 1e-6)))
+            return np.where(temps > 0, sampled, greedy)
+        return greedy
+
+    def _next_wave(self) -> list[Request]:
+        if not self._queue:
+            return []
+        by_len: dict[int, list[Request]] = defaultdict(list)
+        for r in self._queue:
+            by_len[len(r.prompt)].append(r)
+        # largest group first; cap at max_batch
+        length = max(by_len, key=lambda k: len(by_len[k]))
+        wave = by_len[length][: self.max_batch]
+        for r in wave:
+            self._queue.remove(r)
+        return wave
+
+    def _run_wave(self, wave: list[Request]):
+        b = len(wave)
+        toks = jnp.asarray(np.stack([r.prompt for r in wave]), jnp.int32)
+        temps = np.asarray([r.temperature for r in wave])
+        logits, cache = M.prefill(self.w, self.hccs, {"tokens": toks},
+                                  self.cfg, max_len=self.max_len,
+                                  cache_dtype=self.cache_dtype)
+        nxt = self._sample(logits, temps)
+        for r, t in zip(wave, nxt):
+            r.out_tokens.append(int(t))
+        live = np.ones(b, bool)
+        max_steps = max(r.max_new_tokens for r in wave) - 1
+        for _ in range(max(max_steps, 0)):
+            last = jnp.asarray(nxt[:, None].astype(np.int32))
+            logits, cache = self._decode(self.w, self.hccs, last, cache)
+            nxt = self._sample(logits, temps)
+            for i, r in enumerate(wave):
+                if not live[i]:
+                    continue
+                tok = int(nxt[i])
+                r.out_tokens.append(tok)
+                if (len(r.out_tokens) >= r.max_new_tokens or
+                        (self.eos_id is not None and tok == self.eos_id)):
+                    r.done = True
+                    live[i] = False
+            if not live.any() or int(cache["length"]) >= self.max_len - 1:
+                break
+        for r in wave:
+            r.done = True
+
+    def run(self) -> list[Request]:
+        """Serve the whole queue; returns finished requests."""
+        finished: list[Request] = []
+        while self._queue:
+            wave = self._next_wave()
+            if not wave:
+                break
+            self._run_wave(wave)
+            finished.extend(wave)
+        return finished

@@ -1,0 +1,67 @@
+"""train_step / eval_step factories: loss -> grad -> (optional int8 grad
+compression) -> AdamW, with donation and logical-axis sharding constraints.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.optim import adamw, compression
+
+
+def make_train_state(rng, cfg, tcfg):
+    params = M.init_params(rng, cfg)
+    opt = adamw.init(params["weights"])
+    state = {"params": params, "opt": opt,
+             "rng": jax.random.PRNGKey(tcfg.seed)}
+    if tcfg.grad_compression == "int8":
+        zero_g = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32)
+                              if jnp.issubdtype(p.dtype, jnp.floating) else None,
+                              params["weights"])
+        state["ef_error"] = zero_g
+    return state
+
+
+def make_train_step(cfg, tcfg, loss_fn: Callable | None = None):
+    """Returns train_step(state, batch) -> (state, metrics), jit-ready."""
+    loss_fn = loss_fn or (M.cls_loss if cfg.num_classes else M.lm_loss)
+
+    def total_loss(weights, hccs, batch):
+        loss, metrics = loss_fn(weights, hccs, batch, cfg)
+        if cfg.is_moe:
+            loss = loss + tcfg.moe_aux_weight * metrics["aux_loss"]
+        return loss, metrics
+
+    def train_step(state, batch):
+        params = state["params"]
+        (loss, metrics), grads = jax.value_and_grad(total_loss, has_aux=True)(
+            params["weights"], params["hccs"], batch)
+        rng, sub = jax.random.split(state["rng"])
+        new_state = dict(state, rng=rng)
+        if tcfg.grad_compression == "int8":
+            grads, new_err = compression.compress_grads(
+                grads, state["ef_error"], sub)
+            new_state["ef_error"] = new_err
+        new_w, new_opt, stats = adamw.apply_updates(
+            params["weights"], grads, state["opt"], tcfg)
+        new_state["params"] = {"weights": new_w, "hccs": params["hccs"]}
+        new_state["opt"] = new_opt
+        metrics = dict(metrics, loss=loss, **stats)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg, loss_fn: Callable | None = None):
+    loss_fn = loss_fn or (M.cls_loss if cfg.num_classes else M.lm_loss)
+
+    @jax.jit
+    def eval_step(params, batch):
+        _, metrics = loss_fn(params["weights"], params["hccs"], batch, cfg)
+        return metrics
+
+    return eval_step

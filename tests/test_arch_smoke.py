@@ -1,0 +1,100 @@
+"""Per-architecture smoke tests: reduced config, one forward + one train step
+on CPU, asserting output shapes and no NaNs. (Full configs are exercised only
+via the dry-run.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, reduced_config
+from repro.configs.base import TrainConfig
+from repro.models import model as M
+from repro.train import make_train_state, make_train_step
+
+jax.config.update("jax_platform_name", "cpu")
+
+B, T = 2, 24
+
+
+def _batch(cfg, rng):
+    batch = {}
+    if cfg.input_mode == "embeddings":
+        batch["embeddings"] = jnp.asarray(
+            rng.normal(0, 1, (B, T, cfg.d_model)), jnp.float32)
+    else:
+        batch["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, T)))
+    batch["labels"] = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, T)))
+    if cfg.rope == "mrope":
+        pos = np.tile(np.arange(T), (3, B, 1))
+        batch["mrope_positions"] = jnp.asarray(pos)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_train_step(arch):
+    cfg = reduced_config(arch)
+    rng = np.random.default_rng(0)
+    batch = _batch(cfg, rng)
+
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    x, _, aux = M.forward(params["weights"], params["hccs"], batch, cfg)
+    assert x.shape == (B, T, cfg.d_model)
+    assert bool(jnp.isfinite(x).all()), f"{arch}: non-finite hidden states"
+    logits = M.logits_from_hidden(params["weights"], x, cfg)
+    assert logits.shape == (B, T, cfg.padded_vocab)
+
+    tcfg = TrainConfig(total_steps=4, warmup_steps=1)
+    state = make_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+    step = jax.jit(make_train_step(cfg, tcfg, loss_fn=M.lm_loss),
+                   donate_argnums=0)
+    state, metrics = step(state, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss), f"{arch}: non-finite loss"
+    gn = float(metrics["grad_norm"])
+    assert np.isfinite(gn) and gn > 0, f"{arch}: bad grad norm {gn}"
+
+
+@pytest.mark.parametrize("arch", ["granite-3-2b", "hymba-1.5b", "mamba2-1.3b",
+                                  "qwen3-moe-235b-a22b"])
+def test_decode_matches_forward(arch):
+    """Prefill + single decode step == teacher-forced full forward."""
+    cfg = reduced_config(arch)
+    if cfg.input_mode == "embeddings":
+        pytest.skip("token-decode only")
+    if cfg.is_moe:
+        # capacity-dropping MoE drops different tokens when the dispatch set
+        # differs (46 prefill tokens vs 48 teacher-forced); test the routing
+        # math itself with drop-free capacity
+        cfg = cfg.replace(moe_capacity_factor=8.0)
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, T)))
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    x, _, _ = M.forward(params["weights"], params["hccs"], {"tokens": toks}, cfg)
+    full = M.logits_from_hidden(params["weights"], x, cfg)
+    lg_p, cache = M.prefill(params["weights"], params["hccs"],
+                            {"tokens": toks[:, :T - 1]}, cfg, max_len=T,
+                            cache_dtype=jnp.float32)
+    lg_d, _ = M.decode_step(params["weights"], params["hccs"],
+                            toks[:, T - 1:], cache, cfg)
+    np.testing.assert_allclose(np.asarray(lg_p), np.asarray(full[:, T - 2]),
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(lg_d), np.asarray(full[:, T - 1]),
+                               atol=2e-4)
+
+
+def test_hccs_inapplicable_arch_has_no_hccs_state():
+    cfg = reduced_config("mamba2-1.3b")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    assert params["hccs"] == {}, "attention-free arch must carry no theta"
+
+
+def test_vocab_padding_masks_pad_lanes():
+    cfg = reduced_config("granite-3-2b").replace(
+        vocab_size=500, vocab_pad_multiple=128)
+    assert cfg.padded_vocab == 512
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, 500, (1, 8)))
+    x, _, _ = M.forward(params["weights"], params["hccs"], {"tokens": toks}, cfg)
+    logits = M.logits_from_hidden(params["weights"], x, cfg)
+    assert float(logits[..., 500:].max()) < -1e29

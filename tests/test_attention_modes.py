@@ -1,0 +1,145 @@
+"""Attention-path equivalences: blockwise==dense per HCCS mode, sliding
+window, M-RoPE, decode row vs full row."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models.attention import apply_attention, init_attention
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def cfg_base(**kw):
+    d = dict(name="t", family="dense", num_layers=1, d_model=64, num_heads=4,
+             num_kv_heads=2, d_ff=64, vocab_size=64, vocab_pad_multiple=1)
+    d.update(kw)
+    return ModelConfig(**d)
+
+
+RNG = np.random.default_rng(0)
+X = jnp.asarray(RNG.normal(0, 1, (2, 40, 64)), jnp.float32)
+
+
+def _run(cfg, hccs=None, x=X):
+    p = init_attention(jax.random.PRNGKey(0), cfg)
+    out, _ = apply_attention(p, x, cfg, hccs=hccs)
+    return np.asarray(out)
+
+
+def _hccs(cfg, n):
+    from repro.core.constraints import default_params
+    B, S, D = default_params(n)
+    h = cfg.num_heads
+    return {"B": jnp.full((h,), B, jnp.int32), "S": jnp.full((h,), S, jnp.int32),
+            "D": jnp.full((h,), D, jnp.int32),
+            "scale": jnp.full((h,), 0.07, jnp.float32)}
+
+
+@pytest.mark.parametrize("prob,mode", [("softmax", "wide"), ("hccs", "wide"),
+                                       ("hccs", "i16_div")])
+def test_blockwise_matches_dense(prob, mode):
+    cfg_d = cfg_base(attention_prob=prob, hccs_mode=mode,
+                     attention_impl="dense")
+    cfg_b = cfg_d.replace(attention_impl="blockwise", block_k=16)
+    hccs = _hccs(cfg_d, 40) if prob == "hccs" else None
+    np.testing.assert_allclose(_run(cfg_d, hccs), _run(cfg_b, hccs), atol=3e-5)
+
+
+def test_sliding_window_masks_old_keys():
+    """With window=w, key j contributes to query i iff i-w < j <= i."""
+    cfg = cfg_base(attention_prob="softmax", window=8, attention_impl="dense")
+    p = init_attention(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(RNG.normal(0, 1, (1, 30, 64)), jnp.float32)
+    out_w, _ = apply_attention(p, x, cfg)
+    # perturbing a key OUTSIDE every window of the last query must not
+    # change the last query's output
+    x2 = x.at[0, 2].add(5.0)
+    out_w2, _ = apply_attention(p, x2, cfg)
+    np.testing.assert_allclose(np.asarray(out_w[0, -1]),
+                               np.asarray(out_w2[0, -1]), atol=1e-5)
+    # ...but it does change the early outputs
+    assert np.abs(np.asarray(out_w[0, 3]) - np.asarray(out_w2[0, 3])).max() > 1e-4
+
+
+def test_window_blockwise_matches_dense():
+    cfg_d = cfg_base(attention_prob="hccs", window=8, attention_impl="dense")
+    cfg_b = cfg_d.replace(attention_impl="blockwise", block_k=8)
+    hccs = _hccs(cfg_d, 40)
+    np.testing.assert_allclose(_run(cfg_d, hccs), _run(cfg_b, hccs), atol=3e-5)
+
+
+def test_mrope_sections_differ_from_rope():
+    """With distinct t/h/w position streams, M-RoPE != plain RoPE; with
+    identical streams it reduces to plain RoPE."""
+    from repro.models.layers import apply_mrope, apply_rope
+    x = jnp.asarray(RNG.normal(0, 1, (1, 2, 12, 32)), jnp.float32)
+    pos = jnp.arange(12)[None]
+    same3 = jnp.broadcast_to(pos[None], (3, 1, 12))
+    sections = (6, 5, 5)
+    a = apply_mrope(x, same3, 1e4, sections)
+    b = apply_rope(x, pos, 1e4)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    mixed = jnp.stack([pos, pos * 3 % 12, pos * 7 % 12])
+    c = apply_mrope(x, mixed, 1e4, sections)
+    assert np.abs(np.asarray(c) - np.asarray(b)).max() > 1e-3
+
+
+def test_decode_row_equals_full_row():
+    """One cached decode step reproduces the last row of full attention."""
+    cfg = cfg_base(attention_prob="hccs", attention_impl="dense")
+    hccs = _hccs(cfg, 40)
+    p = init_attention(jax.random.PRNGKey(1), cfg)
+    full, _ = apply_attention(p, X, cfg, hccs=hccs)
+    T = X.shape[1]
+    cache = {"k": jnp.zeros((2, 2, T, 16)), "v": jnp.zeros((2, 2, T, 16)),
+             "length": jnp.asarray(0)}
+    _, cache = apply_attention(p, X[:, :T - 1], cfg, hccs=hccs, cache=cache)
+    last, _ = apply_attention(p, X[:, T - 1:], cfg, hccs=hccs, cache=cache)
+    np.testing.assert_allclose(np.asarray(last[:, 0]),
+                               np.asarray(full[:, -1]), atol=3e-5)
+
+
+def test_hccs_kernel_degenerate_rows():
+    """All-equal and all-minimum rows stay valid probability rows."""
+    from repro.core.constraints import default_params
+    from repro.kernels import hccs_softmax
+    from repro.kernels import ref as REF
+    n = 64
+    B, S, D = default_params(n)
+    theta = jnp.tile(jnp.asarray([[B, S, D]], jnp.int32), (3, 1))
+    rows = jnp.asarray(np.stack([
+        np.full(n, -128), np.full(n, 127),
+        np.concatenate([[127], np.full(n - 1, -128)])]), jnp.int8)
+    got = np.asarray(hccs_softmax(rows, theta, "i16_div"))
+    want = np.asarray(REF.hccs_rows_ref(rows, theta, "i16_div"))
+    np.testing.assert_array_equal(got, want)
+    assert (got >= 0).all() and (got.sum(-1) <= 32767).all()
+    # focused row: the max position dominates
+    assert got[2, 0] > got[2, 1]
+
+
+def test_hot_buffer_decode_matches_classic():
+    """Hot-buffer decode (replicated append + two-segment merge) reproduces
+    the classic single-cache decode bit-for-bit in fp tolerance, for both
+    HCCS and softmax."""
+    from repro.models import model as Mm
+    for prob in ("hccs", "softmax"):
+        cfg0 = cfg_base(attention_prob=prob)
+        cfg1 = cfg0.replace(hot_buffer=8)
+        p = Mm.init_params(jax.random.PRNGKey(0), cfg0)
+        toks = jnp.asarray(RNG.integers(0, 64, (2, 12)))
+        lg0, c0 = Mm.prefill(p["weights"], p["hccs"], {"tokens": toks},
+                             cfg0, max_len=24, cache_dtype=jnp.float32)
+        lg1, c1 = Mm.prefill(p["weights"], p["hccs"], {"tokens": toks},
+                             cfg1, max_len=24, cache_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(lg0), np.asarray(lg1), atol=2e-5)
+        nxt = jnp.argmax(lg0, -1)[:, None].astype(jnp.int32)
+        for _ in range(4):
+            lg0, c0 = Mm.decode_step(p["weights"], p["hccs"], nxt, c0, cfg0)
+            lg1, c1 = Mm.decode_step(p["weights"], p["hccs"], nxt, c1, cfg1)
+            np.testing.assert_allclose(np.asarray(lg0), np.asarray(lg1),
+                                       atol=5e-4)
+            nxt = jnp.argmax(lg0, -1)[:, None].astype(jnp.int32)

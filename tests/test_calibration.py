@@ -1,0 +1,100 @@
+"""Calibration (paper §III-C): grid search quality + constraint satisfaction +
+granularity ordering (Table II's structural claim)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.calibrate import calibrate_heads, calibrate_rows
+from repro.core.constraints import default_params, validate_params
+from repro.core.hccs import HCCSParams, hccs_probs
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _heads_data(L=2, H=2, R=32, n=64, seed=0):
+    """Heterogeneous heads: focused (peaked logits) and broad (flat)."""
+    rng = np.random.default_rng(seed)
+    rows = np.zeros((L, H, R, n), np.float32)
+    for l in range(L):
+        for h in range(H):
+            temp = 0.5 if (l + h) % 2 == 0 else 4.0   # focused vs broad
+            rows[l, h] = rng.normal(0, temp, (R, n))
+    scale = np.abs(rows).max(axis=(2, 3)) / 127.0
+    return rows, scale
+
+
+def _mean_kl(rows, scale, params, n):
+    kl_total, count = 0.0, 0
+    L, H = rows.shape[:2]
+    for l in range(L):
+        for h in range(H):
+            x = rows[l, h]
+            xq = np.clip(np.round(x / scale[l, h]), -128, 127).astype(np.int32)
+            p = HCCSParams(B=params.B[l, h], S=params.S[l, h], D=params.D[l, h])
+            q = np.asarray(hccs_probs(jnp.asarray(xq), p, "i16_div"))
+            q = q / np.maximum(q.sum(-1, keepdims=True), 1e-9)
+            ref = np.asarray(jax.nn.softmax(jnp.asarray(x), axis=-1))
+            kl = (ref * (np.log(np.maximum(ref, 1e-20)) -
+                         np.log(np.maximum(q, 1e-9)))).sum(-1)
+            kl_total += kl.mean()
+            count += 1
+    return kl_total / count
+
+
+def test_calibration_beats_default():
+    n = 64
+    rng = np.random.default_rng(3)
+    x = rng.normal(0, 2.5, (64, n)).astype(np.float32)
+    scale = np.abs(x).max() / 127
+    (B, S, D), kl = calibrate_rows(x, scale, n)
+    validate_params(B, S, D, n)
+    # default-parameter KL for comparison
+    B0, S0, D0 = default_params(n)
+    from repro.core.calibrate import _kl_for_grid
+    xq = jnp.asarray(np.clip(np.round(x / scale), -128, 127), jnp.int32)
+    pref = jax.nn.softmax(jnp.asarray(x), -1)
+    kl0 = float(_kl_for_grid(xq, pref, jnp.asarray([[B0, S0, D0]]))[0])
+    assert kl < kl0
+    assert kl < 0.5   # paper reports ~0.1-0.3 for typical heads
+
+
+def test_granularity_ordering():
+    """per-head <= per-layer <= global mean KL (Table II's claim, measured
+    on the calibration objective)."""
+    n = 64
+    rows, scale = _heads_data(n=n)
+    results = {}
+    for gran in ("global", "per_layer", "per_head"):
+        params, _ = calibrate_heads(rows, scale, n, granularity=gran)
+        results[gran] = _mean_kl(rows, scale, params, n)
+    assert results["per_head"] <= results["per_layer"] + 1e-6
+    assert results["per_layer"] <= results["global"] + 1e-6
+
+
+def test_calibrated_params_respect_constraints():
+    n = 128
+    rows, scale = _heads_data(n=n, L=1, H=2, R=16)
+    params, kl = calibrate_heads(rows, scale, n, granularity="per_head")
+    B = np.asarray(params.B)
+    S = np.asarray(params.S)
+    D = np.asarray(params.D)
+    validate_params(B, S, D, n)
+    assert (kl >= 0).all()
+
+
+def test_focused_heads_get_steeper_slope():
+    """A focused (low-temperature) head needs larger S*scale-sensitivity than
+    a broad head — calibration should reflect head heterogeneity."""
+    n = 64
+    rng = np.random.default_rng(5)
+    focused = rng.normal(0, 6.0, (64, n)).astype(np.float32)
+    broad = rng.normal(0, 0.5, (64, n)).astype(np.float32)
+    sf = np.abs(focused).max() / 127
+    sb = np.abs(broad).max() / 127
+    (Bf, Sf, Df), _ = calibrate_rows(focused, sf, n)
+    (Bb, Sb, Db), _ = calibrate_rows(broad, sb, n)
+    # effective slope in logit units: S / scale... compare decay over the
+    # active window instead: focused should zero-out (clamp) sooner
+    decay_f = Sf * Df / max(Bf, 1)
+    decay_b = Sb * Db / max(Bb, 1)
+    assert decay_f >= decay_b

@@ -1,0 +1,126 @@
+"""Dry-run machinery tests: HLO collective parsing, roofline math, sharding
+rule resolution, and a subprocess mini dry-run (8 fake devices, 4x2 mesh)."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.launch import roofline as RL
+
+
+class TestCollectiveParser:
+    HLO = """
+  %ag = bf16[256,1024]{1,0} all-gather(%x), replica_groups={...}
+  %ar.1 = f32[128]{0} all-reduce(%y), to_apply=%sum
+  ROOT %cp = f32[2,8]{1,0} collective-permute(%z), source_target_pairs={{0,1}}
+  %a2a = (f32[16,4]{1,0}, f32[16,4]{1,0}) all-to-all(%p, %q), dimensions={0}
+  %ags = bf16[64]{0} all-gather-start(%w)
+  %agd = bf16[64]{0} all-gather-done(%ags)
+  %not_coll = f32[4]{0} add(%a, %b)
+"""
+
+    def test_kinds_and_bytes(self):
+        out = RL.collective_bytes(self.HLO)
+        assert out["all-gather"]["bytes"] == 256 * 1024 * 2 + 64 * 2
+        assert out["all-gather"]["count"] == 2      # start counted, done not
+        assert out["all-reduce"]["bytes"] == 128 * 4
+        assert out["collective-permute"]["bytes"] == 2 * 8 * 4
+        assert out["all-to-all"]["bytes"] == 2 * 16 * 4 * 4
+        assert out["total_bytes"] == sum(
+            out[k]["bytes"] for k in RL._COLLECTIVES)
+
+    def test_scalar_and_empty_shapes(self):
+        assert RL._shape_bytes("f32[]") == 4
+        assert RL._shape_bytes("pred[3,3]") == 9
+
+
+class TestRooflineMath:
+    def test_terms_and_dominance(self):
+        t = RL.roofline_terms(flops_per_dev=197e12, bytes_per_dev=0.0,
+                              coll_bytes_per_dev=0.0)
+        assert t["compute_s"] == pytest.approx(1.0)
+        assert t["dominant"] == "compute"
+        assert t["roofline_fraction"] == pytest.approx(1.0)
+        t = RL.roofline_terms(1e12, 819e9 * 2, 0.0)
+        assert t["dominant"] == "memory"
+        assert t["step_s_lower_bound"] == pytest.approx(2.0)
+
+    def test_model_flops(self):
+        from repro.configs import get_config
+        cfg = get_config("granite-3-2b")
+        assert RL.model_flops(cfg, 1e9, 1e9, 1000, "train") == 6e12
+        assert RL.model_flops(cfg, 1e9, 1e9, 1000, "prefill") == 2e12
+        moe = get_config("qwen3-moe-235b-a22b")
+        assert RL.model_flops(moe, 10e9, 2e9, 100, "train") == 6 * 2e9 * 100
+
+    def test_active_params_moe(self):
+        import jax
+        from repro.configs import reduced_config
+        from repro.models import model as M
+        cfg = reduced_config("granite-moe-1b-a400m")
+        shapes = jax.eval_shape(
+            lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+        total = RL.count_params(shapes["weights"])
+        active = RL.count_active_params(cfg, shapes["weights"])
+        assert active < total          # experts discounted by k/E
+
+
+class TestShardingRules:
+    def test_duplicate_axis_dropped(self):
+        import jax
+        from jax.sharding import Mesh
+        from repro.parallel import sharding as SH
+        mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                    ("data", "model"))
+        with SH.use_rules(mesh, {"seq_act": "model"}):
+            s = SH.spec("batch", "seq_act", "model")
+            # both seq_act and model resolve to "model"; the second is dropped
+            assert s[1] == "model" and s[2] is None
+
+    def test_missing_mesh_axis_ignored(self):
+        import jax
+        from jax.sharding import Mesh
+        from repro.parallel import sharding as SH
+        mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                    ("data", "model"))
+        with SH.use_rules(mesh):
+            s = SH.spec("batch")       # ("pod","data") -> pod absent
+            assert s[0] in ("data", ("data",))
+
+    def test_param_rules_cover_all_archs(self):
+        import jax
+        from repro.configs import ARCH_IDS, reduced_config
+        from repro.models import model as M
+        from repro.parallel.sharding import param_spec_tree
+        for arch in ARCH_IDS:
+            cfg = reduced_config(arch)
+            shapes = jax.eval_shape(
+                lambda c=cfg: M.init_params(jax.random.PRNGKey(0), c))
+            specs = param_spec_tree(shapes)   # must not raise
+            from jax.sharding import PartitionSpec
+            n_specs = len(jax.tree.leaves(
+                specs, is_leaf=lambda x: isinstance(x, PartitionSpec)))
+            assert len(jax.tree.leaves(shapes)) == n_specs
+
+
+@pytest.mark.parametrize("cell", [("granite-moe-1b-a400m", "train_4k"),
+                                  ("mamba2-1.3b", "decode_32k")])
+def test_mini_dryrun_subprocess(cell, tmp_path):
+    """End-to-end dry-run on a small fake-device mesh, in a subprocess so the
+    forced device count cannot leak into this test process."""
+    arch, shape = cell
+    env = dict(os.environ, REPRO_DRYRUN_DEVICES="8", REPRO_MESH="4,2",
+               PYTHONPATH="src")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", "pod", "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=900,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert r.returncode == 0, r.stderr[-2000:]
+    rec = json.load(open(tmp_path / f"{arch}_{shape}_pod.json"))
+    assert rec["ok"], rec.get("error")
+    assert rec["flops_per_dev"] > 0
+    assert rec["roofline"]["dominant"] in ("compute", "memory", "collective")

@@ -1,0 +1,194 @@
+"""Property + unit tests for the HCCS core (paper Algorithm 1 + §IV-C)."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import (HCCSParams, MODES, hccs_int, hccs_probs, hccs_qat,
+                        leading_bit)
+from repro.core.constraints import (b_upper, default_params, feasible_grid,
+                                    is_feasible, score_floor, validate_params)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_params(B, S, D):
+    return HCCSParams(B=jnp.int32(B), S=jnp.int32(S), D=jnp.int32(D))
+
+
+@st.composite
+def rows_and_params(draw):
+    n = draw(st.integers(4, 256))
+    B, S, D = default_params(n)
+    row = draw(st.lists(st.integers(-128, 127), min_size=n, max_size=n))
+    return np.asarray(row, np.int32), (B, S, D), n
+
+
+class TestInvariants:
+    @settings(max_examples=80, deadline=None)
+    @given(rows_and_params())
+    def test_nonnegative_bounded_unit_sum(self, data):
+        row, (B, S, D), n = data
+        p = make_params(B, S, D)
+        for mode in MODES:
+            out = np.asarray(hccs_int(jnp.asarray(row)[None], p, mode))[0]
+            T = 32767 if mode.startswith("i16") else 255
+            assert (out >= 0).all(), mode
+            assert (out <= T).all(), mode
+            if mode == "i16_div":
+                # rho = floor(T/Z) => sum = Z*rho in (T - Z, T]: the paper's
+                # "≈ T up to integer truncation error", made precise
+                m = row.max()
+                delta = np.minimum(m - row, D)
+                Z = int((B - S * delta).sum())
+                assert out.sum() <= T
+                assert out.sum() > T - Z
+
+    @settings(max_examples=80, deadline=None)
+    @given(rows_and_params())
+    def test_monotonicity_order_preserved(self, data):
+        """x_i >= x_j  =>  p_i >= p_j (the paper's ordering guarantee)."""
+        row, (B, S, D), n = data
+        p = make_params(B, S, D)
+        out = np.asarray(hccs_int(jnp.asarray(row)[None], p, "i16_div"))[0]
+        order = np.argsort(row, kind="stable")
+        assert (np.diff(out[order]) >= 0).all()
+
+    @settings(max_examples=50, deadline=None)
+    @given(rows_and_params(), st.integers(-20, 20))
+    def test_shift_invariance(self, data, c):
+        """HCCS depends on x only through max-centered distances."""
+        row, (B, S, D), n = data
+        shifted = np.clip(row.astype(np.int64) + c, -128, 127).astype(np.int32)
+        if not np.array_equal(
+                np.clip(row + c, -128, 127) - c, row):  # clipping destroyed it
+            return
+        p = make_params(B, S, D)
+        a = hccs_int(jnp.asarray(row)[None], p, "i16_div")
+        b = hccs_int(jnp.asarray(shifted)[None], p, "i16_div")
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_uniform_logits_uniform_probs(self):
+        n = 64
+        p = make_params(*default_params(n))
+        row = jnp.full((1, n), 3, jnp.int32)
+        out = np.asarray(hccs_int(row, p, "i16_div"))[0]
+        assert len(np.unique(out)) == 1
+
+    def test_clb_overestimates_at_most_2x(self):
+        """rho_clb in [rho_exact, 2*rho_exact] (paper §III-B.c)."""
+        for Z in [256, 257, 1000, 4095, 4096, 30000, 32767]:
+            k = int(np.asarray(leading_bit(jnp.int32(Z))))
+            assert 2 ** k <= Z < 2 ** (k + 1)
+            rho_clb = 32767 >> k
+            rho_exact = 32767 // Z
+            assert rho_exact <= rho_clb <= 2 * rho_exact + 1
+
+
+class TestConstraints:
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(4, 4096))
+    def test_feasible_grid_is_feasible(self, n):
+        g = feasible_grid(n, num_b=4, num_s=4, d_values=(16, 64, 127))
+        assert len(g) > 0
+        for B, S, D in g:
+            assert is_feasible(int(B), int(S), int(D), n)
+            validate_params(B, S, D, n)
+
+    def test_operating_band_eq11(self):
+        n = 64
+        B, S, D = default_params(n)
+        assert S * D + score_floor(n) <= B <= b_upper(n)
+
+    def test_z_bounds_guarantee_int16_safety(self):
+        """n*(B - S*D) >= 256 => rho_u8 <= 32767; n*B <= 32767 => rho >= 1."""
+        n = 64
+        B, S, D = default_params(n)
+        worst_low = n * (B - S * D)
+        assert worst_low >= 256
+        assert (255 << 15) // worst_low <= 32767
+        assert 32767 // (n * B) >= 1
+
+    def test_infeasible_rejected(self):
+        with pytest.raises(ValueError):
+            validate_params(B=1000, S=10, D=200, n=64)   # D > 127
+        with pytest.raises(ValueError):
+            validate_params(B=1000, S=100, D=127, n=64)  # floor violated
+
+
+class TestQATPath:
+    def test_hard_matches_integer_forward(self):
+        rng = np.random.default_rng(0)
+        n = 64
+        B, S, D = default_params(n)
+        p = make_params(B, S, D)
+        x = rng.normal(0, 3, (16, n)).astype(np.float32)
+        scale = np.abs(x).max() / 127
+        xq = np.clip(np.round(x / scale), -128, 127).astype(np.int32)
+        want = np.asarray(hccs_probs(jnp.asarray(xq), p, "i16_div"))
+        got = np.asarray(hccs_qat(jnp.asarray(x), scale, p, "i16_div"))
+        np.testing.assert_allclose(got, want, atol=1e-6)
+
+    def test_gradients_finite_and_nonzero(self):
+        rng = np.random.default_rng(1)
+        n = 32
+        p = make_params(*default_params(n))
+        x = jnp.asarray(rng.normal(0, 3, (4, n)), jnp.float32)
+        for mode in ("wide", "i16_div", "i8_clb"):
+            g = jax.grad(lambda z: hccs_qat(z, 0.05, p, mode).sum())(x)
+            assert bool(jnp.isfinite(g).all()), mode
+            assert float(jnp.abs(g).sum()) > 0, mode
+
+    def test_mask_excluded_from_Z(self):
+        n = 16
+        p = make_params(*default_params(n))
+        x = jnp.zeros((1, n), jnp.float32)
+        mask = jnp.arange(n)[None] < 8
+        probs = hccs_qat(x, 0.05, p, "wide", mask=mask)
+        assert float(probs[0, 8:].sum()) == 0.0
+        np.testing.assert_allclose(float(probs[0, :8].sum()), 1.0, atol=1e-5)
+
+
+class TestStaticMaxVariant:
+    """Beyond-paper: single-pass static-max HCCS (core/hccs.py)."""
+
+    def test_order_preserved_and_valid_simplex(self):
+        from repro.core.hccs import hccs_static_max_qat
+        rng = np.random.default_rng(0)
+        n = 64
+        p = make_params(*default_params(n))
+        x = rng.normal(0, 3, (8, n)).astype(np.float32)
+        scale = np.abs(x).max() / 127          # maxima calibrated near 127
+        probs = np.asarray(hccs_static_max_qat(jnp.asarray(x), scale, p))
+        assert (probs >= 0).all()
+        np.testing.assert_allclose(probs.sum(-1), 1.0, atol=1e-5)
+        for row_x, row_p in zip(x, probs):
+            order = np.argsort(row_x, kind="stable")
+            assert (np.diff(row_p[order]) >= -1e-7).all()
+
+    def test_matches_rowmax_when_max_hits_ceiling(self):
+        """If a row's max quantizes exactly to 127, static-max == row-max."""
+        from repro.core.hccs import hccs_qat, hccs_static_max_qat
+        rng = np.random.default_rng(1)
+        n = 32
+        p = make_params(*default_params(n))
+        x = rng.normal(0, 2, (4, n)).astype(np.float32)
+        x = x - x.max(-1, keepdims=True)       # max at 0
+        scale = 1.0 / 127                      # 0 quantizes to... shift up:
+        x = x + 1.0                            # max exactly 1.0 -> 127
+        got = np.asarray(hccs_static_max_qat(jnp.asarray(x), scale, p))
+        want = np.asarray(hccs_qat(jnp.asarray(x), scale, p, "wide"))
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+    def test_uncalibrated_scale_degrades_to_uniform(self):
+        """Rows far below the ceiling clamp everything: the failure mode that
+        motivates keeping the paper's row-max as the default."""
+        from repro.core.hccs import hccs_static_max_qat
+        n = 32
+        p = make_params(*default_params(n))
+        x = jnp.asarray(np.random.default_rng(2).normal(-50, 1, (2, n)),
+                        jnp.float32)
+        probs = np.asarray(hccs_static_max_qat(x, 1.0, p))
+        np.testing.assert_allclose(probs, 1.0 / n, atol=1e-6)

@@ -1,0 +1,123 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, bit-exactness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.constraints import default_params
+from repro.kernels import hccs_attention, hccs_softmax, softmax_reference
+from repro.kernels import ref as REF
+
+jax.config.update("jax_platform_name", "cpu")
+RNG = np.random.default_rng(42)
+
+
+def _theta(n, rows):
+    B, S, D = default_params(n)
+    return np.tile(np.asarray([[B, S, D]], np.int32), (rows, 1))
+
+
+@pytest.mark.parametrize("shape", [(1, 32), (7, 64), (16, 128), (65, 130),
+                                   (300, 257), (8, 1024)])
+@pytest.mark.parametrize("mode", ["i16_div", "i8_div", "i16_clb", "i8_clb"])
+def test_hccs_kernel_bit_exact(shape, mode):
+    n_rows, c = shape
+    x = RNG.integers(-128, 128, shape).astype(np.int8)
+    theta = _theta(c, n_rows)
+    got = hccs_softmax(jnp.asarray(x), jnp.asarray(theta), mode)
+    want = REF.hccs_rows_ref(jnp.asarray(x), jnp.asarray(theta), mode)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("block_rows", [8, 64, 256])
+def test_hccs_kernel_block_size_invariant(block_rows):
+    x = RNG.integers(-128, 128, (100, 96)).astype(np.int8)
+    theta = _theta(96, 100)
+    got = hccs_softmax(jnp.asarray(x), jnp.asarray(theta), "i16_div",
+                       block_rows=block_rows)
+    want = REF.hccs_rows_ref(jnp.asarray(x), jnp.asarray(theta), "i16_div")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_hccs_kernel_per_row_theta():
+    """Different calibration per row (per-head batching)."""
+    c = 64
+    x = RNG.integers(-128, 128, (6, c)).astype(np.int8)
+    theta = _theta(c, 6)
+    theta[3:, 1] = 0      # some heads uniform (S=0)
+    got = hccs_softmax(jnp.asarray(x), jnp.asarray(theta), "i16_div")
+    want = REF.hccs_rows_ref(jnp.asarray(x), jnp.asarray(theta), "i16_div")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("shape", [(4, 32), (33, 100), (128, 512)])
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_softmax_reference_kernel(shape, dtype):
+    x = jnp.asarray(RNG.normal(0, 2, shape), dtype)
+    got = softmax_reference(x)
+    want = REF.softmax_bf16_ref(x)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=2e-2)
+    row_sums = np.asarray(got, np.float32).sum(-1)
+    np.testing.assert_allclose(row_sums, 1.0, atol=2e-2)
+
+
+@pytest.mark.parametrize("gqa", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("tq,tk,d", [(16, 16, 32), (67, 67, 32), (64, 64, 128)])
+def test_fused_attention_vs_oracle(gqa, tq, tk, d):
+    h, hkv = gqa
+    b = 2
+    # deterministic per-case seed (shared RNG would make results depend on
+    # test execution order); atol admits int8-bin boundary flips from 1-ulp
+    # dot_general-vs-einsum reduction differences.
+    rng = np.random.default_rng(hash((h, hkv, tq, tk, d)) % 2**31)
+    q = jnp.asarray(rng.normal(0, 1, (b, h, tq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (b, hkv, tk, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (b, hkv, tk, d)), jnp.float32)
+    B, S, D = default_params(tk)
+    scale = jnp.full((h,), 0.05, jnp.float32)
+    theta = jnp.tile(jnp.asarray([[B, S, D]], jnp.int32), (h, 1))
+    got = hccs_attention(q, k, v, scale, theta, causal=True,
+                         block_q=32, block_k=32)
+    want = REF.hccs_attention_ref(q, k, v, scale, theta, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-3)
+
+
+def test_fused_attention_noncausal():
+    b, h, hkv, t, d = 1, 2, 2, 40, 16
+    q = jnp.asarray(RNG.normal(0, 1, (b, h, t, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (b, hkv, t, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (b, hkv, t, d)), jnp.float32)
+    B, S, D = default_params(t)
+    scale = jnp.full((h,), 0.05, jnp.float32)
+    theta = jnp.tile(jnp.asarray([[B, S, D]], jnp.int32), (h, 1))
+    got = hccs_attention(q, k, v, scale, theta, causal=False,
+                         block_q=16, block_k=16)
+    want = REF.hccs_attention_ref(q, k, v, scale, theta, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_fused_attention_matches_model_blockwise_semantics():
+    """The fused kernel and the model's blockwise XLA path implement the same
+    'wide' HCCS semantics."""
+    from repro.configs.base import ModelConfig
+    from repro.models.attention import _blockwise_attention
+
+    b, h, hkv, t, d = 1, 4, 2, 64, 32
+    q = jnp.asarray(RNG.normal(0, 1, (b, h, t, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (b, hkv, t, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (b, hkv, t, d)), jnp.float32)
+    B, S, D = default_params(t)
+    theta = jnp.tile(jnp.asarray([[B, S, D]], jnp.int32), (h, 1))
+    scale = jnp.full((h,), 0.05, jnp.float32)
+    kernel_out = hccs_attention(q / np.sqrt(1.0), k, v, scale, theta,
+                                causal=True, block_q=32, block_k=32)
+    cfg = ModelConfig(name="x", family="dense", num_layers=1, d_model=h * d,
+                      num_heads=h, num_kv_heads=hkv, d_ff=1, vocab_size=8,
+                      attention_prob="hccs", hccs_mode="wide", block_k=32)
+    hc = {"B": jnp.full((h,), B, jnp.int32), "S": jnp.full((h,), S, jnp.int32),
+          "D": jnp.full((h,), D, jnp.int32), "scale": scale}
+    pos = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    model_out = _blockwise_attention(q, k, v, pos, None, cfg, hc)
+    np.testing.assert_allclose(np.asarray(kernel_out), np.asarray(model_out),
+                               atol=2e-4)
