@@ -25,11 +25,12 @@ def main() -> None:
     fast = not args.full
 
     from benchmarks import (fig2_fidelity, fig3_scaling, roofline_report,
-                            table1_accuracy, table2_granularity,
-                            table3_throughput)
+                            serving_throughput, table1_accuracy,
+                            table2_granularity, table3_throughput)
 
     print("name,us_per_call,derived")
     _timed("table3_throughput", table3_throughput.run, fast)
+    _timed("serving_throughput", serving_throughput.run, fast)
     _timed("fig2_fidelity", fig2_fidelity.run, fast)
     _timed("fig3_scaling", fig3_scaling.run, fast)
     _timed("roofline_report", roofline_report.run, fast)

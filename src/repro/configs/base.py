@@ -62,10 +62,21 @@ class ModelConfig:
     # Prefill fills the main cache at static offsets; decode attention merges
     # the two segments with a shared max. 0 = classic single-cache decode.
     hot_buffer: int = 0
+    # decode-step attention kernel: "fused" dispatches single-token decode to
+    # the Pallas hccs_decode kernel (kernels/decode.py) reading K/V straight
+    # from the cache with per-slot lengths; "static_max" uses the one-pass
+    # ConSmax-style variant (requires ceiling-calibrated logit scales);
+    # "none" keeps the XLA STE path. Only active for HCCS attention without
+    # hot buffers or sliding windows.
+    decode_kernel: str = "none"      # none | fused | static_max
 
     def __post_init__(self):
         if self.num_heads and not self.head_dim:
             object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.decode_kernel not in ("none", "fused", "static_max"):
+            raise ValueError(
+                f"decode_kernel must be 'none' | 'fused' | 'static_max', "
+                f"got {self.decode_kernel!r}")
 
     @property
     def padded_vocab(self) -> int:

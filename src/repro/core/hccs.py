@@ -106,6 +106,24 @@ def normalize(s: jax.Array, Z: jax.Array, mode: Mode = "i16_div",
     raise ValueError(f"unknown mode {mode!r}")
 
 
+def hccs_mode_inv(z: jax.Array, mode: str) -> jax.Array:
+    """Float form of the Stage-5 reciprocal for *linear post-hoc* scaling.
+
+    HCCS is linear in the active window, so the i16 integer reciprocal
+    truncations can be applied to an accumulated float numerator after the
+    fact: out = (sum_i s_i v_i) * hccs_mode_inv(Z, mode). Shared by the
+    blockwise XLA path and the fused decode kernel so the two stay
+    bit-consistent (plain jnp ops — safe inside a Pallas body). The i8 modes
+    floor per element after the rho multiply, which is not post-hoc linear;
+    they (and "wide") get the exact reciprocal.
+    """
+    if mode == "i16_div":
+        return jnp.floor(T_I16 / z) / T_I16
+    if mode == "i16_clb":
+        return jnp.floor(T_I16 * jnp.exp2(-jnp.floor(jnp.log2(z)))) / T_I16
+    return 1.0 / z
+
+
 def hccs_int(x_i8: jax.Array, params: HCCSParams, mode: Mode = "i16_div") -> jax.Array:
     """Full integer HCCS (Algorithm 1). int logits -> scaled int probabilities."""
     B, S, D = params.astuple()

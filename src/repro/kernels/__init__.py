@@ -2,5 +2,7 @@
 #   hccs.py         — standalone HCCS row softmax (Algorithm 1, 5 stages)
 #   softmax_bf16.py — exp-based reference baseline (paper's comparison target)
 #   attention.py    — fused two-pass HCCS flash-attention (beyond-paper)
+#   decode.py       — fused single-query HCCS decode attention (serving path)
 # ops.py holds the jit'd wrappers; ref.py the pure-jnp oracles.
-from repro.kernels.ops import hccs_softmax, softmax_reference, hccs_attention
+from repro.kernels.ops import (hccs_attention, hccs_decode, hccs_softmax,
+                               softmax_reference)

@@ -1,0 +1,190 @@
+"""Pallas TPU kernel: fused single-query HCCS decode attention.
+
+The serving hot path: one new query token per slot against the slot's KV-cache
+ring buffer. Where `hccs_mha_fused` pads the query axis to a full 128-row tile
+(127/128 wasted MXU work at decode) and masks with a single global KV length,
+this kernel is shaped for continuous batching:
+
+  * queries are packed per KV head — a (1, g, d) tile of the g GQA query heads
+    that share one K/V stream, so each K block is loaded once per group, not
+    once per query head;
+  * the KV length is per *slot* (the `lengths` vector of the slot arena), so a
+    mixed-progress batch masks each row at its own cache frontier;
+  * KV blocks entirely beyond a slot's length are skipped with `pl.when`
+    (no matmul issued), so a fresh request in a mostly-empty slot costs
+    O(length), not O(max_len).
+
+Two variants, selected statically:
+
+  row-max (default, the paper's Algorithm 1): phase 0 sweeps KV once for the
+  quantized row max (Stage 1), phase 1 re-sweeps fusing distance/clamp/affine
+  (Stages 2-3), Z (Stage 4) and s @ V, with one final normalization (Stage 5).
+  HCCS linearity means no per-block rescale — only the single 1/Z at the end.
+
+  static-max (`static_max=True`, the beyond-paper ConSmax-style variant):
+  distances are taken against the int8 ceiling (127) instead of the row max,
+  deleting phase 0 entirely — a single KV pass per decode step. Requires the
+  logit scale calibrated to place row maxima near 127 (see core/hccs.py).
+
+Normalization is mode-aware (the same post-hoc trick as the blockwise XLA
+path): HCCS linearity lets the integer reciprocal truncation be applied to the
+accumulated numerator, keeping the kernel consistent with the dense i16 modes.
+i8 modes floor per element *after* the rho multiply, which is not post-hoc
+linear; they fall back to the wide (exact 1/Z) scale, as everywhere else.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.hccs import hccs_mode_inv
+
+_NEG_BIG = -(2 ** 30)
+
+
+def _decode_kernel(scale_ref, theta_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, z_scr, acc_scr, *, num_kv: int, group: int,
+                   block_k: int, mode: str, static_max: bool,
+                   sm_denom: float):
+    i = pl.program_id(0)                      # slot * num_kv + kv head
+    ph = pl.program_id(1)                     # phase (always 0 if static_max)
+    ki = pl.program_id(2)                     # KV block
+    slot = i // num_kv
+    kv = jax.lax.rem(i, num_kv)
+    nk = len_ref[slot]                        # this slot's cache frontier
+    last_ph = 0 if static_max else 1
+
+    # per-row (= per query head) calibration columns; group is static so this
+    # unrolls to `group` scalar SMEM reads
+    heads = [kv * group + j for j in range(group)]
+    scale_col = jnp.stack([scale_ref[h] for h in heads])[:, None]
+    B_col = jnp.stack([theta_ref[h, 0] for h in heads])[:, None]
+    S_col = jnp.stack([theta_ref[h, 1] for h in heads])[:, None]
+    D_col = jnp.stack([theta_ref[h, 2] for h in heads])[:, None]
+
+    if not static_max:
+        @pl.when((ph == 0) & (ki == 0))
+        def _():
+            m_scr[...] = jnp.full_like(m_scr, _NEG_BIG)
+
+    @pl.when((ph == last_ph) & (ki == 0))
+    def _():
+        z_scr[...] = jnp.zeros_like(z_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    block_live = ki * block_k < nk            # skip blocks past the frontier
+
+    def quantized_logits():
+        q = q_ref[0].astype(jnp.float32)                       # (g, d)
+        k = k_ref[0, 0].astype(jnp.float32)                    # (bk, d)
+        logits = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+        # divide (not multiply-by-reciprocal): the XLA STE paths divide by
+        # sqrt(hd), and a 1-ulp difference here can flip jnp.round at an
+        # int8 bin boundary — bit-parity with the dense path requires the
+        # identical operation
+        logits = logits / sm_denom
+        q_int = jnp.clip(jnp.round(logits / scale_col),
+                         -128., 127.).astype(jnp.int32)        # (g, bk)
+        cols = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, q_int.shape, 1)
+        valid = cols < nk
+        return jnp.where(valid, q_int, _NEG_BIG), valid
+
+    if not static_max:
+        @pl.when(block_live & (ph == 0))
+        def _():  # Stage 1: running row max over the KV sweep
+            q_int, _ = quantized_logits()
+            bmax = jnp.max(q_int, axis=-1, keepdims=True)      # (g, 1)
+            m_scr[:, 0:1] = jnp.maximum(m_scr[:, 0:1], bmax)
+
+    @pl.when(block_live & (ph == last_ph))
+    def _():  # Stages 2-4 + s @ V accumulation
+        q_int, valid = quantized_logits()
+        m = jnp.full_like(q_int[:, 0:1], 127) if static_max else m_scr[:, 0:1]
+        delta = jnp.minimum(m - q_int, D_col)
+        s = B_col - S_col * delta
+        s = jnp.where(valid, s, 0).astype(jnp.float32)
+        z_scr[:, 0:1] += jnp.sum(s, axis=-1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)                    # (bk, d)
+        acc_scr[...] += jax.lax.dot_general(
+            s, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when((ph == last_ph) & (ki == pl.num_programs(2) - 1))
+    def _():  # Stage 5: single mode-aware normalization (shared with the
+        # blockwise XLA path so kernel and STE decode stay bit-consistent)
+        z = jnp.maximum(z_scr[:, 0:1], 1.0)
+        o_ref[0] = (acc_scr[...] * hccs_mode_inv(z, mode)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "static_max", "block_k",
+                                             "interpret"))
+def hccs_decode(q: jax.Array, k: jax.Array, v: jax.Array, lengths: jax.Array,
+                scale: jax.Array, theta: jax.Array, *, mode: str = "wide",
+                static_max: bool = False, block_k: int = 128,
+                interpret: bool = True) -> jax.Array:
+    """Single-query HCCS attention against a slot-arena KV cache.
+
+    q: (B, H, d) — one query per slot; k, v: (B, Hkv, Tmax, d) ring buffers;
+    lengths: (B,) int32 valid-KV counts (the slot frontier, *including* the
+    current token's K/V already written at lengths-1); scale: (H,) f32 per-head
+    int8 logit scales; theta: (H, 3) int32 per-head (B, S, D).
+    Returns (B, H, d) in q.dtype. Rows with lengths == 0 return zeros.
+    """
+    b, h, d = q.shape
+    _, hkv, tmax, _ = k.shape
+    assert h % hkv == 0
+    g = h // hkv
+    sm_denom = float(d) ** 0.5
+    d_pad = max(-(-d // 128) * 128, 128)
+    tk_pad = -(-tmax // block_k) * block_k
+    qg = q.astype(jnp.float32).reshape(b * hkv, g, d)
+    qp = jnp.zeros((b * hkv, g, d_pad), jnp.float32).at[:, :, :d].set(qg)
+    # the decode step runs per generated token: when the cache arena is
+    # already tile-aligned (head_dim a lane multiple, max_len a block_k
+    # multiple — the production TPU layout), pass it through without the
+    # full-cache pad-and-copy. Small-head configs (head_dim < 128, i.e.
+    # every in-repo toy config) pay the copy each step — the real fix is a
+    # lane-padded arena allocated once in init_cache (ROADMAP open item),
+    # which changes the cache layout for every attention path and so is
+    # deliberately not smuggled into this kernel.
+    if tk_pad == tmax and d_pad == d:
+        kp, vp = k, v
+    else:
+        kp = jnp.zeros((b, hkv, tk_pad, d_pad),
+                       k.dtype).at[:, :, :tmax, :d].set(k)
+        vp = jnp.zeros((b, hkv, tk_pad, d_pad),
+                       v.dtype).at[:, :, :tmax, :d].set(v)
+    num_phases = 1 if static_max else 2
+    grid = (b * hkv, num_phases, tk_pad // block_k)
+
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, num_kv=hkv, group=g,
+                          block_k=block_k, mode=mode, static_max=static_max,
+                          sm_denom=sm_denom),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),            # scale (H,)
+            pl.BlockSpec(memory_space=pltpu.SMEM),            # theta (H,3)
+            pl.BlockSpec(memory_space=pltpu.SMEM),            # lengths (B,)
+            pl.BlockSpec((1, g, d_pad), lambda i, ph, ki: (i, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d_pad),
+                         lambda i, ph, ki, KV=hkv: (i // KV, i % KV, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d_pad),
+                         lambda i, ph, ki, KV=hkv: (i // KV, i % KV, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, d_pad), lambda i, ph, ki: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hkv, g, d_pad), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 128), jnp.int32),                  # running max
+            pltpu.VMEM((g, 128), jnp.float32),                # Z accumulator
+            pltpu.VMEM((g, d_pad), jnp.float32),              # s @ V acc
+        ],
+        interpret=interpret,
+    )(scale.astype(jnp.float32), theta.astype(jnp.int32),
+      lengths.astype(jnp.int32), qp, kp, vp)
+    return out[:, :, :d].reshape(b, h, d)

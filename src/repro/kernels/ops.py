@@ -11,6 +11,7 @@ import jax.numpy as jnp
 from repro.kernels.hccs import hccs_rows as _hccs_rows
 from repro.kernels.softmax_bf16 import softmax_bf16 as _softmax_bf16
 from repro.kernels.attention import hccs_mha_fused as _hccs_mha_fused
+from repro.kernels.decode import hccs_decode as _hccs_decode
 
 
 def _interp() -> bool:
@@ -35,3 +36,11 @@ def hccs_attention(q, k, v, scale, theta, causal: bool = True,
     return _hccs_mha_fused(q, k, v, scale, theta, causal=causal,
                            block_q=block_q, block_k=block_k,
                            interpret=_interp())
+
+
+def hccs_decode(q, k, v, lengths, scale, theta, mode: str = "wide",
+                static_max: bool = False, block_k: int = 128) -> jax.Array:
+    """Fused single-query HCCS decode attention (see kernels/decode.py)."""
+    return _hccs_decode(q, k, v, lengths, scale, theta, mode=mode,
+                        static_max=static_max, block_k=block_k,
+                        interpret=_interp())

@@ -47,6 +47,49 @@ def softmax_bf16_ref(x: jax.Array) -> jax.Array:
     return (e / jnp.sum(e, axis=-1, keepdims=True)).astype(x.dtype)
 
 
+def hccs_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                    lengths: jax.Array, scale: jax.Array, theta: jax.Array,
+                    mode: str = "wide", static_max: bool = False) -> jax.Array:
+    """Oracle for the fused single-query HCCS decode kernel.
+
+    q: (B, H, d) single query per slot; k/v: (B, Hkv, Tmax, d) cache buffers;
+    lengths: (B,) valid-KV counts; scale: (H,) f32; theta: (H, 3) int32.
+    Mode-aware normalization mirrors the blockwise XLA path: the i16 integer
+    reciprocal truncations are applied post-hoc to the accumulated numerator
+    (exact by HCCS linearity); i8 modes fall back to the exact reciprocal.
+    """
+    b, h, d = q.shape
+    hkv, tk = k.shape[1], k.shape[2]
+    rep = h // hkv
+    kf = jnp.repeat(k, rep, axis=1)
+    vf = jnp.repeat(v, rep, axis=1)
+    logits = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32),
+                        kf.astype(jnp.float32))
+    logits = logits / jnp.sqrt(jnp.float32(d))
+    q_int = jnp.clip(jnp.round(logits / scale[None, :, None]), -128, 127)
+    q_int = q_int.astype(jnp.int32)
+    valid = jnp.arange(tk)[None, None, :] < lengths[:, None, None]
+    q_int = jnp.where(valid, q_int, jnp.int32(-(2 ** 30)))
+    B = theta[None, :, 0, None]
+    S = theta[None, :, 1, None]
+    D = theta[None, :, 2, None]
+    if static_max:
+        m = jnp.full_like(q_int[..., 0:1], 127)
+    else:
+        m = jnp.max(q_int, axis=-1, keepdims=True)
+    delta = jnp.minimum(m - q_int, D)
+    s = jnp.where(valid, B - S * delta, 0).astype(jnp.float32)
+    Z = jnp.maximum(s.sum(-1, keepdims=True), 1.0)
+    if mode == "i16_div":
+        inv = jnp.floor(32767.0 / Z) / 32767.0
+    elif mode == "i16_clb":
+        inv = jnp.floor(32767.0 * jnp.exp2(-jnp.floor(jnp.log2(Z)))) / 32767.0
+    else:
+        inv = 1.0 / Z
+    out = jnp.einsum("bhk,bhkd->bhd", s, vf.astype(jnp.float32)) * inv
+    return out.astype(q.dtype)
+
+
 def hccs_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                        scale: jax.Array, theta: jax.Array,
                        causal: bool = True) -> jax.Array:

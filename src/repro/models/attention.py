@@ -16,7 +16,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.hccs import HCCSParams, hccs_qat
+from repro.core.hccs import HCCSParams, hccs_mode_inv, hccs_qat
 from repro.models.layers import apply_mrope, apply_rope
 from repro.parallel.sharding import constrain
 
@@ -72,6 +72,43 @@ def init_hccs_head_params(cfg, n_ref: int = 128) -> dict:
 
 def _ste(v_hard, v_soft):
     return v_soft + jax.lax.stop_gradient(v_hard - v_soft)
+
+
+def decode_kernel_blockers(cfg) -> list:
+    """Static config conditions that keep the fused decode kernel from
+    dispatching, as human-readable strings (empty = eligible). The per-call
+    conditions — decode step t==1, cache present, hccs params present, no hot
+    buffer in flight — are checked at the dispatch site. Shared with the
+    serve launcher so its no-effect warning cannot drift from the gate."""
+    blockers = []
+    if cfg.attention_prob != "hccs":
+        blockers.append(f"attention_prob={cfg.attention_prob}")
+    if cfg.hccs_mode not in ("wide", "i16_div", "i16_clb"):
+        # i8 per-element truncation is not post-hoc linear (see kernels/decode.py)
+        blockers.append(f"hccs_mode={cfg.hccs_mode} (i8 is XLA-only)")
+    if cfg.window:
+        blockers.append(f"window={cfg.window}")
+    if cfg.hot_buffer:
+        blockers.append(f"hot_buffer={cfg.hot_buffer}")
+    return blockers
+
+
+def _project_out(out, p, b, t):
+    """Shared attention epilogue: merge heads -> output projection -> residual
+    sharding constraint. out: (B, H, T, hd) or (B, T, H*hd)."""
+    if out.ndim == 4:
+        out = out.transpose(0, 2, 1, 3).reshape(b, t, -1)
+    out = out @ p["wo"]
+    return constrain(out, "batch", "seq_act", "embed")
+
+
+def _slot_scatter(cache_kv, new_kv, lengths):
+    """Per-slot KV write: slot b's (Hkv, t, hd) update lands at its own cache
+    frontier lengths[b] (continuous batching: slots progress independently).
+    vmap-of-dynamic_update_slice lowers to a batched scatter."""
+    return jax.vmap(
+        lambda c, u, i: jax.lax.dynamic_update_slice(
+            c, u.astype(c.dtype), (0, i, 0)))(cache_kv, new_kv, lengths)
 
 
 def _block_valid(cfg, q_pos, k_pos, k_len=None):
@@ -184,14 +221,7 @@ def _blockwise_attention(q, k, v, q_pos, k_len, cfg, hccs):
         # truncation be applied to the accumulated numerator post-hoc
         # (sum_i s_i*rho*v_i = rho * sum_i s_i*v_i), keeping blockwise
         # bit-consistent with the dense path for the i16 modes.
-        mode = cfg.hccs_mode
-        if mode == "i16_div":
-            inv = jnp.floor(32767.0 / z) / 32767.0
-        elif mode == "i16_clb":
-            inv = jnp.exp2(-jnp.floor(jnp.log2(z)))
-            inv = jnp.floor(32767.0 * inv) / 32767.0
-        else:  # "wide" (default for long rows) and i8 approximations
-            inv = 1.0 / z
+        inv = hccs_mode_inv(z, cfg.hccs_mode)
         return (acc.astype(jnp.float32) * inv).astype(q.dtype)
 
     def step(carry, xs):
@@ -297,8 +327,9 @@ def apply_attention(p, x, cfg, hccs=None, positions=None, cache=None,
     v = vf.reshape(b, t, hkv, hd).transpose(0, 2, 1, 3)
 
     if positions is None:
-        base = cache["length"] if cache is not None else 0
-        positions = base + jnp.arange(t)[None, :]
+        base = cache["length"] if cache is not None else jnp.zeros((), jnp.int32)
+        # base is a scalar (lockstep decode) or a (B,) per-slot length vector
+        positions = jnp.atleast_1d(base)[:, None] + jnp.arange(t)[None, :]
         positions = jnp.broadcast_to(positions, (b, t))
     if cfg.rope == "rope":
         q = apply_rope(q, positions, cfg.rope_theta)
@@ -335,14 +366,17 @@ def apply_attention(p, x, cfg, hccs=None, positions=None, cache=None,
         parts = [_segment_partials(q, mk, mv, valid_main, m, cfg, hccs),
                  _segment_partials(q, hk, hv, valid_hot, m, cfg, hccs)]
         out = _merge_segments(parts, cfg, hccs).astype(q.dtype)
-        out = out.transpose(0, 2, 1, 3).reshape(b, t, h * hd)
-        out = out @ p["wo"]
-        return constrain(out, "batch", "seq_act", "embed"), new_cache
+        return _project_out(out, p, b, t), new_cache
 
     new_cache = None
     k_len = None
+    per_slot = cache is not None and jnp.ndim(cache["length"]) > 0
     if cache is not None:
-        if cache["k"].shape[2] == t:
+        if per_slot:
+            # continuous batching: every slot writes at its own frontier
+            kc = _slot_scatter(cache["k"], k, cache["length"])
+            vc = _slot_scatter(cache["v"], v, cache["length"])
+        elif cache["k"].shape[2] == t:
             # prompt fills the whole cache (prefill at max_len): a plain
             # overwrite avoids the dynamic-update-slice on the sharded seq
             # dim, which XLA can only partition via a full gather
@@ -359,7 +393,21 @@ def apply_attention(p, x, cfg, hccs=None, positions=None, cache=None,
         # prefill pass of a hot-buffer cache)
         new_cache = dict(cache, k=kc, v=vc, length=cache["length"] + t)
         k, v = kc, vc
-        k_len = jnp.full((b,), cache["length"] + t, jnp.int32)
+        k_len = jnp.broadcast_to(cache["length"] + t, (b,)).astype(jnp.int32)
+
+    # ---- fused decode kernel: single new token against the cache ring
+    # buffer, per-slot length masking (kernels/decode.py) ----
+    if (cache is not None and t == 1 and cfg.decode_kernel != "none"
+            and not decode_kernel_blockers(cfg) and hccs is not None
+            and "hot_k" not in cache):
+        from repro.kernels.ops import hccs_decode
+        theta = jnp.stack([hccs["B"], hccs["S"], hccs["D"]], axis=-1)
+        o = hccs_decode(q[:, :, 0, :].astype(jnp.float32),
+                        k, v, k_len, hccs["scale"], theta,
+                        mode=cfg.hccs_mode,
+                        static_max=(cfg.decode_kernel == "static_max"))
+        out = o.astype(q.dtype).reshape(b, 1, h * hd)
+        return _project_out(out, p, b, 1), new_cache
 
     tk = k.shape[2]
     use_blockwise = (cfg.attention_impl == "blockwise" or
@@ -375,6 +423,4 @@ def apply_attention(p, x, cfg, hccs=None, positions=None, cache=None,
         valid = _block_valid(cfg, positions, jnp.arange(tk), k_len)
         out = _dense_attention(q, k, v, valid, cfg, hccs)
 
-    out = out.transpose(0, 2, 1, 3).reshape(b, t, h * hd)
-    out = out @ p["wo"]
-    return constrain(out, "batch", "seq_act", "embed"), new_cache
+    return _project_out(out, p, b, t), new_cache

@@ -82,7 +82,9 @@ def forward(weights, hccs, batch, cfg, cache=None, decode: bool = False):
     length = cache["length"] if cache is not None else jnp.zeros((), jnp.int32)
     positions = batch.get("positions")
     if positions is None:
-        positions = length + jnp.arange(t)[None, :]
+        # length is a scalar (lockstep decode / training) or a (B,) per-slot
+        # vector (continuous batching: every slot at its own position)
+        positions = jnp.atleast_1d(length)[:, None] + jnp.arange(t)[None, :]
         positions = jnp.broadcast_to(positions, (b, t))
     if cfg.rope == "learned":
         x = x + jnp.take(weights["pos_embed"], positions, axis=0)
@@ -173,13 +175,22 @@ def cls_loss(weights, hccs, batch, cfg):
     return loss, {"cls_loss": loss, "acc": acc, "aux_loss": aux}
 
 
-def init_cache(cfg, batch_size: int, max_len: int, cache_dtype=jnp.bfloat16):
+def init_cache(cfg, batch_size: int, max_len: int, cache_dtype=jnp.bfloat16,
+               per_slot_lengths: bool = False):
+    """per_slot_lengths=True makes `length` a (batch,) vector — the slot-arena
+    layout for continuous batching, where every slot decodes at its own
+    frontier (attention then masks/writes per slot)."""
     one = blocks.init_layer_cache(cfg, batch_size, max_len, cache_dtype)
     layers = jax.tree.map(
         lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape), one)
     layers = jax.tree.map(jnp.asarray, layers)
-    c = {"layers": layers, "length": jnp.zeros((), jnp.int32)}
+    shape = (batch_size,) if per_slot_lengths else ()
+    c = {"layers": layers, "length": jnp.zeros(shape, jnp.int32)}
     if cfg.hot_buffer > 0:
+        if per_slot_lengths:
+            raise ValueError("hot buffers are lockstep-only: they track a "
+                             "single scalar prompt_len, incompatible with "
+                             "per-slot lengths")
         c["prompt_len"] = jnp.zeros((), jnp.int32)
     return c
 

@@ -1,1 +1,4 @@
-from repro.serve.engine import Request, ServeEngine
+# engine.py     — wave scheduler: same-length prompt batches, lockstep decode
+# continuous.py — slot arena: continuous batching with per-slot lengths
+from repro.serve.continuous import ContinuousEngine
+from repro.serve.engine import Request, ServeEngine, sample_tokens

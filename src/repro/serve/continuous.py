@@ -1,0 +1,202 @@
+"""Slot-based continuous batching: the decode-side serving engine.
+
+Layout — a fixed (max_batch, max_len) KV-cache *slot arena* plus per-slot
+host-side bookkeeping:
+
+    slot arena (device)                      slot table (host)
+    ┌──────────────────────────────┐
+    │ slot 0  K/V ███████░░░░░░░░  │ ← len 7   live, req #12, 3/24 tokens
+    │ slot 1  K/V ██████████████░  │ ← len 14  live, req #9, 11/16 tokens
+    │ slot 2  K/V ███░░░░░░░░░░░░  │ ← len 3   free (stale KV, masked)
+    │ slot 3  K/V █████████░░░░░░  │ ← len 9   live, req #14, 1/32 tokens
+    └──────────────────────────────┘
+    cache["length"] = [7, 14, 3, 9]  (per-slot frontier vector)
+
+Unlike the wave engine (engine.py) — which batches same-length prompts and
+decodes lockstep until the *slowest* member drains — slots progress
+independently: a finished slot is freed immediately and a queued request is
+admitted into it between decode steps, so the batch stays full under
+mixed-length traffic. Admission prefills the new request alone (prompt padded
+to a power-of-two bucket, so jit retraces O(log max_len) times, not per
+length) and scatters its K/V into the freed slot.
+
+Dead/free slots still ride along in the batched decode step (static shapes);
+their outputs are discarded on the host, their frontier is frozen, and their
+stale KV is never read by live slots — attention masks every slot at its own
+`length` and slots are independent on the batch axis.
+
+With cfg.decode_kernel != "none", the decode step's attention dispatches to
+the fused Pallas hccs_decode kernel (kernels/decode.py) instead of the XLA
+STE path — same HCCS semantics, zero score traffic to HBM.
+
+When to prefer which engine:
+  wave       — offline/batch inference with uniform prompt+output lengths
+               (no admission overhead, whole-cache prefill overwrite);
+  continuous — online serving with mixed lengths/arrival times: tokens/sec
+               scales with batch occupancy, not with the slowest request.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.serve.engine import Request, sample_tokens, validate_prompt
+
+
+class ContinuousEngine:
+    def __init__(self, params, cfg, *, max_batch: int = 8,
+                 max_len: int = 512, eos_id: int | None = None,
+                 cache_dtype=jnp.float32, min_bucket: int = 16):
+        if cfg.hot_buffer != 0:
+            raise ValueError(
+                "continuous batching uses the slot arena, not hot buffers "
+                f"(cfg.hot_buffer={cfg.hot_buffer}); use the wave engine or "
+                "set hot_buffer=0")
+        self.w = params["weights"]
+        self.hccs = params["hccs"]
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.cache_dtype = cache_dtype
+        self.min_bucket = min_bucket
+        self._queue: list[Request] = []
+        self._key = jax.random.PRNGKey(0)
+
+        # slot arena + host slot table
+        self._cache = M.init_cache(cfg, max_batch, max_len, cache_dtype,
+                                   per_slot_lengths=True)
+        self._slots: list[Request | None] = [None] * max_batch
+        self._live = np.zeros(max_batch, bool)
+        self._lengths = np.zeros(max_batch, np.int32)
+        self._last = np.zeros(max_batch, np.int32)    # next token to feed
+        self._temps = np.zeros(max_batch)
+
+        cfg_ = cfg
+
+        # donate the cache: XLA aliases the arena in place instead of
+        # copying the whole (L, B, Hkv, max_len, hd) K/V buffers every token
+        @functools.partial(jax.jit, donate_argnums=(3,))
+        def _decode(w, hccs, tokens, cache):
+            return M.decode_step(w, hccs, tokens, cache, cfg_)
+
+        @jax.jit
+        def _prefill(w, hccs, toks, true_len):
+            # bucket-padded single-request prefill: cache sized exactly to the
+            # bucket so attention takes the whole-cache overwrite path; the
+            # pad tokens' K/V land beyond true_len and are masked forever by
+            # the slot's length
+            bucket = toks.shape[1]
+            cache = M.init_cache(cfg_, 1, bucket, cache_dtype)
+            x, cache, _ = M.forward(w, hccs, {"tokens": toks}, cfg_,
+                                    cache=cache)
+            h_last = jax.lax.dynamic_slice_in_dim(x, true_len - 1, 1, axis=1)
+            logits = M.logits_from_hidden(w, h_last, cfg_)
+            return logits[:, 0], cache["layers"]
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def _insert(arena_layers, new_layers, slot):
+            # scatter the (L, 1, ...) prefilled cache into the arena at the
+            # batch index `slot`; K/V seq dims shorter than max_len land at
+            # offset 0 (the slot owns positions [0, bucket))
+            def one(arena, new):
+                start = (0, slot) + (0,) * (arena.ndim - 2)
+                return jax.lax.dynamic_update_slice(
+                    arena, new.astype(arena.dtype), start)
+            return jax.tree.map(one, arena_layers, new_layers)
+
+        self._decode = _decode
+        self._prefill = _prefill
+        self._insert = _insert
+
+    # ------------------------------------------------------------- queue --
+
+    def submit(self, req: Request):
+        validate_prompt(req.prompt, self.max_len)
+        self._queue.append(req)
+
+    def _bucket(self, plen: int) -> int:
+        b = self.min_bucket
+        while b < plen:
+            b *= 2
+        return min(b, self.max_len)
+
+    # ------------------------------------------------------------- slots --
+
+    def _finish(self, slot: int) -> Request:
+        req = self._slots[slot]
+        req.done = True
+        self._slots[slot] = None
+        self._live[slot] = False
+        self._temps[slot] = 0.0
+        return req
+
+    def _admit(self) -> list[Request]:
+        """Fill free slots from the queue; returns requests that finished at
+        prefill (max_new_tokens == 1 or immediate EOS)."""
+        finished = []
+        while self._queue and not self._live.all():
+            slot = int(np.argmin(self._live))          # first free slot
+            req = self._queue.pop(0)
+            plen = len(req.prompt)
+            bucket = self._bucket(plen)
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, :plen] = req.prompt
+            logits, layers = self._prefill(self.w, self.hccs,
+                                           jnp.asarray(toks), plen)
+            self._cache = dict(self._cache, layers=self._insert(
+                self._cache["layers"], layers, slot))
+            self._slots[slot] = req
+            self._live[slot] = True
+            self._lengths[slot] = plen
+            self._temps[slot] = req.temperature
+            self._key, tok = sample_tokens(self._key, logits,
+                                           np.asarray([req.temperature]))
+            tok = int(tok[0])
+            req.out_tokens.append(tok)
+            self._last[slot] = tok
+            if (len(req.out_tokens) >= req.max_new_tokens or
+                    (self.eos_id is not None and tok == self.eos_id)):
+                finished.append(self._finish(slot))
+        return finished
+
+    def _step(self) -> list[Request]:
+        """One batched decode step over the arena; returns newly finished."""
+        live = self._live.copy()
+        self._cache = dict(self._cache, length=jnp.asarray(self._lengths))
+        tokens = jnp.asarray(self._last[:, None])
+        logits, self._cache = self._decode(self.w, self.hccs, tokens,
+                                           self._cache)
+        # the jitted step advances every slot's frontier; dead slots' writes
+        # are garbage parked one past their final token — freeze them here so
+        # they overwrite the same masked cell instead of marching on
+        self._lengths = np.where(live, self._lengths + 1, self._lengths)
+        self._key, nxt = sample_tokens(self._key, logits,
+                                       np.where(live, self._temps, 0.0))
+        finished = []
+        for i in np.flatnonzero(live):
+            req = self._slots[i]
+            tok = int(nxt[i])
+            req.out_tokens.append(tok)
+            self._last[i] = tok
+            if (len(req.out_tokens) >= req.max_new_tokens or
+                    (self.eos_id is not None and tok == self.eos_id) or
+                    self._lengths[i] >= self.max_len - 1):
+                finished.append(self._finish(i))
+        return finished
+
+    # --------------------------------------------------------------- run --
+
+    def run(self) -> list[Request]:
+        """Serve the whole queue; returns finished requests (uid order
+        follows completion, not submission)."""
+        finished: list[Request] = []
+        while self._queue or self._live.any():
+            finished.extend(self._admit())
+            if self._live.any():
+                finished.extend(self._step())
+        return finished

@@ -31,6 +31,28 @@ class Request:
     done: bool = False
 
 
+def validate_prompt(prompt, max_len: int):
+    """Shared admission bound: the prompt must fit the cache with room for at
+    least one generated token. Both engines enforce the same limit so a
+    request is never accepted by one scheduler and rejected by the other."""
+    if len(prompt) < 1 or len(prompt) > max_len - 1:
+        raise ValueError(
+            f"prompt length {len(prompt)} not in [1, {max_len - 1}]")
+
+
+def sample_tokens(key, logits, temps: np.ndarray):
+    """Per-row sampling: greedy where temps == 0, categorical otherwise.
+    Returns (new_key, tokens (B,) np.int64). Greedy-only batches never consume
+    the key, so greedy decoding is scheduler-independent."""
+    greedy = np.asarray(jnp.argmax(logits, axis=-1))
+    if (temps > 0).any():
+        key, sub = jax.random.split(key)
+        sampled = np.asarray(jax.random.categorical(
+            sub, logits / jnp.maximum(jnp.asarray(temps)[:, None], 1e-6)))
+        return key, np.where(temps > 0, sampled, greedy)
+    return key, greedy
+
+
 class ServeEngine:
     def __init__(self, params, cfg, *, max_batch: int = 8,
                  max_len: int = 512, eos_id: int | None = None,
@@ -53,16 +75,12 @@ class ServeEngine:
         self._decode = _decode
 
     def submit(self, req: Request):
+        validate_prompt(req.prompt, self.max_len)
         self._queue.append(req)
 
     def _sample(self, logits, temps: np.ndarray):
-        greedy = np.asarray(jnp.argmax(logits, axis=-1))
-        if (temps > 0).any():
-            self._key, sub = jax.random.split(self._key)
-            sampled = np.asarray(jax.random.categorical(
-                sub, logits / jnp.maximum(jnp.asarray(temps)[:, None], 1e-6)))
-            return np.where(temps > 0, sampled, greedy)
-        return greedy
+        self._key, toks = sample_tokens(self._key, logits, temps)
+        return toks
 
     def _next_wave(self) -> list[Request]:
         if not self._queue:
@@ -85,14 +103,27 @@ class ServeEngine:
                                   self.cfg, max_len=self.max_len,
                                   cache_dtype=self.cache_dtype)
         nxt = self._sample(logits, temps)
-        for r, t in zip(wave, nxt):
-            r.out_tokens.append(int(t))
         live = np.ones(b, bool)
+        # the prefill-sampled token counts against the budget and may be EOS,
+        # exactly as in the continuous engine's admission — scheduling must
+        # never change what is generated
+        for i, r in enumerate(wave):
+            tok = int(nxt[i])
+            r.out_tokens.append(tok)
+            if (len(r.out_tokens) >= r.max_new_tokens or
+                    (self.eos_id is not None and tok == self.eos_id)):
+                r.done = True
+                live[i] = False
         max_steps = max(r.max_new_tokens for r in wave) - 1
         for _ in range(max(max_steps, 0)):
+            if not live.any():
+                break
             last = jnp.asarray(nxt[:, None].astype(np.int32))
             logits, cache = self._decode(self.w, self.hccs, last, cache)
-            nxt = self._sample(logits, temps)
+            # finished rows sample greedily (free): keeps the categorical
+            # branch + PRNG split from running for discarded outputs, same
+            # as the continuous engine's dead-slot handling
+            nxt = self._sample(logits, np.where(live, temps, 0.0))
             for i, r in enumerate(wave):
                 if not live[i]:
                     continue

@@ -1,0 +1,63 @@
+"""Shared test substrate: CPU pin, tiny-config factory, seeded RNGs, markers.
+
+Markers:
+  slow   — heavyweight integration cases (multi-minute compiles / subprocess
+           dry-runs). Skipped by default; run with ``--runslow`` (CI has a
+           separate non-blocking job for them).
+  kernel — Pallas kernel parity tests (interpret mode on CPU, Mosaic on TPU).
+"""
+import jax
+import numpy as np
+import pytest
+
+# one process-wide pin instead of per-module jax.config calls: kernels are
+# validated in interpret mode and every numeric test is platform-deterministic
+jax.config.update("jax_platform_name", "cpu")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: heavyweight integration test (needs --runslow)")
+    config.addinivalue_line(
+        "markers", "kernel: Pallas kernel parity test (interpret mode on CPU)")
+
+
+def pytest_addoption(parser):
+    parser.addoption("--runslow", action="store_true", default=False,
+                     help="also run tests marked slow")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip_slow = pytest.mark.skip(reason="slow: pass --runslow to run")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)
+
+
+@pytest.fixture
+def rng():
+    """Seeded numpy Generator — deterministic across runs and platforms."""
+    return np.random.default_rng(42)
+
+
+@pytest.fixture
+def seeded_key():
+    """Seeded jax PRNG key."""
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture
+def tiny_cfg():
+    """Factory for a tiny dense HCCS model config; override fields via kwargs."""
+    from repro.configs.base import ModelConfig
+
+    def make(**kw):
+        base = dict(name="t", family="dense", num_layers=2, d_model=64,
+                    num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256,
+                    vocab_pad_multiple=1)
+        base.update(kw)
+        return ModelConfig(**base)
+
+    return make

@@ -1,0 +1,130 @@
+"""Parity tests for the fused single-query HCCS decode kernel.
+
+hccs_decode is asserted against the pure-jnp oracle (kernels/ref.py) and
+against hccs_mha_fused (the prefill kernel) on the last causal row, covering
+causal semantics, GQA packing, per-slot padded lengths, and per-head theta.
+All cases run in interpret mode (CPU); on TPU the same calls lower to Mosaic.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.constraints import default_params
+from repro.kernels import hccs_attention, hccs_decode
+from repro.kernels import ref as REF
+
+pytestmark = pytest.mark.kernel
+
+
+def _case(rng, b, h, hkv, tmax, d, uniform_theta=True):
+    q = jnp.asarray(rng.normal(0, 1, (b, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (b, hkv, tmax, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (b, hkv, tmax, d)), jnp.float32)
+    B, S, D = default_params(max(tmax, 4))
+    theta = np.tile(np.asarray([[B, S, D]], np.int32), (h, 1))
+    if not uniform_theta:
+        # distinct per-head calibration: perturb D and zero one head's S
+        theta[:, 2] = np.maximum(theta[:, 2] - 8 * np.arange(h), 1)
+        theta[-1, 1] = 0
+    scale = jnp.full((h,), 0.05, jnp.float32)
+    return q, k, v, scale, jnp.asarray(theta)
+
+
+@pytest.mark.parametrize("gqa", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("tmax,d", [(64, 32), (130, 32), (96, 128)])
+def test_decode_vs_oracle_full_length(gqa, tmax, d, rng):
+    h, hkv = gqa
+    b = 3
+    q, k, v, scale, theta = _case(rng, b, h, hkv, tmax, d)
+    lengths = jnp.full((b,), tmax, jnp.int32)
+    got = hccs_decode(q, k, v, lengths, scale, theta, block_k=32)
+    want = REF.hccs_decode_ref(q, k, v, lengths, scale, theta)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-3)
+
+
+def test_decode_padded_lengths_mask_stale_cache(rng):
+    """Mixed-progress slots: entries past each slot's length must not leak.
+    Poisoning the tail of the cache with huge values must not change output."""
+    b, h, hkv, tmax, d = 4, 4, 2, 96, 32
+    q, k, v, scale, theta = _case(rng, b, h, hkv, tmax, d)
+    lengths = jnp.asarray([1, 17, 64, 96], jnp.int32)
+    got = hccs_decode(q, k, v, lengths, scale, theta, block_k=32)
+    want = REF.hccs_decode_ref(q, k, v, lengths, scale, theta)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-3)
+    # poison beyond the frontier
+    mask = (np.arange(tmax)[None, None, :, None]
+            >= np.asarray(lengths)[:, None, None, None])
+    k_p = jnp.where(jnp.asarray(mask), 1e6, k)
+    v_p = jnp.where(jnp.asarray(mask), -1e6, v)
+    poisoned = hccs_decode(q, k_p, v_p, lengths, scale, theta, block_k=32)
+    np.testing.assert_allclose(np.asarray(poisoned), np.asarray(got),
+                               atol=1e-6)
+
+
+def test_decode_zero_length_slot_returns_zeros(rng):
+    b, h, hkv, tmax, d = 2, 4, 2, 64, 32
+    q, k, v, scale, theta = _case(rng, b, h, hkv, tmax, d)
+    lengths = jnp.asarray([0, 64], jnp.int32)
+    out = np.asarray(hccs_decode(q, k, v, lengths, scale, theta, block_k=32))
+    np.testing.assert_allclose(out[0], 0.0, atol=1e-7)
+    assert np.abs(out[1]).max() > 0
+
+
+def test_decode_per_head_theta(rng):
+    b, h, hkv, tmax, d = 2, 4, 2, 64, 32
+    q, k, v, scale, theta = _case(rng, b, h, hkv, tmax, d,
+                                  uniform_theta=False)
+    lengths = jnp.asarray([40, 64], jnp.int32)
+    got = hccs_decode(q, k, v, lengths, scale, theta, block_k=32)
+    want = REF.hccs_decode_ref(q, k, v, lengths, scale, theta)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-3)
+
+
+@pytest.mark.parametrize("mode", ["wide", "i16_div", "i16_clb"])
+def test_decode_normalization_modes(mode, rng):
+    b, h, hkv, tmax, d = 2, 4, 2, 64, 32
+    q, k, v, scale, theta = _case(rng, b, h, hkv, tmax, d)
+    lengths = jnp.asarray([33, 64], jnp.int32)
+    got = hccs_decode(q, k, v, lengths, scale, theta, mode=mode, block_k=32)
+    want = REF.hccs_decode_ref(q, k, v, lengths, scale, theta, mode=mode)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-3)
+
+
+def test_decode_static_max_single_pass(rng):
+    b, h, hkv, tmax, d = 2, 4, 2, 64, 32
+    q, k, v, scale, theta = _case(rng, b, h, hkv, tmax, d)
+    # calibrate the scale so row maxima land near the int8 ceiling (the
+    # static-max operating regime; see core/hccs.py)
+    lengths = jnp.asarray([48, 64], jnp.int32)
+    got = hccs_decode(q, k, v, lengths, scale, theta, static_max=True,
+                      block_k=32)
+    want = REF.hccs_decode_ref(q, k, v, lengths, scale, theta,
+                               static_max=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-3)
+
+
+def test_decode_matches_fused_prefill_last_row(rng):
+    """The decode kernel on the last causal query row must agree with the
+    fused prefill kernel's last row (same 'wide' semantics, same KV window)."""
+    b, h, hkv, t, d = 2, 4, 2, 64, 32
+    qfull = jnp.asarray(rng.normal(0, 1, (b, h, t, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (b, hkv, t, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (b, hkv, t, d)), jnp.float32)
+    B, S, D = default_params(t)
+    scale = jnp.full((h,), 0.05, jnp.float32)
+    theta = jnp.tile(jnp.asarray([[B, S, D]], jnp.int32), (h, 1))
+    full = hccs_attention(qfull, k, v, scale, theta, causal=True,
+                          block_q=32, block_k=32)
+    dec = hccs_decode(qfull[:, :, -1, :], k, v,
+                      jnp.full((b,), t, jnp.int32), scale, theta, block_k=32)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, :, -1, :]),
+                               atol=5e-3)
+
+
+def test_decode_block_size_invariant(rng):
+    b, h, hkv, tmax, d = 2, 4, 2, 96, 32
+    q, k, v, scale, theta = _case(rng, b, h, hkv, tmax, d)
+    lengths = jnp.asarray([31, 96], jnp.int32)
+    a = hccs_decode(q, k, v, lengths, scale, theta, block_k=16)
+    c = hccs_decode(q, k, v, lengths, scale, theta, block_k=96)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=1e-5)

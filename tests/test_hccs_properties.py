@@ -1,0 +1,93 @@
+"""Property-based tests for the HCCS core (hypothesis-driven).
+
+These are the randomized generalizations of the deterministic unit tests in
+test_hccs_core.py. The whole module skips cleanly when `hypothesis` is not
+installed (bare environments run the deterministic suite only).
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+import hypothesis.strategies as st  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
+
+from repro.core import HCCSParams, MODES, hccs_int, leading_bit  # noqa: E402
+from repro.core.constraints import (default_params, feasible_grid,  # noqa: E402
+                                    is_feasible, validate_params)
+
+
+def make_params(B, S, D):
+    return HCCSParams(B=jnp.int32(B), S=jnp.int32(S), D=jnp.int32(D))
+
+
+@st.composite
+def rows_and_params(draw):
+    n = draw(st.integers(4, 256))
+    B, S, D = default_params(n)
+    row = draw(st.lists(st.integers(-128, 127), min_size=n, max_size=n))
+    return np.asarray(row, np.int32), (B, S, D), n
+
+
+class TestInvariantProperties:
+    @settings(max_examples=80, deadline=None)
+    @given(rows_and_params())
+    def test_nonnegative_bounded_unit_sum(self, data):
+        row, (B, S, D), n = data
+        p = make_params(B, S, D)
+        for mode in MODES:
+            out = np.asarray(hccs_int(jnp.asarray(row)[None], p, mode))[0]
+            T = 32767 if mode.startswith("i16") else 255
+            assert (out >= 0).all(), mode
+            assert (out <= T).all(), mode
+            if mode == "i16_div":
+                # rho = floor(T/Z) => sum = Z*rho in (T - Z, T]: the paper's
+                # "≈ T up to integer truncation error", made precise
+                m = row.max()
+                delta = np.minimum(m - row, D)
+                Z = int((B - S * delta).sum())
+                assert out.sum() <= T
+                assert out.sum() > T - Z
+
+    @settings(max_examples=80, deadline=None)
+    @given(rows_and_params())
+    def test_monotonicity_order_preserved(self, data):
+        """x_i >= x_j  =>  p_i >= p_j (the paper's ordering guarantee)."""
+        row, (B, S, D), n = data
+        p = make_params(B, S, D)
+        out = np.asarray(hccs_int(jnp.asarray(row)[None], p, "i16_div"))[0]
+        order = np.argsort(row, kind="stable")
+        assert (np.diff(out[order]) >= 0).all()
+
+    @settings(max_examples=50, deadline=None)
+    @given(rows_and_params(), st.integers(-20, 20))
+    def test_shift_invariance(self, data, c):
+        """HCCS depends on x only through max-centered distances."""
+        row, (B, S, D), n = data
+        shifted = np.clip(row.astype(np.int64) + c, -128, 127).astype(np.int32)
+        if not np.array_equal(
+                np.clip(row + c, -128, 127) - c, row):  # clipping destroyed it
+            return
+        p = make_params(B, S, D)
+        a = hccs_int(jnp.asarray(row)[None], p, "i16_div")
+        b = hccs_int(jnp.asarray(shifted)[None], p, "i16_div")
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestConstraintProperties:
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(4, 4096))
+    def test_feasible_grid_is_feasible(self, n):
+        g = feasible_grid(n, num_b=4, num_s=4, d_values=(16, 64, 127))
+        assert len(g) > 0
+        for B, S, D in g:
+            assert is_feasible(int(B), int(S), int(D), n)
+            validate_params(B, S, D, n)
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.integers(1, 2 ** 30))
+    def test_leading_bit_brackets(self, z):
+        k = int(np.asarray(leading_bit(jnp.int32(z))))
+        assert 2 ** k <= z < 2 ** (k + 1)

@@ -11,6 +11,8 @@ from repro.kernels import ref as REF
 jax.config.update("jax_platform_name", "cpu")
 RNG = np.random.default_rng(42)
 
+pytestmark = pytest.mark.kernel
+
 
 def _theta(n, rows):
     B, S, D = default_params(n)

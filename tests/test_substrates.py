@@ -61,6 +61,7 @@ class TestCheckpoint:
             kept = sorted(x for x in os.listdir(d) if x.startswith("step_"))
             assert len(kept) == 2
 
+    @pytest.mark.slow
     def test_async_save(self):
         from repro.checkpoint import CheckpointManager
         tree = {"w": jnp.arange(8.0)}
@@ -72,6 +73,7 @@ class TestCheckpoint:
             np.testing.assert_array_equal(np.asarray(restored["w"]),
                                           np.arange(8.0))
 
+    @pytest.mark.slow
     def test_elastic_restore_new_sharding(self):
         """Checkpoint written unsharded restores under explicit shardings
         (the elastic-remesh path)."""
@@ -164,6 +166,7 @@ class TestSSD:
         np.testing.assert_allclose(np.asarray(state_final), np.asarray(state),
                                    atol=2e-4)
 
+    @pytest.mark.slow
     def test_chunk_size_invariance(self):
         from repro.models.ssm import apply_ssd, init_ssm
         cfg4 = tiny_cfg(family="ssm", num_heads=0, num_kv_heads=0, d_ff=0,
@@ -201,6 +204,7 @@ class TestOptim:
                                           state, tcfg)
         assert float(stats["grad_norm"]) > 100
 
+    @pytest.mark.slow
     def test_compression_error_feedback_unbiased(self):
         """With EF, the running sum of dequantized grads tracks the true sum."""
         from repro.optim import compression
