@@ -1,18 +1,26 @@
-"""Serving throughput: wave lockstep vs slot-based continuous batching.
+"""Serving throughput: wave lockstep vs slot-based continuous batching vs
+paged-KV chunked prefill.
 
 A mixed prompt/output-length workload (the online-serving regime): prompt
 lengths and output budgets drawn from skewed distributions, so the wave
 scheduler fragments into small same-length waves and each wave is held
-hostage by its slowest member, while the continuous engine back-fills freed
-slots every step. Reported tokens/sec is generated tokens over wall clock,
-after a warm-up pass that covers every jit shape (prefill buckets + decode)
-for both engines, so compile time is excluded from the comparison.
+hostage by its slowest member, while the continuous/paged engines back-fill
+freed slots every step. Reported tokens/sec is generated tokens over wall
+clock, after a warm-up pass that covers every jit shape (prefill buckets or
+chunk widths + decode) for each engine, so compile time is excluded.
 
-    PYTHONPATH=src python -m benchmarks.serving_throughput
+Machine-readable output: every run writes BENCH_serving.json (override with
+--json) with tok/s, persistent KV-cache bytes, and mean batch occupancy per
+engine, so the perf trajectory is tracked across PRs.
+
+    PYTHONPATH=src python -m benchmarks.serving_throughput \
+        --engine wave --engine paged --json out.json
 """
 from __future__ import annotations
 
+import argparse
 import copy
+import json
 import time
 
 import jax
@@ -20,11 +28,14 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import model as M
-from repro.serve import ContinuousEngine, Request, ServeEngine
+from repro.serve import (ContinuousEngine, PagedEngine, Request, ServeEngine,
+                         kv_cache_bytes)
 
 VOCAB = 512
 MAX_BATCH = 8
 MAX_LEN = 128
+BLOCK_SIZE = 16
+DEFAULT_JSON = "BENCH_serving.json"
 
 
 def _cfg():
@@ -48,6 +59,30 @@ def _workload(rng, n):
     return reqs
 
 
+def _engine_factories(cfg, params):
+    mk = dict(max_batch=MAX_BATCH, max_len=MAX_LEN)
+    return {
+        "wave": lambda: ServeEngine(params, cfg, **mk),
+        "continuous": lambda: ContinuousEngine(params, cfg, **mk),
+        "continuous+kernel": lambda: ContinuousEngine(
+            params, cfg.replace(decode_kernel="fused"), **mk),
+        "paged": lambda: PagedEngine(params, cfg, block_size=BLOCK_SIZE, **mk),
+        "paged+kernel": lambda: PagedEngine(
+            params, cfg.replace(decode_kernel="fused"),
+            block_size=BLOCK_SIZE, **mk),
+    }
+
+
+def _cache_bytes(eng):
+    cache = getattr(eng, "_cache", None)
+    if cache is None:
+        # the wave engine allocates a fresh (max_batch, max_len) slot cache
+        # per wave rather than holding one; measure that reservation
+        cache = M.init_cache(eng.cfg, eng.max_batch, eng.max_len,
+                             eng.cache_dtype)
+    return kv_cache_bytes(cache)
+
+
 def _serve(make_engine, warmup, reqs):
     """Warm and time the SAME engine instance: the jitted closures live on
     the instance, so a throwaway warm-up engine would discard its compile
@@ -56,50 +91,74 @@ def _serve(make_engine, warmup, reqs):
     for r in copy.deepcopy(warmup):
         eng.submit(r)
     eng.run()
+    s0 = getattr(eng, "occupancy_sum", 0.0)
+    n0 = getattr(eng, "occupancy_steps", 0)
     work = copy.deepcopy(reqs)
     for r in work:
         eng.submit(r)
     t0 = time.perf_counter()
     done = eng.run()
     dt = time.perf_counter() - t0
-    return sum(len(r.out_tokens) for r in done), dt
+    # mean live fraction over the TIMED steps only (delta past the warm-up)
+    n = getattr(eng, "occupancy_steps", 0) - n0
+    occ = (getattr(eng, "occupancy_sum", 0.0) - s0) / n if n else None
+    return dict(tokens=sum(len(r.out_tokens) for r in done), seconds=dt,
+                cache_bytes=_cache_bytes(eng),
+                occupancy=occ)
 
 
-def run(fast: bool = True):
+def run(fast: bool = True, engines: list | None = None,
+        json_path: str = DEFAULT_JSON):
     cfg = _cfg()
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
     n = 24 if fast else 96
     reqs = _workload(rng, n)
     # warm-up must cover every jit shape the timed run hits: same workload
-    # distribution (prefill buckets + decode batch sizes) drawn once more
+    # distribution (prefill buckets / chunk widths + decode) drawn once more
     warmup = _workload(np.random.default_rng(0), n)
 
-    engines = {
-        "wave": lambda: ServeEngine(params, cfg, max_batch=MAX_BATCH,
-                                    max_len=MAX_LEN),
-        "continuous": lambda: ContinuousEngine(params, cfg,
-                                               max_batch=MAX_BATCH,
-                                               max_len=MAX_LEN),
-        "continuous+kernel": lambda: ContinuousEngine(
-            params, cfg.replace(decode_kernel="fused"),
-            max_batch=MAX_BATCH, max_len=MAX_LEN),
-    }
+    factories = _engine_factories(cfg, params)
+    names = engines or list(factories)
 
     out = []
-    print("\n# serving throughput: scheduler, tokens, s, tok/s, vs_wave")
+    print("\n# serving throughput: scheduler, tokens, s, tok/s, vs_first, "
+          "cache_MB, occupancy")
     base_tps = None
-    for name, make in engines.items():
-        tokens, dt = _serve(make, warmup, reqs)
-        tps = tokens / dt
+    for name in names:
+        row = _serve(factories[name], warmup, reqs)
+        tps = row["tokens"] / row["seconds"]
         if base_tps is None:
             base_tps = tps
-        print("serving,%s,%d,%.2f,%.1f,%.2fx" % (name, tokens, dt, tps,
-                                                 tps / base_tps))
-        out.append(dict(scheduler=name, tokens=tokens, seconds=dt,
-                        tok_per_s=tps, vs_wave=tps / base_tps))
+        occ = "-" if row["occupancy"] is None else "%.2f" % row["occupancy"]
+        print("serving,%s,%d,%.2f,%.1f,%.2fx,%.2f,%s" % (
+            name, row["tokens"], row["seconds"], tps, tps / base_tps,
+            row["cache_bytes"] / 2**20, occ))
+        out.append(dict(scheduler=name, tok_per_s=tps,
+                        vs_first=tps / base_tps, **row))
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(dict(benchmark="serving_throughput",
+                           max_batch=MAX_BATCH, max_len=MAX_LEN,
+                           block_size=BLOCK_SIZE, requests=n, engines=out),
+                      f, indent=2)
+        print(f"# wrote {json_path}")
     return out
 
 
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", action="append",
+                    choices=["wave", "continuous", "continuous+kernel",
+                             "paged", "paged+kernel"],
+                    help="engine row(s) to run (default: all)")
+    ap.add_argument("--json", default=DEFAULT_JSON,
+                    help="output path for the machine-readable results")
+    ap.add_argument("--full", action="store_true",
+                    help="4x larger workload")
+    args = ap.parse_args()
+    run(fast=not args.full, engines=args.engine, json_path=args.json)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.data import LMStream, LMStreamConfig
-from repro.serve import ContinuousEngine, Request, ServeEngine
+from repro.serve import ContinuousEngine, PagedEngine, Request, ServeEngine
 from repro.train import make_train_state, make_train_step, train_loop
 
 VOCAB, SEQ = 512, 64
@@ -47,14 +47,18 @@ for i in range(16):
                         max_new_tokens=int(rng.choice([8, 16, 24])),
                         temperature=0.7 if i % 2 else 0.0))
 
-# both engines use the XLA STE decode path so the comparison isolates the
+# all engines use the XLA STE decode path so the comparison isolates the
 # SCHEDULER; cfg.replace(decode_kernel="fused") switches decode attention to
 # the Pallas kernel, which wins on TPU but is interpret-emulated (slower) on
-# CPU — benchmarks/serving_throughput.py reports it as a separate row
+# CPU — benchmarks/serving_throughput.py reports it as a separate row.
+# The paged engine serves the same queue from a block pool half the size of
+# the continuous engine's slot arena (see serve/paged.py).
 for name, eng in [
     ("wave", ServeEngine(state["params"], cfg, max_batch=8, max_len=128)),
     ("continuous", ContinuousEngine(state["params"], cfg,
                                     max_batch=8, max_len=128)),
+    ("paged", PagedEngine(state["params"], cfg, max_batch=8, max_len=128,
+                          block_size=16)),
 ]:
     # warm the SAME engine instance first so the timed pass measures
     # scheduling, not jit tracing (the jitted closures live per instance)

@@ -69,6 +69,17 @@ class ModelConfig:
     # "none" keeps the XLA STE path. Only active for HCCS attention without
     # hot buffers or sliding windows.
     decode_kernel: str = "none"      # none | fused | static_max
+    # KV-cache layout for the serving engines: "slot" reserves a full
+    # (max_batch, max_len) arena per engine (wave/continuous schedulers);
+    # "paged" draws fixed-size blocks from a global pool via per-request
+    # block tables (serve/paged.py), so memory scales with live tokens,
+    # not with max_len * max_batch.
+    cache_layout: str = "slot"       # slot | paged
+    # paged-KV geometry: block_size tokens per KV block (power of two, >= 8,
+    # so any kernel block_k <= 128 tiles it evenly); num_blocks sizes the
+    # global pool (0 = engine auto-sizes to half the equivalent slot arena)
+    block_size: int = 32
+    num_blocks: int = 0
 
     def __post_init__(self):
         if self.num_heads and not self.head_dim:
@@ -77,6 +88,13 @@ class ModelConfig:
             raise ValueError(
                 f"decode_kernel must be 'none' | 'fused' | 'static_max', "
                 f"got {self.decode_kernel!r}")
+        if self.cache_layout not in ("slot", "paged"):
+            raise ValueError(f"cache_layout must be 'slot' | 'paged', "
+                             f"got {self.cache_layout!r}")
+        bs = self.block_size
+        if bs < 8 or (bs & (bs - 1)):
+            raise ValueError(
+                f"block_size must be a power of two >= 8, got {bs}")
 
     @property
     def padded_vocab(self) -> int:

@@ -2,7 +2,9 @@
 #   hccs.py         — standalone HCCS row softmax (Algorithm 1, 5 stages)
 #   softmax_bf16.py — exp-based reference baseline (paper's comparison target)
 #   attention.py    — fused two-pass HCCS flash-attention (beyond-paper)
-#   decode.py       — fused single-query HCCS decode attention (serving path)
+#   decode.py       — fused single-query HCCS decode attention (serving path:
+#                     contiguous slot arena + paged block-table variants)
 # ops.py holds the jit'd wrappers; ref.py the pure-jnp oracles.
-from repro.kernels.ops import (hccs_attention, hccs_decode, hccs_softmax,
+from repro.kernels.ops import (hccs_attention, hccs_decode,
+                               hccs_paged_decode, hccs_softmax,
                                softmax_reference)

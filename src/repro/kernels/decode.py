@@ -31,6 +31,14 @@ path): HCCS linearity lets the integer reciprocal truncation be applied to the
 accumulated numerator, keeping the kernel consistent with the dense i16 modes.
 i8 modes floor per element *after* the rho multiply, which is not post-hoc
 linear; they fall back to the wide (exact 1/Z) scale, as everywhere else.
+
+A third entry point, `hccs_paged_decode`, runs the same sweep against the
+paged KV pool of serve/paged.py: the KV BlockSpec index_map reads the slot's
+scalar-prefetched *block table* instead of a contiguous offset, so the block
+gather is free (it steers the DMA), and sentinel (-1) table entries reuse the
+dead-block `pl.when` skip path. HCCS linearity is what makes paging trivial
+here — partial sums over blocks are exact, so no per-block rescaling is ever
+needed regardless of the physical block order.
 """
 from __future__ import annotations
 
@@ -46,16 +54,16 @@ from repro.core.hccs import hccs_mode_inv
 _NEG_BIG = -(2 ** 30)
 
 
-def _decode_kernel(scale_ref, theta_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                   m_scr, z_scr, acc_scr, *, num_kv: int, group: int,
-                   block_k: int, mode: str, static_max: bool,
-                   sm_denom: float):
-    i = pl.program_id(0)                      # slot * num_kv + kv head
+def _decode_tile(scale_ref, theta_ref, q_ref, k_ref, v_ref, o_ref,
+                 m_scr, z_scr, acc_scr, *, kv, nk, col0, block_live,
+                 group: int, mode: str, static_max: bool, sm_denom: float):
+    """One (phase, KV-tile) step of the single-query HCCS sweep, shared by the
+    dense slot-arena kernel and the paged block-table kernel. The callers
+    differ only in how the current tile was located (contiguous offset vs
+    block-table gather) — `nk` is the slot frontier, `col0` the tile's first
+    *logical* KV position, `block_live` whether the tile holds any live KV."""
     ph = pl.program_id(1)                     # phase (always 0 if static_max)
-    ki = pl.program_id(2)                     # KV block
-    slot = i // num_kv
-    kv = jax.lax.rem(i, num_kv)
-    nk = len_ref[slot]                        # this slot's cache frontier
+    ki = pl.program_id(2)                     # KV tile
     last_ph = 0 if static_max else 1
 
     # per-row (= per query head) calibration columns; group is static so this
@@ -76,8 +84,6 @@ def _decode_kernel(scale_ref, theta_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         z_scr[...] = jnp.zeros_like(z_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    block_live = ki * block_k < nk            # skip blocks past the frontier
-
     def quantized_logits():
         q = q_ref[0].astype(jnp.float32)                       # (g, d)
         k = k_ref[0, 0].astype(jnp.float32)                    # (bk, d)
@@ -90,8 +96,7 @@ def _decode_kernel(scale_ref, theta_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         logits = logits / sm_denom
         q_int = jnp.clip(jnp.round(logits / scale_col),
                          -128., 127.).astype(jnp.int32)        # (g, bk)
-        cols = ki * block_k + jax.lax.broadcasted_iota(
-            jnp.int32, q_int.shape, 1)
+        cols = col0 + jax.lax.broadcasted_iota(jnp.int32, q_int.shape, 1)
         valid = cols < nk
         return jnp.where(valid, q_int, _NEG_BIG), valid
 
@@ -121,6 +126,47 @@ def _decode_kernel(scale_ref, theta_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0] = (acc_scr[...] * hccs_mode_inv(z, mode)).astype(o_ref.dtype)
 
 
+def _decode_kernel(scale_ref, theta_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, z_scr, acc_scr, *, num_kv: int, group: int,
+                   block_k: int, mode: str, static_max: bool,
+                   sm_denom: float):
+    i = pl.program_id(0)                      # slot * num_kv + kv head
+    ki = pl.program_id(2)                     # KV block
+    slot = i // num_kv
+    kv = jax.lax.rem(i, num_kv)
+    nk = len_ref[slot]                        # this slot's cache frontier
+    col0 = ki * block_k
+    _decode_tile(scale_ref, theta_ref, q_ref, k_ref, v_ref, o_ref,
+                 m_scr, z_scr, acc_scr, kv=kv, nk=nk, col0=col0,
+                 block_live=col0 < nk,        # skip blocks past the frontier
+                 group=group, mode=mode, static_max=static_max,
+                 sm_denom=sm_denom)
+
+
+def _paged_kernel(tbl_ref, len_ref, scale_ref, theta_ref, q_ref, k_ref, v_ref,
+                  o_ref, m_scr, z_scr, acc_scr, *, num_kv: int, group: int,
+                  block_size: int, block_k: int, mode: str, static_max: bool,
+                  sm_denom: float):
+    i = pl.program_id(0)                      # slot * num_kv + kv head
+    ki = pl.program_id(2)                     # sub-tile of a table entry
+    slot = i // num_kv
+    kv = jax.lax.rem(i, num_kv)
+    per = block_size // block_k               # kernel tiles per KV block
+    ti = ki // per                            # block-table column
+    entry = tbl_ref[slot, ti]                 # pool block id, -1 = dead
+    nk = len_ref[slot]
+    col0 = ti * block_size + jax.lax.rem(ki, per) * block_k
+    # dead-block skip: a sentinel table entry is the paged analogue of the
+    # dense kernel's past-the-frontier block (same pl.when skip path); the
+    # frontier check also covers trailing sub-tiles of a partially-filled
+    # final block
+    _decode_tile(scale_ref, theta_ref, q_ref, k_ref, v_ref, o_ref,
+                 m_scr, z_scr, acc_scr, kv=kv, nk=nk, col0=col0,
+                 block_live=(entry >= 0) & (col0 < nk),
+                 group=group, mode=mode, static_max=static_max,
+                 sm_denom=sm_denom)
+
+
 @functools.partial(jax.jit, static_argnames=("mode", "static_max", "block_k",
                                              "interpret"))
 def hccs_decode(q: jax.Array, k: jax.Array, v: jax.Array, lengths: jax.Array,
@@ -136,7 +182,7 @@ def hccs_decode(q: jax.Array, k: jax.Array, v: jax.Array, lengths: jax.Array,
     Returns (B, H, d) in q.dtype. Rows with lengths == 0 return zeros.
     """
     b, h, d = q.shape
-    _, hkv, tmax, _ = k.shape
+    _, hkv, tmax, dk = k.shape
     assert h % hkv == 0
     g = h // hkv
     sm_denom = float(d) ** 0.5
@@ -145,20 +191,18 @@ def hccs_decode(q: jax.Array, k: jax.Array, v: jax.Array, lengths: jax.Array,
     qg = q.astype(jnp.float32).reshape(b * hkv, g, d)
     qp = jnp.zeros((b * hkv, g, d_pad), jnp.float32).at[:, :, :d].set(qg)
     # the decode step runs per generated token: when the cache arena is
-    # already tile-aligned (head_dim a lane multiple, max_len a block_k
-    # multiple — the production TPU layout), pass it through without the
-    # full-cache pad-and-copy. Small-head configs (head_dim < 128, i.e.
-    # every in-repo toy config) pay the copy each step — the real fix is a
-    # lane-padded arena allocated once in init_cache (ROADMAP open item),
-    # which changes the cache layout for every attention path and so is
-    # deliberately not smuggled into this kernel.
-    if tk_pad == tmax and d_pad == d:
+    # already tile-aligned (head_dim padded to the lane multiple, max_len a
+    # block_k multiple — what init_cache allocates whenever the kernel is
+    # enabled, see attention.kv_store_geometry), pass it through without any
+    # per-step full-cache pad-and-copy. The copy below only runs for caches
+    # allocated outside that path (e.g. direct kernel calls in tests).
+    if tk_pad == tmax and d_pad == dk:
         kp, vp = k, v
     else:
         kp = jnp.zeros((b, hkv, tk_pad, d_pad),
-                       k.dtype).at[:, :, :tmax, :d].set(k)
+                       k.dtype).at[:, :, :tmax, :dk].set(k)
         vp = jnp.zeros((b, hkv, tk_pad, d_pad),
-                       v.dtype).at[:, :, :tmax, :d].set(v)
+                       v.dtype).at[:, :, :tmax, :dk].set(v)
     num_phases = 1 if static_max else 2
     grid = (b * hkv, num_phases, tk_pad // block_k)
 
@@ -187,4 +231,90 @@ def hccs_decode(q: jax.Array, k: jax.Array, v: jax.Array, lengths: jax.Array,
         interpret=interpret,
     )(scale.astype(jnp.float32), theta.astype(jnp.int32),
       lengths.astype(jnp.int32), qp, kp, vp)
+    return out[:, :, :d].reshape(b, h, d)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "static_max", "block_k",
+                                             "interpret"))
+def hccs_paged_decode(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                      block_table: jax.Array, lengths: jax.Array,
+                      scale: jax.Array, theta: jax.Array, *,
+                      mode: str = "wide", static_max: bool = False,
+                      block_k: int = 128,
+                      interpret: bool = True) -> jax.Array:
+    """Single-query HCCS attention against a PAGED KV pool (serve/paged.py).
+
+    Where `hccs_decode` reads slot `b`'s KV from a contiguous (Tmax, d) ring,
+    this variant walks slot `b`'s *block table*: grid step (i, ph, ki) DMAs
+    pool block `block_table[slot, ki // per]` (scalar-prefetched, so the
+    gather happens in the BlockSpec index_map — no host-side copy), covering
+    logical positions [ti*block_size, (ti+1)*block_size).
+
+    q: (B, H, d) one query per slot; k_pool/v_pool: (N, Hkv, block_size, dp)
+    global block pools (dp = d or lane-padded 128); block_table: (B, nblk)
+    int32 pool block ids, -1 = unallocated (sentinel rows are skipped with the
+    same pl.when path as the dense kernel's dead blocks); lengths: (B,) valid
+    logical-KV counts; scale: (H,) f32; theta: (H, 3) int32.
+    Returns (B, H, d) in q.dtype. Rows with lengths == 0 return zeros.
+    """
+    b, h, d = q.shape
+    n, hkv, bs, dp = k_pool.shape
+    assert h % hkv == 0
+    g = h // hkv
+    sm_denom = float(d) ** 0.5
+    bk = min(block_k, bs)
+    assert bs % bk == 0, (bs, bk)
+    per = bs // bk
+    d_pad = max(-(-d // 128) * 128, 128)
+    qg = q.astype(jnp.float32).reshape(b * hkv, g, d)
+    qp = jnp.zeros((b * hkv, g, d_pad), jnp.float32).at[:, :, :d].set(qg)
+    if dp == d_pad:
+        # lane-padded pool (the production layout from serve/paged.py):
+        # zero-copy pass-through, blocks stream straight from the pool
+        kp, vp = k_pool, v_pool
+    else:
+        kp = jnp.zeros((n, hkv, bs, d_pad),
+                       k_pool.dtype).at[..., :dp].set(k_pool)
+        vp = jnp.zeros((n, hkv, bs, d_pad),
+                       v_pool.dtype).at[..., :dp].set(v_pool)
+    nblk = block_table.shape[1]
+    num_phases = 1 if static_max else 2
+    grid = (b * hkv, num_phases, nblk * per)
+
+    def kv_spec():
+        # the block-table gather: sentinel entries are clamped to pool block
+        # 0 so the DMA has a valid source; the kernel body never reads the
+        # tile (block_live is False), so the clamp is semantically inert
+        return pl.BlockSpec(
+            (1, 1, bk, d_pad),
+            lambda i, ph, ki, tbl, ln, sc, th, KV=hkv, PER=per: (
+                jnp.maximum(tbl[i // KV, ki // PER], 0),
+                jax.lax.rem(i, KV), jax.lax.rem(ki, PER), 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,                # table, lengths, scale, theta
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, g, d_pad),
+                         lambda i, ph, ki, tbl, ln, sc, th: (i, 0, 0)),
+            kv_spec(),
+            kv_spec(),
+        ],
+        out_specs=pl.BlockSpec((1, g, d_pad),
+                               lambda i, ph, ki, tbl, ln, sc, th: (i, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 128), jnp.int32),                  # running max
+            pltpu.VMEM((g, 128), jnp.float32),                # Z accumulator
+            pltpu.VMEM((g, d_pad), jnp.float32),              # s @ V acc
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, num_kv=hkv, group=g, block_size=bs,
+                          block_k=bk, mode=mode, static_max=static_max,
+                          sm_denom=sm_denom),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * hkv, g, d_pad), q.dtype),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), lengths.astype(jnp.int32),
+      scale.astype(jnp.float32), theta.astype(jnp.int32), qp, kp, vp)
     return out[:, :, :d].reshape(b, h, d)

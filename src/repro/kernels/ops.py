@@ -12,6 +12,7 @@ from repro.kernels.hccs import hccs_rows as _hccs_rows
 from repro.kernels.softmax_bf16 import softmax_bf16 as _softmax_bf16
 from repro.kernels.attention import hccs_mha_fused as _hccs_mha_fused
 from repro.kernels.decode import hccs_decode as _hccs_decode
+from repro.kernels.decode import hccs_paged_decode as _hccs_paged_decode
 
 
 def _interp() -> bool:
@@ -44,3 +45,12 @@ def hccs_decode(q, k, v, lengths, scale, theta, mode: str = "wide",
     return _hccs_decode(q, k, v, lengths, scale, theta, mode=mode,
                         static_max=static_max, block_k=block_k,
                         interpret=_interp())
+
+
+def hccs_paged_decode(q, k_pool, v_pool, block_table, lengths, scale, theta,
+                      mode: str = "wide", static_max: bool = False,
+                      block_k: int = 128) -> jax.Array:
+    """Block-table-gather single-query HCCS decode (see kernels/decode.py)."""
+    return _hccs_paged_decode(q, k_pool, v_pool, block_table, lengths, scale,
+                              theta, mode=mode, static_max=static_max,
+                              block_k=block_k, interpret=_interp())

@@ -90,6 +90,31 @@ def hccs_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.astype(q.dtype)
 
 
+def hccs_paged_decode_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                          block_table: jax.Array, lengths: jax.Array,
+                          scale: jax.Array, theta: jax.Array,
+                          mode: str = "wide",
+                          static_max: bool = False) -> jax.Array:
+    """Oracle for the paged (block-table gather) HCCS decode kernel.
+
+    k_pool/v_pool: (N, Hkv, block_size, d) global block pools;
+    block_table: (B, nblk) int32 pool block ids with -1 for unallocated
+    entries (only entries at or beyond a slot's length frontier may be -1 —
+    the allocator invariant). Gathers each slot's blocks into a contiguous
+    view and defers to hccs_decode_ref; sentinel entries gather pool block 0
+    and are masked by `lengths`.
+    """
+    b = q.shape[0]
+    n, hkv, bs, d = k_pool.shape
+    tbl = jnp.maximum(block_table, 0)
+    kg = k_pool[tbl]                            # (B, nblk, Hkv, bs, d)
+    vg = v_pool[tbl]
+    kg = kg.transpose(0, 2, 1, 3, 4).reshape(b, hkv, -1, d)
+    vg = vg.transpose(0, 2, 1, 3, 4).reshape(b, hkv, -1, d)
+    return hccs_decode_ref(q, kg, vg, lengths, scale, theta, mode=mode,
+                           static_max=static_max)
+
+
 def hccs_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                        scale: jax.Array, theta: jax.Array,
                        causal: bool = True) -> jax.Array:

@@ -1,7 +1,8 @@
-"""Serving launcher: batched prefill+decode, wave or continuous scheduler.
+"""Serving launcher: batched prefill+decode, wave / continuous / paged
+scheduler.
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --reduced \
-        --requests 8 --new-tokens 16 --scheduler continuous --decode-kernel fused
+        --requests 8 --new-tokens 16 --scheduler paged --decode-kernel fused
 """
 from __future__ import annotations
 
@@ -18,9 +19,14 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--scheduler", default="wave",
-                    choices=["wave", "continuous"])
+                    choices=["wave", "continuous", "paged"])
     ap.add_argument("--decode-kernel", default="none",
                     choices=["none", "fused", "static_max"])
+    ap.add_argument("--block-size", type=int, default=0,
+                    help="paged KV block size (0 = cfg.block_size)")
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="paged KV pool size (0 = cfg.num_blocks, or "
+                         "auto-size to half the dense arena)")
     args = ap.parse_args()
 
     import jax
@@ -28,26 +34,30 @@ def main():
 
     from repro.configs import get_config, reduced_config
     from repro.models import model as M
-    from repro.serve import ContinuousEngine, Request, ServeEngine
+    from repro.serve import (ContinuousEngine, PagedEngine, Request,
+                             ServeEngine)
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     if args.decode_kernel != "none":
-        # warn loudly when the flag cannot take effect so reported timings
-        # are not misattributed to the kernel (same predicate as the gate)
-        from repro.models.attention import decode_kernel_blockers
-        blockers = decode_kernel_blockers(cfg)
-        if blockers:
-            print(f"WARNING: --decode-kernel {args.decode_kernel} has no "
-                  f"effect for {args.arch}: {', '.join(blockers)}; decode "
-                  "runs the XLA STE path")
+        # the engine constructor warns (once, with the blocking reason) when
+        # the kernel cannot take effect — see warn_decode_kernel_fallback
         cfg = cfg.replace(decode_kernel=args.decode_kernel)
     if cfg.input_mode == "embeddings":
         raise SystemExit(f"{args.arch} takes embedding inputs; the serve demo "
                          "targets token models (see examples/serving.py)")
     params = M.init_params(jax.random.PRNGKey(0), cfg)
-    engine_cls = ContinuousEngine if args.scheduler == "continuous" else ServeEngine
-    eng = engine_cls(params, cfg, max_batch=args.max_batch,
-                     max_len=args.prompt_len + args.new_tokens + 1)
+    max_len = args.prompt_len + args.new_tokens + 1
+    if args.scheduler == "paged":
+        cfg = cfg.replace(cache_layout="paged")
+        eng = PagedEngine(params, cfg, max_batch=args.max_batch,
+                          max_len=max_len,
+                          block_size=args.block_size or None,
+                          num_blocks=args.num_blocks or None)
+    else:
+        engine_cls = (ContinuousEngine if args.scheduler == "continuous"
+                      else ServeEngine)
+        eng = engine_cls(params, cfg, max_batch=args.max_batch,
+                         max_len=max_len)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         eng.submit(Request(uid=i,

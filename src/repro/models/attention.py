@@ -93,6 +93,23 @@ def decode_kernel_blockers(cfg) -> list:
     return blockers
 
 
+def kv_store_geometry(cfg, max_len: int) -> tuple[int, int]:
+    """Storage shape (head_dim, seq) for cache K/V buffers.
+
+    When the fused decode kernel will consume the arena every step, allocate
+    it lane-padded up front — head_dim padded to the 128-lane tile and seq
+    rounded to the kernel's default block — so hccs_decode's zero-copy
+    pass-through branch runs instead of a per-step full-cache pad-and-copy.
+    Writers use dynamic_update_slice (update may be smaller than the target),
+    XLA readers slice back to [..., :head_dim]; padded lanes stay zero and
+    padded rows sit beyond every slot's length mask.
+    """
+    if cfg.decode_kernel == "none" or decode_kernel_blockers(cfg):
+        return cfg.head_dim, max_len
+    hd = max(-(-cfg.head_dim // 128) * 128, 128)
+    return hd, -(-max_len // 128) * 128
+
+
 def _project_out(out, p, b, t):
     """Shared attention epilogue: merge heads -> output projection -> residual
     sharding constraint. out: (B, H, T, hd) or (B, T, H*hd)."""
@@ -109,6 +126,38 @@ def _slot_scatter(cache_kv, new_kv, lengths):
     return jax.vmap(
         lambda c, u, i: jax.lax.dynamic_update_slice(
             c, u.astype(c.dtype), (0, i, 0)))(cache_kv, new_kv, lengths)
+
+
+# transient per-step keys the paged engine attaches to the cache; they steer
+# the step and are not part of the carried cache state
+_PAGED_TRANSIENT = ("block_table", "write_pos", "kv_len")
+
+
+def _paged_scatter(pool, new_kv, write_pos):
+    """Write t new KV vectors per slot into the global paged block pool.
+
+    pool: (N, Hkv, block_size, hd_c); new_kv: (B, Hkv, t, hd); write_pos:
+    (B, t) int32 flat pool positions (block_id * block_size + offset),
+    host-computed by the engine — tokens past a slot's valid count point at
+    the reserved trash block 0, so the scatter keeps a static shape without
+    polluting any live block."""
+    n, hkv, bs, hd_c = pool.shape
+    pos = write_pos.reshape(-1)
+    upd = new_kv.transpose(0, 2, 1, 3).reshape(-1, hkv, new_kv.shape[-1])
+    return pool.at[pos // bs, :, pos % bs, :upd.shape[-1]].set(
+        upd.astype(pool.dtype))
+
+
+def _paged_gather(pool, block_table, hd):
+    """Contiguous (B, Hkv, nblk*block_size, hd) view of each slot's blocks —
+    the XLA attention path over a paged cache (the Pallas kernel instead
+    gathers block-by-block in its BlockSpec index_map, see kernels/decode.py).
+    Sentinel (-1) entries gather the trash block; they only occur at or past
+    the slot's frontier, so the kv_len mask hides them."""
+    b, nblk = block_table.shape
+    n, hkv, bs, hd_c = pool.shape
+    g = pool[jnp.maximum(block_table, 0)]          # (B, nblk, Hkv, bs, hd_c)
+    return g.transpose(0, 2, 1, 3, 4).reshape(b, hkv, nblk * bs, hd_c)[..., :hd]
 
 
 def _block_valid(cfg, q_pos, k_pos, k_len=None):
@@ -312,6 +361,11 @@ def apply_attention(p, x, cfg, hccs=None, positions=None, cache=None,
     With cfg.hot_buffer > 0 the cache also carries (hot_k, hot_v, hot_len):
     decode appends there (replicated, static-shard-safe) and attention merges
     the main + hot segments against a shared max.
+    PAGED layout (serve/paged.py): k/v are instead global block pools
+    (N, Hkv, block_size, hd) and the cache carries `block_table` (B, nblk),
+    `write_pos` (B, T) flat scatter targets, and `kv_len` (B,) per-slot
+    valid counts — the dispatch keys off `block_table`'s presence, the paged
+    analogue of `length` going scalar-vs-vector for the slot arena.
     """
     b, t, d = x.shape
     h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -370,16 +424,44 @@ def apply_attention(p, x, cfg, hccs=None, positions=None, cache=None,
 
     new_cache = None
     k_len = None
-    per_slot = cache is not None and jnp.ndim(cache["length"]) > 0
-    if cache is not None:
+    paged = cache is not None and "block_table" in cache
+    per_slot = (cache is not None and not paged
+                and jnp.ndim(cache["length"]) > 0)
+    if paged:
+        # paged arena: K/V live in a global block pool addressed through
+        # per-slot block tables; the write targets (incl. trash routing for
+        # tokens past each slot's valid count) were resolved on the host
+        kc = _paged_scatter(cache["k"], k, cache["write_pos"])
+        vc = _paged_scatter(cache["v"], v, cache["write_pos"])
+        new_cache = {kk: vv for kk, vv in cache.items()
+                     if kk not in _PAGED_TRANSIENT}
+        new_cache.update(k=kc, v=vc, length=cache["length"] + t)
+        # per-slot valid-KV counts for this step (length + per-slot t_valid;
+        # chunked prefill makes t_valid ragged, so `length + t` is wrong here)
+        k_len = cache["kv_len"]
+        if (t == 1 and cfg.decode_kernel != "none"
+                and not decode_kernel_blockers(cfg) and hccs is not None):
+            # block-sparse fused decode: the kernel walks the block table
+            from repro.kernels.ops import hccs_paged_decode
+            theta = jnp.stack([hccs["B"], hccs["S"], hccs["D"]], axis=-1)
+            o = hccs_paged_decode(q[:, :, 0, :].astype(jnp.float32), kc, vc,
+                                  cache["block_table"], k_len, hccs["scale"],
+                                  theta, mode=cfg.hccs_mode,
+                                  static_max=(cfg.decode_kernel == "static_max"))
+            out = o.astype(q.dtype).reshape(b, 1, h * hd)
+            return _project_out(out, p, b, 1), new_cache
+        k = _paged_gather(kc, cache["block_table"], hd)
+        v = _paged_gather(vc, cache["block_table"], hd)
+    elif cache is not None:
         if per_slot:
             # continuous batching: every slot writes at its own frontier
             kc = _slot_scatter(cache["k"], k, cache["length"])
             vc = _slot_scatter(cache["v"], v, cache["length"])
-        elif cache["k"].shape[2] == t:
+        elif cache["k"].shape[2:] == k.shape[2:]:
             # prompt fills the whole cache (prefill at max_len): a plain
             # overwrite avoids the dynamic-update-slice on the sharded seq
-            # dim, which XLA can only partition via a full gather
+            # dim, which XLA can only partition via a full gather (a
+            # lane-padded arena never matches and takes the DUS path below)
             kc = k.astype(cache["k"].dtype)
             vc = v.astype(cache["v"].dtype)
         else:
@@ -408,6 +490,11 @@ def apply_attention(p, x, cfg, hccs=None, positions=None, cache=None,
                         static_max=(cfg.decode_kernel == "static_max"))
         out = o.astype(q.dtype).reshape(b, 1, h * hd)
         return _project_out(out, p, b, 1), new_cache
+
+    if cache is not None and k.shape[-1] != hd:
+        # lane-padded arena (kv_store_geometry): the kernel consumed the
+        # padded buffer zero-copy above; XLA paths read the true lanes
+        k, v = k[..., :hd], v[..., :hd]
 
     tk = k.shape[2]
     use_blockwise = (cfg.attention_impl == "blockwise" or

@@ -40,16 +40,23 @@ def init_block(rng, cfg):
 
 
 def init_layer_cache(cfg, batch, max_len, cache_dtype=jnp.bfloat16):
-    """Zero cache for ONE layer (the model stacks L of these)."""
+    """Zero cache for ONE layer (the model stacks L of these).
+
+    When the fused decode kernel is active, K/V are allocated lane-padded
+    (head_dim -> 128-lane tile, seq rounded to the kernel block) so the
+    kernel's zero-copy pass-through branch runs every decode step instead of
+    a per-step full-cache pad-and-copy (see attention.kv_store_geometry)."""
     c: dict = {}
     if cfg.family in ("dense", "moe", "audio", "vlm", "hybrid"):
-        hkv, hd = cfg.num_kv_heads, cfg.head_dim
-        c["k"] = jnp.zeros((batch, hkv, max_len, hd), cache_dtype)
-        c["v"] = jnp.zeros((batch, hkv, max_len, hd), cache_dtype)
+        hkv = cfg.num_kv_heads
+        hd_c, len_c = attn.kv_store_geometry(cfg, max_len)
+        c["k"] = jnp.zeros((batch, hkv, len_c, hd_c), cache_dtype)
+        c["v"] = jnp.zeros((batch, hkv, len_c, hd_c), cache_dtype)
         if cfg.hot_buffer > 0:
-            c["hot_k"] = jnp.zeros((batch, hkv, cfg.hot_buffer, hd),
+            # hot buffers block the decode kernel, so hd_c == head_dim here
+            c["hot_k"] = jnp.zeros((batch, hkv, cfg.hot_buffer, hd_c),
                                    cache_dtype)
-            c["hot_v"] = jnp.zeros((batch, hkv, cfg.hot_buffer, hd),
+            c["hot_v"] = jnp.zeros((batch, hkv, cfg.hot_buffer, hd_c),
                                    cache_dtype)
     if cfg.family in ("ssm", "hybrid"):
         c["ssm"] = jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state,

@@ -95,6 +95,13 @@ def forward(weights, hccs, batch, cfg, cache=None, decode: bool = False):
     hot_len = None
     if cache is not None and cfg.hot_buffer > 0:
         hot_len = length - cache.get("prompt_len", jnp.zeros((), jnp.int32))
+    # paged cache: the block table + this step's write targets are model-level
+    # state shared by every layer (one table, per-layer pools); inject them
+    # into each per-layer cache the same way hot_len rides along
+    paged_extras = None
+    if cache is not None and "block_table" in cache:
+        paged_extras = {kk: cache[kk]
+                        for kk in ("block_table", "write_pos", "kv_len")}
 
     hccs = jax.tree.map(jax.lax.stop_gradient, hccs)  # theta frozen (paper QAT)
     call = _block_caller(cfg, decode)
@@ -116,6 +123,8 @@ def forward(weights, hccs, batch, cfg, cache=None, decode: bool = False):
         lc = lc if isinstance(lc, dict) else None
         if lc is not None and hot_len is not None:
             lc = dict(lc, hot_len=hot_len)
+        if lc is not None and paged_extras is not None:
+            lc = dict(lc, **paged_extras)
         x, aux = carry
         x, new_lc, aux_l = call(lp, x, hc, lc, length, positions,
                                 mrope_positions)

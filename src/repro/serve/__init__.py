@@ -1,4 +1,8 @@
 # engine.py     — wave scheduler: same-length prompt batches, lockstep decode
 # continuous.py — slot arena: continuous batching with per-slot lengths
+# paged.py      — block pool + block tables: paged KV with chunked prefill
 from repro.serve.continuous import ContinuousEngine
-from repro.serve.engine import Request, ServeEngine, sample_tokens
+from repro.serve.engine import (Request, ServeEngine, kv_cache_bytes,
+                                sample_tokens)
+from repro.serve.paged import (BlockAllocator, BlockPoolExhausted,
+                               PagedEngine)

@@ -44,7 +44,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import model as M
-from repro.serve.engine import Request, sample_tokens, validate_prompt
+from repro.serve.engine import (Request, sample_tokens, validate_prompt,
+                                warn_decode_kernel_fallback)
 
 
 class ContinuousEngine:
@@ -66,6 +67,11 @@ class ContinuousEngine:
         self.min_bucket = min_bucket
         self._queue: list[Request] = []
         self._key = jax.random.PRNGKey(0)
+        # occupancy telemetry: running sum/count of the live fraction per
+        # decode step (O(1) state — a long-lived engine never accumulates)
+        self.occupancy_sum = 0.0
+        self.occupancy_steps = 0
+        warn_decode_kernel_fallback(cfg)
 
         # slot arena + host slot table
         self._cache = M.init_cache(cfg, max_batch, max_len, cache_dtype,
@@ -167,6 +173,8 @@ class ContinuousEngine:
     def _step(self) -> list[Request]:
         """One batched decode step over the arena; returns newly finished."""
         live = self._live.copy()
+        self.occupancy_sum += float(live.mean())
+        self.occupancy_steps += 1
         self._cache = dict(self._cache, length=jnp.asarray(self._lengths))
         tokens = jnp.asarray(self._last[:, None])
         logits, self._cache = self._decode(self.w, self.hccs, tokens,

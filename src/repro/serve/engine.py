@@ -12,6 +12,7 @@ logits match the trained model bit-for-bit.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from collections import defaultdict
 
 import jax
@@ -19,6 +20,39 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import model as M
+
+
+def warn_decode_kernel_fallback(cfg):
+    """Warn ONCE, at engine construction, when cfg.decode_kernel cannot take
+    effect — with the blocking reason (i8 mode, windowed attention, ...) in
+    the message. Every engine calls this so programmatic users (benchmarks,
+    notebooks) get the same no-effect warning the serve launcher used to
+    print, without it repeating on every dispatch."""
+    if cfg.decode_kernel == "none":
+        return
+    from repro.models.attention import decode_kernel_blockers
+    blockers = decode_kernel_blockers(cfg)
+    if blockers:
+        with warnings.catch_warnings():
+            # defeat the default once-per-location dedup filter: every engine
+            # construction with a blocked config must warn, or the second
+            # engine in a process gets silently misattributed timings
+            warnings.simplefilter("always", RuntimeWarning)
+            warnings.warn(
+                f"decode_kernel={cfg.decode_kernel!r} has no effect "
+                f"({', '.join(blockers)}); decode runs the XLA STE path",
+                RuntimeWarning, stacklevel=3)
+
+
+def kv_cache_bytes(cache) -> int:
+    """Persistently-allocated KV bytes of an engine cache (the slot arena or
+    the paged block pool): k/v leaves only, excluding SSM state."""
+    total = 0
+    for name in ("k", "v", "hot_k", "hot_v"):
+        leaf = cache["layers"].get(name)
+        if leaf is not None:
+            total += leaf.size * leaf.dtype.itemsize
+    return total
 
 
 @dataclasses.dataclass
@@ -66,6 +100,7 @@ class ServeEngine:
         self.cache_dtype = cache_dtype
         self._queue: list[Request] = []
         self._key = jax.random.PRNGKey(0)
+        warn_decode_kernel_fallback(cfg)
         cfg_ = cfg
 
         @jax.jit

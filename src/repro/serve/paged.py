@@ -1,0 +1,351 @@
+"""Paged KV-cache serving: block pool, block-table arena, chunked prefill.
+
+Layout — a GLOBAL pool of fixed-size KV blocks plus per-request block tables
+(vLLM-style), replacing the continuous engine's per-slot (max_len,) KV
+reservation:
+
+    block pool (device, per layer)           block tables (host, per slot)
+    ┌────────────────────────────┐
+    │ blk 0  ████  trash         │   slot 0 ──▶ [ 3, 7, 1, -1]  len 40
+    │ blk 1  ███░  slot0 tbl[2]  │   slot 1 ──▶ [ 9,-1,-1, -1]  len  5
+    │ blk 2  ░░░░  free          │   slot 2 ──▶ [-1,-1,-1, -1]  free
+    │ blk 3  ████  slot0 tbl[0]  │
+    │ blk 4  ░░░░  free          │   free list: [2, 4, 6, ...]
+    │ blk 5  ████  slot1... etc  │   lengths:   [40, 5, 0]
+    └────────────────────────────┘
+    pool k/v: (num_blocks, Hkv, block_size, hd); logical position p of slot b
+    lives at pool block table[b, p // block_size], row p % block_size.
+
+Memory now scales with LIVE tokens, not max_batch * max_len: blocks are
+allocated when a slot's frontier crosses into them (alloc-on-frontier-
+crossing) and returned to the free list at EOS (free-at-EOS). Block 0 is
+reserved as the *trash block*: the jitted step has static shapes, so token
+lanes past a slot's valid count still scatter somewhere — they are steered
+into block 0, which no request ever owns and every mask hides.
+
+Admission uses CHUNKED PREFILL: a long prompt is fed `block_size` tokens at a
+time inside the regular batched step — decoding slots ride along with
+t_valid = 1 — instead of the continuous engine's separate bucket-padded
+prefill call. That kills the O(log max_len) prefill retrace buckets: the
+engine compiles exactly two step shapes, (B, block_size) and (B, 1).
+
+Attention dispatch (models/attention.py) keys off `block_table` in the cache:
+the XLA path gathers each slot's blocks into a contiguous view; with
+cfg.decode_kernel != "none" the t == 1 hot path runs the block-sparse Pallas
+kernel `hccs_paged_decode` (kernels/decode.py), whose KV BlockSpec index_map
+walks the scalar-prefetched block table directly — the gather steers the DMA
+and sentinel entries reuse the dead-block skip.
+
+Admission is deadlock-free by reservation: a request is admitted only when
+the unreserved free-block count covers its worst case
+ceil((prompt + max_new) / block_size), so alloc-on-frontier-crossing can
+never exhaust the pool mid-flight (the allocator still raises
+BlockPoolExhausted before corrupting state if driven past capacity by hand).
+
+When to prefer which engine: see the module docstrings of engine.py (wave)
+and continuous.py (slot arena), and ROADMAP.md "Serving architecture".
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.models.attention import kv_store_geometry
+from repro.serve.engine import (Request, sample_tokens, validate_prompt,
+                                warn_decode_kernel_fallback)
+
+TRASH_BLOCK = 0
+
+
+class BlockPoolExhausted(RuntimeError):
+    """Raised by BlockAllocator.alloc when the free list is empty — before
+    any table entry or pool block is touched, so engine state stays valid."""
+
+
+class BlockAllocator:
+    """Host-side free-list allocator for the global KV block pool.
+
+    Invariants (property-tested in tests/test_paged_alloc.py):
+      * a block is owned by at most one holder at a time (no aliasing);
+      * free + live partitions {1, ..., num_blocks-1} (conservation);
+      * exhaustion raises BlockPoolExhausted without mutating state;
+      * block 0 (the trash block) is never handed out.
+    """
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 2:
+            raise ValueError(
+                f"need >= 2 blocks (1 usable + trash), got {num_blocks}")
+        self.num_blocks = num_blocks
+        # pop() hands out low block ids first (cosmetic: keeps pools dense)
+        self._free = list(range(num_blocks - 1, TRASH_BLOCK, -1))
+        self._live: set[int] = set()
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise BlockPoolExhausted(
+                f"KV block pool exhausted: {self.num_blocks - 1} usable "
+                f"blocks all live")
+        blk = self._free.pop()
+        self._live.add(blk)
+        return blk
+
+    def free(self, blocks) -> None:
+        for blk in blocks:
+            blk = int(blk)
+            if blk not in self._live:
+                raise ValueError(f"freeing block {blk} that is not live")
+            self._live.remove(blk)
+            self._free.append(blk)
+
+
+def init_paged_cache(cfg, num_blocks: int, block_size: int, max_batch: int,
+                     cache_dtype=jnp.float32):
+    """Model cache in the paged layout: per-layer (N, Hkv, bs, hd) pools plus
+    the (B,) per-slot length frontier. head_dim is lane-padded exactly when
+    the dense arena would be (kv_store_geometry), so the paged/dense byte
+    comparison is apples-to-apples and the paged kernel's zero-copy branch
+    runs whenever the dense kernel's would."""
+    hkv = cfg.num_kv_heads
+    hd_c = kv_store_geometry(cfg, block_size)[0]
+    L = cfg.num_layers
+    shape = (L, num_blocks, hkv, block_size, hd_c)
+    return {"layers": {"k": jnp.zeros(shape, cache_dtype),
+                       "v": jnp.zeros(shape, cache_dtype)},
+            "length": jnp.zeros((max_batch,), jnp.int32)}
+
+
+class PagedEngine:
+    def __init__(self, params, cfg, *, max_batch: int = 8,
+                 max_len: int = 512, eos_id: int | None = None,
+                 cache_dtype=jnp.float32, block_size: int | None = None,
+                 num_blocks: int | None = None):
+        if cfg.hot_buffer != 0:
+            raise ValueError(
+                "paged batching uses the block pool, not hot buffers "
+                f"(cfg.hot_buffer={cfg.hot_buffer})")
+        if cfg.family in ("ssm", "hybrid"):
+            raise ValueError(
+                f"paged KV needs attention-only blocks; {cfg.family} carries "
+                "per-slot SSM state that a block pool cannot page")
+        warn_decode_kernel_fallback(cfg)
+        self.w = params["weights"]
+        self.hccs = params["hccs"]
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.cache_dtype = cache_dtype
+        bs = int(block_size if block_size is not None else cfg.block_size)
+        # same contract ModelConfig.block_size enforces: a power of two >= 8
+        # tiles any kernel block_k <= 128 evenly (constructor args like the
+        # launcher's --block-size bypass the config dataclass)
+        if bs < 8 or (bs & (bs - 1)):
+            raise ValueError(
+                f"block_size must be a power of two >= 8, got {bs}")
+        if max_len < bs:
+            raise ValueError(f"block_size {bs} exceeds max_len {max_len}")
+        self.block_size = bs
+        self._nblk_per_seq = -(-max_len // bs)       # block-table width
+        if num_blocks is None:
+            num_blocks = cfg.num_blocks
+        if not num_blocks:
+            # auto-size: half the equivalent dense slot arena (the memory win
+            # that pays for paging), floored at one full-length request +
+            # trash + one spare so any admissible request fits
+            num_blocks = max(max_batch * self._nblk_per_seq // 2,
+                             self._nblk_per_seq + 2)
+        self.num_blocks = int(num_blocks)
+        self.alloc = BlockAllocator(self.num_blocks)
+        self._queue: list[Request] = []
+        self._key = jax.random.PRNGKey(0)
+        # occupancy telemetry: running sum/count, O(1) state
+        self.occupancy_sum = 0.0
+        self.occupancy_steps = 0
+
+        # block tables + host slot table
+        self._tables = np.full((max_batch, self._nblk_per_seq), -1, np.int32)
+        self._resv = np.zeros(max_batch, np.int64)   # admission reservations
+        self._slots: list[Request | None] = [None] * max_batch
+        self._live = np.zeros(max_batch, bool)
+        self._lengths = np.zeros(max_batch, np.int32)
+        self._prompt_pos = np.zeros(max_batch, np.int32)  # prompt tokens fed
+        self._last = np.zeros(max_batch, np.int32)        # next token to feed
+        self._temps = np.zeros(max_batch)
+        self._cache = init_paged_cache(cfg, self.num_blocks, bs, max_batch,
+                                       cache_dtype)
+
+        cfg_ = cfg
+
+        # ONE step function, two traced shapes — (B, 1) pure decode and
+        # (B, block_size) chunk steps. Only the pool cache is donated (so XLA
+        # aliases it in place); the per-step steering arrays (block table,
+        # write targets, kv_len) ride in a separate undonated arg
+        @functools.partial(jax.jit, donate_argnums=(3,))
+        def _step(w, hccs, tokens, cache, extras, t_valid):
+            x, cache, _ = M.forward(w, hccs, {"tokens": tokens}, cfg_,
+                                    cache=dict(cache, **extras), decode=True)
+            # each slot samples from its LAST VALID position (t_valid - 1):
+            # chunk steps are ragged — riding decode slots have t_valid == 1,
+            # mid-prompt slots discard their logits entirely
+            idx = jnp.maximum(t_valid - 1, 0)
+            h_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+            logits = M.logits_from_hidden(w, h_last, cfg_)
+            return logits[:, 0], cache
+
+        self._step_fn = _step
+
+    # ------------------------------------------------------------- queue --
+
+    def _blocks_for(self, plen: int, max_new: int) -> int:
+        return -(-min(plen + max_new, self.max_len) // self.block_size)
+
+    def submit(self, req: Request):
+        validate_prompt(req.prompt, self.max_len)
+        need = self._blocks_for(len(req.prompt), req.max_new_tokens)
+        if need > self.num_blocks - 1:
+            raise ValueError(
+                f"request needs up to {need} KV blocks but the pool has "
+                f"{self.num_blocks - 1} usable")
+        self._queue.append(req)
+
+    def _admit(self):
+        """FIFO admission into free slots, gated on UNRESERVED free blocks
+        covering the request's worst case (deadlock-free: admitted requests
+        can always grow to their budget)."""
+        while self._queue and not self._live.all():
+            req = self._queue[0]
+            need = self._blocks_for(len(req.prompt), req.max_new_tokens)
+            if self.alloc.num_free - int(self._resv.sum()) < need:
+                break                        # wait for EOS to free blocks
+            self._queue.pop(0)
+            slot = int(np.argmin(self._live))
+            self._slots[slot] = req
+            self._live[slot] = True
+            self._lengths[slot] = 0
+            self._prompt_pos[slot] = 0
+            self._resv[slot] = need
+            self._temps[slot] = req.temperature
+
+    # ------------------------------------------------------------- slots --
+
+    def _finish(self, slot: int) -> Request:
+        req = self._slots[slot]
+        req.done = True
+        row = self._tables[slot]
+        self.alloc.free(row[row >= 0])       # free-at-EOS
+        row[:] = -1
+        self._resv[slot] = 0
+        self._slots[slot] = None
+        self._live[slot] = False
+        self._lengths[slot] = 0
+        self._prompt_pos[slot] = 0
+        self._temps[slot] = 0.0
+        return req
+
+    def _grow_tables(self, t_valid: np.ndarray):
+        """Alloc-on-frontier-crossing: extend each slot's table to cover
+        lengths + t_valid before the step writes there."""
+        for slot in np.flatnonzero(t_valid > 0):
+            needed = -(-int(self._lengths[slot] + t_valid[slot])
+                       // self.block_size)
+            row = self._tables[slot]
+            held = int((row >= 0).sum())
+            for j in range(held, needed):
+                row[j] = self.alloc.alloc()
+                self._resv[slot] = max(self._resv[slot] - 1, 0)
+
+    def _write_positions(self, t_valid: np.ndarray, width: int) -> np.ndarray:
+        """Flat pool scatter targets (B, width): token i of slot b lands at
+        table[b, (len+i)//bs]*bs + (len+i)%bs while i < t_valid[b]; invalid
+        lanes are steered into the trash block (position i of block 0)."""
+        bs = self.block_size
+        wp = np.tile(np.arange(width, dtype=np.int64)[None, :],
+                     (self.max_batch, 1)) + TRASH_BLOCK * bs
+        for slot in np.flatnonzero(t_valid > 0):
+            tv = int(t_valid[slot])
+            gpos = int(self._lengths[slot]) + np.arange(tv)
+            blocks = self._tables[slot, gpos // bs].astype(np.int64)
+            wp[slot, :tv] = blocks * bs + gpos % bs
+        return wp.astype(np.int32)
+
+    def _step(self, width: int) -> list[Request]:
+        """One batched step: chunk (width == block_size, some slot is mid-
+        prompt) or pure decode (width == 1). Returns newly finished."""
+        live = self._live.copy()
+        self.occupancy_sum += float(live.mean())
+        self.occupancy_steps += 1
+        t_valid = np.zeros(self.max_batch, np.int32)
+        toks = np.zeros((self.max_batch, width), np.int32)
+        for slot in np.flatnonzero(live):
+            req = self._slots[slot]
+            pos = int(self._prompt_pos[slot])
+            if pos < len(req.prompt):        # chunked prefill
+                tv = min(width, len(req.prompt) - pos)
+                toks[slot, :tv] = req.prompt[pos:pos + tv]
+                t_valid[slot] = tv
+            else:                            # decode rides along, t_valid 1
+                toks[slot, 0] = self._last[slot]
+                t_valid[slot] = 1
+        self._grow_tables(t_valid)
+        cache = dict(self._cache, length=jnp.asarray(self._lengths))
+        extras = {"block_table": jnp.asarray(self._tables),
+                  "write_pos": jnp.asarray(self._write_positions(t_valid,
+                                                                 width)),
+                  "kv_len": jnp.asarray(self._lengths + t_valid)}
+        logits, self._cache = self._step_fn(self.w, self.hccs,
+                                            jnp.asarray(toks), cache, extras,
+                                            jnp.asarray(t_valid))
+        # a slot samples this step iff it produced a next token: decoding, or
+        # its prompt completed within this chunk
+        samples = live & (self._prompt_pos + t_valid
+                          >= np.asarray([len(r.prompt) if r else 1 << 30
+                                         for r in self._slots]))
+        self._key, nxt = sample_tokens(self._key, logits,
+                                       np.where(samples, self._temps, 0.0))
+        finished = []
+        for slot in np.flatnonzero(live):
+            req = self._slots[slot]
+            tv = int(t_valid[slot])
+            was_prefill = self._prompt_pos[slot] < len(req.prompt)
+            self._lengths[slot] += tv
+            self._prompt_pos[slot] = min(self._prompt_pos[slot] + tv,
+                                         len(req.prompt))
+            if not samples[slot]:
+                continue                     # still mid-prompt
+            tok = int(nxt[slot])
+            req.out_tokens.append(tok)
+            self._last[slot] = tok
+            # the cache-full guard only applies to decode-written KV — the
+            # prefill-completion sample mirrors the continuous engine's
+            # admission sample, which is not length-guarded
+            if (len(req.out_tokens) >= req.max_new_tokens or
+                    (self.eos_id is not None and tok == self.eos_id) or
+                    (not was_prefill and
+                     self._lengths[slot] >= self.max_len - 1)):
+                finished.append(self._finish(slot))
+        return finished
+
+    # --------------------------------------------------------------- run --
+
+    def run(self) -> list[Request]:
+        """Serve the whole queue; returns finished requests (uid order
+        follows completion, not submission)."""
+        finished: list[Request] = []
+        while self._queue or self._live.any():
+            self._admit()
+            assert self._live.any(), "admission stalled with free pool"
+            prefilling = any(
+                self._live[s] and self._prompt_pos[s] < len(self._slots[s].prompt)
+                for s in range(self.max_batch) if self._slots[s] is not None)
+            finished.extend(
+                self._step(self.block_size if prefilling else 1))
+        return finished

@@ -25,6 +25,10 @@ def pytest_configure(config):
 def pytest_addoption(parser):
     parser.addoption("--runslow", action="store_true", default=False,
                      help="also run tests marked slow")
+    parser.addoption("--cache-layout", default="slot",
+                     choices=("slot", "paged"),
+                     help="KV-cache layout the engine-level decode-kernel "
+                          "parity suite runs against (CI runs both)")
 
 
 def pytest_collection_modifyitems(config, items):
@@ -46,6 +50,29 @@ def rng():
 def seeded_key():
     """Seeded jax PRNG key."""
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture
+def cache_layout(request):
+    """The --cache-layout option: which KV layout engine-level suites use."""
+    return request.config.getoption("--cache-layout")
+
+
+@pytest.fixture
+def make_engine(cache_layout):
+    """Factory building the continuous-batching engine for the selected
+    cache layout: ContinuousEngine (slot arena) or PagedEngine (block pool).
+    Both schedule mixed-length traffic step-by-step, so engine-level tests
+    are layout-agnostic through this fixture."""
+    def make(params, cfg, **kw):
+        if cache_layout == "paged":
+            from repro.serve import PagedEngine
+            kw.setdefault("block_size", 16)
+            return PagedEngine(params, cfg, **kw)
+        from repro.serve import ContinuousEngine
+        return ContinuousEngine(params, cfg, **kw)
+
+    return make
 
 
 @pytest.fixture

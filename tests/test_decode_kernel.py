@@ -1,16 +1,19 @@
-"""Parity tests for the fused single-query HCCS decode kernel.
+"""Parity tests for the fused single-query HCCS decode kernels.
 
 hccs_decode is asserted against the pure-jnp oracle (kernels/ref.py) and
 against hccs_mha_fused (the prefill kernel) on the last causal row, covering
 causal semantics, GQA packing, per-slot padded lengths, and per-head theta.
-All cases run in interpret mode (CPU); on TPU the same calls lower to Mosaic.
+hccs_paged_decode (the block-table gather variant) is asserted against its
+own oracle and against hccs_decode on an equivalent contiguous layout,
+covering sentinel skipping, scrambled physical block order, and sub-block
+tiling. All cases run in interpret mode (CPU); on TPU they lower to Mosaic.
 """
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core.constraints import default_params
-from repro.kernels import hccs_attention, hccs_decode
+from repro.kernels import hccs_attention, hccs_decode, hccs_paged_decode
 from repro.kernels import ref as REF
 
 pytestmark = pytest.mark.kernel
@@ -128,3 +131,100 @@ def test_decode_block_size_invariant(rng):
     a = hccs_decode(q, k, v, lengths, scale, theta, block_k=16)
     c = hccs_decode(q, k, v, lengths, scale, theta, block_k=96)
     np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=1e-5)
+
+
+# ---------------------------------------------------------------- paged --
+
+def _paged_case(rng, b, h, hkv, d, bs, nblk, lengths):
+    """Random pool + valid block tables: each slot's first ceil(len/bs)
+    table entries get distinct pool blocks (scrambled order), the rest are
+    the -1 sentinel. Returns the paged operands plus the equivalent
+    contiguous (B, Hkv, nblk*bs, d) k/v for cross-checking."""
+    num_blocks = 1 + b * nblk                 # block 0 reserved (trash)
+    q = jnp.asarray(rng.normal(0, 1, (b, h, d)), jnp.float32)
+    kp = jnp.asarray(rng.normal(0, 1, (num_blocks, hkv, bs, d)), jnp.float32)
+    vp = jnp.asarray(rng.normal(0, 1, (num_blocks, hkv, bs, d)), jnp.float32)
+    perm = rng.permutation(np.arange(1, num_blocks))
+    table = np.full((b, nblk), -1, np.int32)
+    taken = 0
+    for i, ln in enumerate(lengths):
+        held = -(-ln // bs)
+        table[i, :held] = perm[taken:taken + held]
+        taken += held
+    B, S, D = default_params(max(nblk * bs, 4))
+    theta = jnp.tile(jnp.asarray([[B, S, D]], jnp.int32), (h, 1))
+    scale = jnp.full((h,), 0.05, jnp.float32)
+    kc = np.asarray(kp)[np.maximum(table, 0)].transpose(0, 2, 1, 3, 4)
+    vc = np.asarray(vp)[np.maximum(table, 0)].transpose(0, 2, 1, 3, 4)
+    kc = jnp.asarray(kc.reshape(b, hkv, nblk * bs, d))
+    vc = jnp.asarray(vc.reshape(b, hkv, nblk * bs, d))
+    return q, kp, vp, jnp.asarray(table), scale, theta, kc, vc
+
+
+@pytest.mark.parametrize("gqa", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("mode", ["wide", "i16_div", "i16_clb"])
+def test_paged_decode_vs_oracle(gqa, mode, rng):
+    h, hkv = gqa
+    b, d, bs, nblk = 3, 32, 16, 4
+    lengths = [40, 16, 7]
+    q, kp, vp, table, scale, theta, _, _ = _paged_case(
+        rng, b, h, hkv, d, bs, nblk, lengths)
+    ln = jnp.asarray(lengths, jnp.int32)
+    got = hccs_paged_decode(q, kp, vp, table, ln, scale, theta, mode=mode)
+    want = REF.hccs_paged_decode_ref(q, kp, vp, table, ln, scale, theta,
+                                     mode=mode)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-3)
+
+
+def test_paged_decode_matches_contiguous_kernel(rng):
+    """Block-table gather over a scrambled pool must equal hccs_decode on the
+    contiguous equivalent — physical block placement is semantically inert."""
+    b, h, hkv, d, bs, nblk = 3, 4, 2, 32, 16, 4
+    lengths = [40, 64, 1]
+    q, kp, vp, table, scale, theta, kc, vc = _paged_case(
+        rng, b, h, hkv, d, bs, nblk, lengths)
+    ln = jnp.asarray(lengths, jnp.int32)
+    got = hccs_paged_decode(q, kp, vp, table, ln, scale, theta)
+    want = hccs_decode(q, kc, vc, ln, scale, theta, block_k=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_paged_decode_subblock_tiling_invariant(rng):
+    """block_k < block_size sweeps each pool block in sub-tiles; the result
+    must not depend on the tiling."""
+    b, h, hkv, d, bs, nblk = 2, 4, 2, 32, 32, 3
+    lengths = [50, 23]
+    q, kp, vp, table, scale, theta, _, _ = _paged_case(
+        rng, b, h, hkv, d, bs, nblk, lengths)
+    ln = jnp.asarray(lengths, jnp.int32)
+    a = hccs_paged_decode(q, kp, vp, table, ln, scale, theta, block_k=32)
+    c = hccs_paged_decode(q, kp, vp, table, ln, scale, theta, block_k=8)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=1e-5)
+
+
+def test_paged_decode_sentinel_blocks_inert(rng):
+    """Poisoning every block the tables do NOT own (incl. the trash block)
+    must not change any output — dead entries are skipped, tails masked."""
+    b, h, hkv, d, bs, nblk = 3, 4, 2, 32, 16, 4
+    lengths = [40, 16, 0]                     # slot 2 holds nothing
+    q, kp, vp, table, scale, theta, _, _ = _paged_case(
+        rng, b, h, hkv, d, bs, nblk, lengths)
+    ln = jnp.asarray(lengths, jnp.int32)
+    got = hccs_paged_decode(q, kp, vp, table, ln, scale, theta)
+    np.testing.assert_allclose(np.asarray(got)[2], 0.0, atol=1e-7)
+    owned = np.unique(np.asarray(table)[np.asarray(table) >= 0])
+    mask = np.ones(kp.shape[0], bool)
+    mask[owned] = False
+    kp_p = jnp.where(jnp.asarray(mask)[:, None, None, None], 1e6, kp)
+    vp_p = jnp.where(jnp.asarray(mask)[:, None, None, None], -1e6, vp)
+    poisoned = hccs_paged_decode(q, kp_p, vp_p, table, ln, scale, theta)
+    np.testing.assert_allclose(np.asarray(poisoned), np.asarray(got),
+                               atol=1e-6)
+    # the partially-filled tail of a live block is masked too
+    tail = np.array(kp)
+    blk40 = int(np.asarray(table)[0, 2])      # slot 0's third block: rows 8+
+    tail[blk40, :, 40 - 2 * bs:, :] = 1e6
+    poisoned2 = hccs_paged_decode(q, jnp.asarray(tail), vp, table, ln,
+                                  scale, theta)
+    np.testing.assert_allclose(np.asarray(poisoned2), np.asarray(got),
+                               atol=1e-6)

@@ -1,0 +1,89 @@
+"""Property-based tests for the paged-KV block allocator (hypothesis-driven).
+
+Invariants under arbitrary alloc/free interleavings:
+  * no block is ever aliased across live holders;
+  * free + live always partition {1, ..., num_blocks-1} (conservation —
+    the trash block 0 is reserved and never handed out);
+  * exhaustion raises BlockPoolExhausted BEFORE any state is corrupted.
+
+The whole module skips cleanly when `hypothesis` is not installed (bare
+environments run the deterministic allocator tests in test_serve_engine.py).
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
+
+from repro.serve.paged import (BlockAllocator, BlockPoolExhausted,  # noqa: E402
+                               TRASH_BLOCK)
+
+
+@st.composite
+def alloc_free_trace(draw):
+    """(num_blocks, ops): ops are ('alloc', holder) / ('free', holder) over a
+    handful of holders — a compressed model of requests acquiring blocks at
+    frontier crossings and releasing them all at EOS."""
+    num_blocks = draw(st.integers(2, 24))
+    n_holders = draw(st.integers(1, 6))
+    ops = draw(st.lists(
+        st.tuples(st.sampled_from(["alloc", "free"]),
+                  st.integers(0, n_holders - 1)),
+        max_size=80))
+    return num_blocks, ops
+
+
+@given(alloc_free_trace())
+@settings(max_examples=200, deadline=None)
+def test_no_aliasing_and_conservation(trace):
+    num_blocks, ops = trace
+    alloc = BlockAllocator(num_blocks)
+    held = {}                                  # holder -> [blocks]
+    for op, holder in ops:
+        if op == "alloc":
+            try:
+                blk = alloc.alloc()
+            except BlockPoolExhausted:
+                # exhaustion must be consistent and non-corrupting
+                assert alloc.num_free == 0
+                continue
+            assert blk != TRASH_BLOCK
+            assert 0 < blk < num_blocks
+            # no aliasing: the block is in no other holder's set
+            for other in held.values():
+                assert blk not in other
+            held.setdefault(holder, []).append(blk)
+        else:
+            blocks = held.pop(holder, [])
+            alloc.free(blocks)                 # free-at-EOS releases all
+        # conservation: free + live partition the usable id range
+        n_held = sum(len(v) for v in held.values())
+        assert alloc.num_free + n_held == num_blocks - 1
+
+
+@given(st.integers(2, 16))
+@settings(max_examples=50, deadline=None)
+def test_exhaustion_raises_before_corruption(num_blocks):
+    alloc = BlockAllocator(num_blocks)
+    got = [alloc.alloc() for _ in range(num_blocks - 1)]
+    assert sorted(got) == list(range(1, num_blocks))   # all usable, no trash
+    with pytest.raises(BlockPoolExhausted):
+        alloc.alloc()
+    # state untouched by the failed alloc: everything still live, a free
+    # makes the pool usable again with no duplicate handout
+    assert alloc.num_free == 0
+    alloc.free([got[0]])
+    assert alloc.alloc() == got[0]
+
+
+@given(st.integers(2, 16))
+@settings(max_examples=50, deadline=None)
+def test_double_free_and_foreign_free_rejected(num_blocks):
+    alloc = BlockAllocator(num_blocks)
+    blk = alloc.alloc()
+    alloc.free([blk])
+    with pytest.raises(ValueError):
+        alloc.free([blk])                      # double free
+    with pytest.raises(ValueError):
+        alloc.free([TRASH_BLOCK])              # never-allocated block

@@ -1,6 +1,6 @@
 """Continuous-batching engine behavior: slot reuse, mid-flight admission,
-wave-vs-continuous greedy parity, finished-slot cache isolation, and the
-fused decode-kernel dispatch."""
+wave-vs-continuous greedy parity, finished-slot cache isolation, the fused
+decode-kernel dispatch, and paged-KV (block pool) parity + memory bounds."""
 import copy
 
 import jax
@@ -9,7 +9,8 @@ import numpy as np
 import pytest
 
 from repro.models import model as M
-from repro.serve import ContinuousEngine, Request, ServeEngine
+from repro.serve import (BlockAllocator, BlockPoolExhausted, ContinuousEngine,
+                         PagedEngine, Request, ServeEngine, kv_cache_bytes)
 
 
 @pytest.fixture
@@ -182,11 +183,13 @@ def test_finished_slot_cache_isolated(served, rng):
 
 
 @pytest.mark.parametrize("mode", ["i16_div", "wide", "i8_div"])
-def test_decode_kernel_engine_parity(tiny_cfg, rng, mode):
-    """The fused hccs_decode dispatch generates the same greedy tokens as the
-    XLA STE decode path. For i8 modes the dispatch must fall back to the XLA
-    path (the kernel cannot reproduce per-element i8 truncation), so parity
-    there is trivially exact — the test guards against silent remapping."""
+def test_decode_kernel_engine_parity(tiny_cfg, rng, mode, make_engine):
+    """The fused decode-kernel dispatch generates the same greedy tokens as
+    the XLA STE decode path — for BOTH cache layouts (run with
+    ``--cache-layout paged`` to drive hccs_paged_decode instead of
+    hccs_decode). For i8 modes the dispatch must fall back to the XLA path
+    (the kernel cannot reproduce per-element i8 truncation), so parity there
+    is trivially exact — the test guards against silent remapping."""
     base = dict(attention_prob="hccs", hccs_mode=mode)
     cfg0 = tiny_cfg(**base)
     cfgk = tiny_cfg(**base, decode_kernel="fused")
@@ -194,12 +197,104 @@ def test_decode_kernel_engine_parity(tiny_cfg, rng, mode):
     reqs = _requests(rng, 4)
     outs = []
     for cfg in (cfg0, cfgk):
-        eng = ContinuousEngine(params, cfg, max_batch=4, max_len=64)
+        eng = make_engine(params, cfg, max_batch=4, max_len=64)
         rs = copy.deepcopy(reqs)
         for r in rs:
             eng.submit(r)
         outs.append({r.uid: r.out_tokens for r in eng.run()})
     assert outs[0] == outs[1]
+
+
+def test_paged_vs_continuous_parity_and_memory(served, rng):
+    """Acceptance: the paged engine produces greedy outputs token-identical
+    to the continuous engine on a mixed-length workload, while its block
+    pool allocates <= 50% of the dense slot-arena KV bytes at equal
+    max_batch / max_len."""
+    cfg, params = served
+    reqs = _requests(rng, 8, lens=(4, 7, 11, 15, 21), max_new=6)
+    reqs[1].max_new_tokens = 1           # budget consumed at prefill end
+    reqs[5].max_new_tokens = 12
+    cont = ContinuousEngine(params, cfg, max_batch=4, max_len=64)
+    paged = PagedEngine(params, cfg, max_batch=4, max_len=64, block_size=16)
+    rc, rp = copy.deepcopy(reqs), copy.deepcopy(reqs)
+    for r in rc:
+        cont.submit(r)
+    for r in rp:
+        paged.submit(r)
+    got_c = {r.uid: r.out_tokens for r in cont.run()}
+    got_p = {r.uid: r.out_tokens for r in paged.run()}
+    assert got_c == got_p
+    assert len(got_p[reqs[1].uid]) == 1
+    assert kv_cache_bytes(paged._cache) <= 0.5 * kv_cache_bytes(cont._cache)
+    # free-at-EOS: the whole pool is back on the free list after the run
+    assert paged.alloc.num_free == paged.num_blocks - 1
+    assert (paged._tables == -1).all()
+
+
+def test_paged_matches_isolated_decode(served, rng):
+    """Chunked prefill + block-table attention must be slot-interference-free:
+    each request's output in an oversubscribed paged batch equals its output
+    served alone (cf. the continuous-engine version of this test)."""
+    cfg, params = served
+    reqs = _requests(rng, 5, lens=(4, 7, 11, 15), max_new=5)
+    eng = PagedEngine(params, cfg, max_batch=2, max_len=64, block_size=16)
+    batch = copy.deepcopy(reqs)
+    for r in batch:
+        eng.submit(r)
+    got = {r.uid: r.out_tokens for r in eng.run()}
+    for req in reqs:
+        solo = PagedEngine(params, cfg, max_batch=2, max_len=64,
+                           block_size=16)
+        r = copy.deepcopy(req)
+        solo.submit(r)
+        (done,) = solo.run()
+        assert got[req.uid] == done.out_tokens, req.uid
+
+
+def test_paged_chunked_prefill_spans_blocks(served, rng):
+    """A prompt much longer than block_size is fed in multiple chunks and
+    still matches the continuous engine (which prefills it in one call)."""
+    cfg, params = served
+    prompt = rng.integers(0, 256, 41).astype(np.int32)   # 3 chunks of 16
+    outs = []
+    for make in (lambda: ContinuousEngine(params, cfg, max_batch=2,
+                                          max_len=64),
+                 lambda: PagedEngine(params, cfg, max_batch=2, max_len=64,
+                                     block_size=16)):
+        eng = make()
+        eng.submit(Request(uid=0, prompt=prompt.copy(), max_new_tokens=6))
+        (done,) = eng.run()
+        outs.append(done.out_tokens)
+    assert outs[0] == outs[1]
+
+
+def test_paged_allocator_exhaustion_and_admission_gate(served, rng):
+    """Direct allocator exhaustion raises before corruption, and the engine's
+    reservation-gated admission never over-commits the pool: with a pool too
+    small for two full requests, they are served back-to-back, correctly."""
+    cfg, params = served
+    alloc = BlockAllocator(3)
+    a, b = alloc.alloc(), alloc.alloc()
+    assert {a, b} == {1, 2}
+    with pytest.raises(BlockPoolExhausted):
+        alloc.alloc()
+    alloc.free([a, b])
+    # pool of 4 usable blocks; each request needs ceil((13+6)/8) = 3
+    eng = PagedEngine(params, cfg, max_batch=2, max_len=32, block_size=8,
+                      num_blocks=5)
+    reqs = _requests(rng, 2, lens=(13,), max_new=6)
+    for r in copy.deepcopy(reqs):
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == 2 and all(r.done for r in done)
+    assert eng.alloc.num_free == 4
+    # a request that can never fit the pool is rejected at submit: 2 usable
+    # blocks but ceil((17 + 5) / 8) = 3 needed
+    small = PagedEngine(params, cfg, max_batch=2, max_len=32, block_size=8,
+                        num_blocks=3)
+    with pytest.raises(ValueError):
+        small.submit(Request(uid=9, prompt=rng.integers(0, 256, 17).astype(
+            np.int32), max_new_tokens=5))
 
 
 def test_temperature_sampling_and_validation(served, rng):
