@@ -1,5 +1,5 @@
 """Serving throughput: wave lockstep vs slot-based continuous batching vs
-paged-KV chunked prefill.
+paged-KV chunked prefill, plus paged prompt-prefix sharing.
 
 A mixed prompt/output-length workload (the online-serving regime): prompt
 lengths and output budgets drawn from skewed distributions, so the wave
@@ -9,9 +9,15 @@ freed slots every step. Reported tokens/sec is generated tokens over wall
 clock, after a warm-up pass that covers every jit shape (prefill buckets or
 chunk widths + decode) for each engine, so compile time is excluded.
 
+A second, shared-system-prompt workload (every request opens with the same
+48-token prefix — the chatbot/few-shot regime) runs the paged engine with
+prefix sharing off vs on and records prefix hit-rate, prefill tokens
+skipped, COW copies, and cache bytes.
+
 Machine-readable output: every run writes BENCH_serving.json (override with
 --json) with tok/s, persistent KV-cache bytes, and mean batch occupancy per
-engine, so the perf trajectory is tracked across PRs.
+engine — plus the prefix-sharing rows — so the perf trajectory is tracked
+across PRs.
 
     PYTHONPATH=src python -m benchmarks.serving_throughput \
         --engine wave --engine paged --json out.json
@@ -35,6 +41,7 @@ VOCAB = 512
 MAX_BATCH = 8
 MAX_LEN = 128
 BLOCK_SIZE = 16
+SYSTEM_PROMPT_LEN = 48               # shared prefix of the prefix workload
 DEFAULT_JSON = "BENCH_serving.json"
 
 
@@ -55,6 +62,21 @@ def _workload(rng, n):
         out = int(rng.choice([4, 8, 16, 32], p=[.35, .3, .2, .15]))
         reqs.append(Request(uid=i,
                             prompt=rng.integers(0, VOCAB, plen).astype(np.int32),
+                            max_new_tokens=out))
+    return reqs
+
+
+def _prefix_workload(rng, n):
+    """Shared-system-prompt traffic: every request opens with the same
+    48-token prefix (3 full KV blocks) followed by a short unique tail —
+    the regime prefix sharing targets (chatbots, few-shot headers)."""
+    system = rng.integers(0, VOCAB, SYSTEM_PROMPT_LEN).astype(np.int32)
+    reqs = []
+    for i in range(n):
+        tail = rng.integers(0, VOCAB,
+                            int(rng.choice([4, 8, 12, 20]))).astype(np.int32)
+        out = int(rng.choice([4, 8, 16], p=[.4, .35, .25]))
+        reqs.append(Request(uid=i, prompt=np.concatenate([system, tail]),
                             max_new_tokens=out))
     return reqs
 
@@ -93,6 +115,7 @@ def _serve(make_engine, warmup, reqs):
     eng.run()
     s0 = getattr(eng, "occupancy_sum", 0.0)
     n0 = getattr(eng, "occupancy_steps", 0)
+    p0 = eng.prefix_stats() if getattr(eng, "prefix_sharing", False) else None
     work = copy.deepcopy(reqs)
     for r in work:
         eng.submit(r)
@@ -102,9 +125,21 @@ def _serve(make_engine, warmup, reqs):
     # mean live fraction over the TIMED steps only (delta past the warm-up)
     n = getattr(eng, "occupancy_steps", 0) - n0
     occ = (getattr(eng, "occupancy_sum", 0.0) - s0) / n if n else None
+    prefix = None
+    if p0 is not None:
+        # counters are cumulative; report the timed segment only (the warm-up
+        # populates the prefix cache, so this is the steady-state hit rate)
+        p1 = eng.prefix_stats()
+        prefix = {k: p1[k] - p0[k]
+                  for k in ("lookups", "hits", "prefill_tokens",
+                            "prefill_tokens_skipped", "cow_copies",
+                            "evictions")}
+        prefix["hit_rate"] = prefix["hits"] / max(prefix["lookups"], 1)
+        prefix["skip_rate"] = (prefix["prefill_tokens_skipped"]
+                               / max(prefix["prefill_tokens"], 1))
     return dict(tokens=sum(len(r.out_tokens) for r in done), seconds=dt,
                 cache_bytes=_cache_bytes(eng),
-                occupancy=occ)
+                occupancy=occ, prefix=prefix)
 
 
 def run(fast: bool = True, engines: list | None = None,
@@ -136,11 +171,40 @@ def run(fast: bool = True, engines: list | None = None,
             row["cache_bytes"] / 2**20, occ))
         out.append(dict(scheduler=name, tok_per_s=tps,
                         vs_first=tps / base_tps, **row))
+
+    # shared-system-prompt workload: paged engine, prefix sharing off vs on
+    # (skipped when --engine filters to non-paged rows only)
+    prefix_out = []
+    if engines is None or any(e.startswith("paged") for e in names):
+        preqs = _prefix_workload(np.random.default_rng(7), n)
+        pwarm = _prefix_workload(np.random.default_rng(7), n)
+        print("\n# prefix sharing (paged, shared-system-prompt workload): "
+              "variant, tokens, s, tok/s, hit_rate, skip_rate, cow, cache_MB")
+        for sharing in (False, True):
+            row = _serve(
+                lambda: PagedEngine(params, cfg, block_size=BLOCK_SIZE,
+                                    max_batch=MAX_BATCH, max_len=MAX_LEN,
+                                    prefix_sharing=sharing),
+                pwarm, preqs)
+            tps = row["tokens"] / row["seconds"]
+            p = row["prefix"]
+            print("prefix,%s,%d,%.2f,%.1f,%s,%s,%s,%.2f" % (
+                "on" if sharing else "off", row["tokens"], row["seconds"],
+                tps,
+                "-" if p is None else "%.2f" % p["hit_rate"],
+                "-" if p is None else "%.2f" % p["skip_rate"],
+                "-" if p is None else p["cow_copies"],
+                row["cache_bytes"] / 2**20))
+            prefix_out.append(dict(variant="on" if sharing else "off",
+                                   tok_per_s=tps, **row))
+
     if json_path:
         with open(json_path, "w") as f:
             json.dump(dict(benchmark="serving_throughput",
                            max_batch=MAX_BATCH, max_len=MAX_LEN,
-                           block_size=BLOCK_SIZE, requests=n, engines=out),
+                           block_size=BLOCK_SIZE, requests=n,
+                           system_prompt_len=SYSTEM_PROMPT_LEN, engines=out,
+                           prefix_sharing=prefix_out),
                       f, indent=2)
         print(f"# wrote {json_path}")
     return out

@@ -80,6 +80,11 @@ class ModelConfig:
     # global pool (0 = engine auto-sizes to half the equivalent slot arena)
     block_size: int = 32
     num_blocks: int = 0
+    # paged prefix sharing: reuse full-block prompt-prefix KV across requests
+    # (system prompts, few-shot headers) via an engine-side prefix index and
+    # refcounted copy-on-write blocks (serve/paged.py). Only meaningful with
+    # cache_layout == "paged"; the slot-arena engines ignore it.
+    prefix_sharing: bool = False
 
     def __post_init__(self):
         if self.num_heads and not self.head_dim:

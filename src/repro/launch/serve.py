@@ -27,7 +27,14 @@ def main():
     ap.add_argument("--num-blocks", type=int, default=0,
                     help="paged KV pool size (0 = cfg.num_blocks, or "
                          "auto-size to half the dense arena)")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="reuse full-block prompt-prefix KV across requests "
+                         "(refcounted copy-on-write blocks; paged scheduler "
+                         "only)")
     args = ap.parse_args()
+    if args.prefix_sharing and args.scheduler != "paged":
+        raise SystemExit("--prefix-sharing requires --scheduler paged "
+                         "(prefix reuse needs the block pool)")
 
     import jax
     import numpy as np
@@ -48,7 +55,8 @@ def main():
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     max_len = args.prompt_len + args.new_tokens + 1
     if args.scheduler == "paged":
-        cfg = cfg.replace(cache_layout="paged")
+        cfg = cfg.replace(cache_layout="paged",
+                          prefix_sharing=args.prefix_sharing)
         eng = PagedEngine(params, cfg, max_batch=args.max_batch,
                           max_len=max_len,
                           block_size=args.block_size or None,
@@ -59,10 +67,23 @@ def main():
         eng = engine_cls(params, cfg, max_batch=args.max_batch,
                          max_len=max_len)
     rng = np.random.default_rng(0)
+    # with --prefix-sharing the demo traffic shares a system-prompt-style
+    # prefix (~3/4 of the prompt, rounded DOWN to the block size: sharing is
+    # block-granular, so a sub-block prefix can never hit — pass a smaller
+    # --block-size if the default swallows the whole prompt)
+    shared_len = 0
+    if args.prefix_sharing:
+        bs = args.block_size or cfg.block_size
+        shared_len = 3 * args.prompt_len // 4 // bs * bs
+        if shared_len == 0:
+            print(f"note: prompt-len {args.prompt_len} is under one KV block "
+                  f"({bs} tokens); prefix sharing cannot hit — lower "
+                  f"--block-size or raise --prompt-len")
+    shared = rng.integers(0, cfg.vocab_size, shared_len).astype(np.int32)
     for i in range(args.requests):
-        eng.submit(Request(uid=i,
-                           prompt=rng.integers(
-                               0, cfg.vocab_size, args.prompt_len).astype(np.int32),
+        tail = rng.integers(0, cfg.vocab_size,
+                            args.prompt_len - shared_len).astype(np.int32)
+        eng.submit(Request(uid=i, prompt=np.concatenate([shared, tail]),
                            max_new_tokens=args.new_tokens))
     t0 = time.perf_counter()
     done = eng.run()
@@ -70,6 +91,13 @@ def main():
     total_new = sum(len(r.out_tokens) for r in done)
     print(f"served {len(done)} requests, {total_new} tokens in {dt:.2f}s "
           f"({total_new / dt:.1f} tok/s)")
+    if args.prefix_sharing:
+        s = eng.prefix_stats()
+        print(f"prefix sharing: {s['hits']}/{s['lookups']} hits, "
+              f"{s['prefill_tokens_skipped']}/{s['prefill_tokens']} prefill "
+              f"tokens skipped ({100 * s['skip_rate']:.0f}%), "
+              f"{s['cow_copies']} COW copies, {s['evictions']} evictions, "
+              f"{s['cached_blocks']} blocks cached")
 
 
 if __name__ == "__main__":

@@ -366,6 +366,12 @@ def apply_attention(p, x, cfg, hccs=None, positions=None, cache=None,
     `write_pos` (B, T) flat scatter targets, and `kv_len` (B,) per-slot
     valid counts — the dispatch keys off `block_table`'s presence, the paged
     analogue of `length` going scalar-vs-vector for the slot arena.
+    Prefix sharing changes nothing here: a slot admitted past a shared
+    prefix arrives with cache["length"] already at the partial-prefill start
+    offset (so the default `positions = length + arange(t)` resumes RoPE at
+    the right absolute position), block tables may alias shared pool blocks
+    read-only, and the engine guarantees `write_pos` never targets a block
+    with refcount > 1 (copy-on-write runs host-side before the step).
     """
     b, t, d = x.shape
     h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim

@@ -5,4 +5,4 @@ from repro.serve.continuous import ContinuousEngine
 from repro.serve.engine import (Request, ServeEngine, kv_cache_bytes,
                                 sample_tokens)
 from repro.serve.paged import (BlockAllocator, BlockPoolExhausted,
-                               PagedEngine)
+                               PagedEngine, prefix_chunk)

@@ -1,33 +1,59 @@
-"""Paged KV-cache serving: block pool, block-table arena, chunked prefill.
+"""Paged KV-cache serving: block pool, block-table arena, chunked prefill,
+refcounted copy-on-write prefix sharing.
 
 Layout — a GLOBAL pool of fixed-size KV blocks plus per-request block tables
 (vLLM-style), replacing the continuous engine's per-slot (max_len,) KV
-reservation:
+reservation. Blocks are REFCOUNTED: `fork()` lets several holders (slots
+and the prefix index) reference the same physical block, and `free()` only
+returns a block to the free list when its last reference drops:
 
-    block pool (device, per layer)           block tables (host, per slot)
-    ┌────────────────────────────┐
-    │ blk 0  ████  trash         │   slot 0 ──▶ [ 3, 7, 1, -1]  len 40
-    │ blk 1  ███░  slot0 tbl[2]  │   slot 1 ──▶ [ 9,-1,-1, -1]  len  5
-    │ blk 2  ░░░░  free          │   slot 2 ──▶ [-1,-1,-1, -1]  free
-    │ blk 3  ████  slot0 tbl[0]  │
-    │ blk 4  ░░░░  free          │   free list: [2, 4, 6, ...]
-    │ blk 5  ████  slot1... etc  │   lengths:   [40, 5, 0]
-    └────────────────────────────┘
+    block pool (device, per layer)            block tables (host, per slot)
+    ┌───────────────────────────────┐
+    │ blk 0  ████  trash      ref – │   slot 0 ──▶ [ 3, 7, 1, -1]  len 40
+    │ blk 1  ███░  slot0      ref 1 │   slot 1 ──▶ [ 3, 7, 5, -1]  len 37
+    │ blk 2  ░░░░  free       ref 0 │                 │  │  └ COW copy of blk 1
+    │ blk 3  ████  shared     ref 3 │                 │  └ forked (prefix hit)
+    │ blk 4  ░░░░  free       ref 0 │                 └ forked (prefix hit)
+    │ blk 5  ████  slot1 COW  ref 1 │   free list: [2, 4, ...]
+    │ blk 7  ████  shared     ref 3 │   prefix trie: (root, chunk 0) ─▶ 3
+    └───────────────────────────────┘                 (blk 3, chunk 1) ─▶ 7
     pool k/v: (num_blocks, Hkv, block_size, hd); logical position p of slot b
     lives at pool block table[b, p // block_size], row p % block_size.
+    Above: slots 0 and 1 share the 2-block prompt prefix in blks 3 and 7
+    (ref 3 = two slots + the index); slot 1 needed to write into the last
+    shared block, so it was copied first (blk 1 -> blk 5, COW) — a holder
+    may only write into a block whose refcount is 1.
 
 Memory now scales with LIVE tokens, not max_batch * max_len: blocks are
 allocated when a slot's frontier crosses into them (alloc-on-frontier-
-crossing) and returned to the free list at EOS (free-at-EOS). Block 0 is
-reserved as the *trash block*: the jitted step has static shapes, so token
-lanes past a slot's valid count still scatter somewhere — they are steered
-into block 0, which no request ever owns and every mask hides.
+crossing) and dereferenced at EOS (free-at-EOS). Block 0 is reserved as the
+*trash block*: the jitted step has static shapes, so token lanes past a
+slot's valid count still scatter somewhere — they are steered into block 0,
+which no request ever owns and every mask hides.
 
 Admission uses CHUNKED PREFILL: a long prompt is fed `block_size` tokens at a
 time inside the regular batched step — decoding slots ride along with
 t_valid = 1 — instead of the continuous engine's separate bucket-padded
 prefill call. That kills the O(log max_len) prefill retrace buckets: the
 engine compiles exactly two step shapes, (B, block_size) and (B, 1).
+
+PREFIX SHARING (cfg.prefix_sharing / --prefix-sharing): as a request's
+prefill fills a block entirely with prompt tokens, the engine registers it
+in a prefix TRIE keyed by (parent block id, chunk token bytes) — exact
+content, no hash collisions, O(block_size) per level. Admission walks the
+trie over the longest run of full-block chunks of the new prompt and maps
+the hits into the new request's block table with `fork()` — skipping both
+the prefill FLOPs and the duplicate KV bytes — and chunked prefill starts
+at the first unmatched token (the per-slot `length` frontier doubles as the
+partial-prefill start offset for RoPE positions and write targets). The
+index holds its own reference, so cached prefixes survive the registering
+request's EOS; index-only LEAF blocks (ref 1, no indexed children) are
+evicted LRU-first under pool pressure — leaf-first keeps every surviving
+chain reachable from the root. At
+least the last prompt token is always re-fed (a fully-matched prompt still
+needs logits to sample from), which lands a write inside a shared block —
+the copy-on-write rule copies that block to a fresh one first, so shared KV
+bytes are immutable for their whole cached lifetime.
 
 Attention dispatch (models/attention.py) keys off `block_table` in the cache:
 the XLA path gathers each slot's blocks into a contiguous view; with
@@ -67,13 +93,21 @@ class BlockPoolExhausted(RuntimeError):
 
 
 class BlockAllocator:
-    """Host-side free-list allocator for the global KV block pool.
+    """Host-side refcounted free-list allocator for the global KV block pool.
+
+    A block is born with one reference (`alloc`), gains references when a new
+    holder maps it (`fork` — prefix hits and the prefix index itself), and
+    `free` drops one reference per entry, returning the block to the free
+    list only when the count reaches zero.
 
     Invariants (property-tested in tests/test_paged_alloc.py):
-      * a block is owned by at most one holder at a time (no aliasing);
-      * free + live partitions {1, ..., num_blocks-1} (conservation);
-      * exhaustion raises BlockPoolExhausted without mutating state;
-      * block 0 (the trash block) is never handed out.
+      * free + unique-live partitions {1, ..., num_blocks-1} (conservation);
+      * alloc never hands out a block with a nonzero refcount (no aliasing
+        except through explicit fork);
+      * freeing below zero (double free) and freeing/forking unknown blocks
+        raise without mutating state;
+      * block 0 (the trash block) is never handed out, forked, or freed;
+      * exhaustion raises BlockPoolExhausted without mutating state.
     """
 
     def __init__(self, num_blocks: int):
@@ -83,11 +117,20 @@ class BlockAllocator:
         self.num_blocks = num_blocks
         # pop() hands out low block ids first (cosmetic: keeps pools dense)
         self._free = list(range(num_blocks - 1, TRASH_BLOCK, -1))
-        self._live: set[int] = set()
+        self._ref: dict[int, int] = {}        # block -> refcount (>= 1)
 
     @property
     def num_free(self) -> int:
         return len(self._free)
+
+    @property
+    def num_live(self) -> int:
+        """Unique live blocks (each counted once regardless of refcount)."""
+        return len(self._ref)
+
+    def ref(self, blk) -> int:
+        """Current refcount of a block (0 if free / never allocated)."""
+        return self._ref.get(int(blk), 0)
 
     def alloc(self) -> int:
         if not self._free:
@@ -95,16 +138,56 @@ class BlockAllocator:
                 f"KV block pool exhausted: {self.num_blocks - 1} usable "
                 f"blocks all live")
         blk = self._free.pop()
-        self._live.add(blk)
+        self._ref[blk] = 1
+        return blk
+
+    def fork(self, blk) -> int:
+        """Add a reference to a live block (a new holder maps it read-only);
+        returns the block id for `table[j] = alloc.fork(blk)` chaining."""
+        blk = int(blk)
+        if blk == TRASH_BLOCK:
+            raise ValueError("the trash block is never forked")
+        if blk not in self._ref:
+            raise ValueError(f"forking block {blk} that is not live")
+        self._ref[blk] += 1
         return blk
 
     def free(self, blocks) -> None:
+        """Drop ONE reference per entry; a block only returns to the free
+        list when its last reference is dropped."""
         for blk in blocks:
             blk = int(blk)
-            if blk not in self._live:
+            if blk == TRASH_BLOCK:
+                raise ValueError("the trash block is never freed")
+            n = self._ref.get(blk)
+            if n is None:
                 raise ValueError(f"freeing block {blk} that is not live")
-            self._live.remove(blk)
-            self._free.append(blk)
+            if n == 1:
+                del self._ref[blk]
+                self._free.append(blk)
+            else:
+                self._ref[blk] = n - 1
+
+
+def prefix_chunk(prompt, j: int, block_size: int) -> bytes:
+    """Exact content bytes of prompt chunk j (tokens [j*bs, (j+1)*bs)). The
+    prefix index keys on (parent block id, chunk bytes) — a trie: the parent
+    id pins the whole history, so two chunks with equal tokens but different
+    prefixes stay distinct (zero collisions) at O(block_size) per level
+    instead of the O(prefix_len) a whole-prefix key would cost."""
+    return np.ascontiguousarray(
+        np.asarray(prompt[j * block_size:(j + 1) * block_size],
+                   np.int32)).tobytes()
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _copy_block_kv(layers, src, dst):
+    """Copy-on-write: duplicate pool block `src` into `dst` across all layers
+    for both k and v. One traced shape per pool geometry (src/dst are traced
+    scalars); donation lets XLA rewrite the pool in place."""
+    k, v = layers["k"], layers["v"]
+    return dict(layers, k=k.at[:, dst].set(k[:, src]),
+                v=v.at[:, dst].set(v[:, src]))
 
 
 def init_paged_cache(cfg, num_blocks: int, block_size: int, max_batch: int,
@@ -127,7 +210,8 @@ class PagedEngine:
     def __init__(self, params, cfg, *, max_batch: int = 8,
                  max_len: int = 512, eos_id: int | None = None,
                  cache_dtype=jnp.float32, block_size: int | None = None,
-                 num_blocks: int | None = None):
+                 num_blocks: int | None = None,
+                 prefix_sharing: bool | None = None):
         if cfg.hot_buffer != 0:
             raise ValueError(
                 "paged batching uses the block pool, not hot buffers "
@@ -170,6 +254,26 @@ class PagedEngine:
         # occupancy telemetry: running sum/count, O(1) state
         self.occupancy_sum = 0.0
         self.occupancy_steps = 0
+
+        # prefix sharing: exact-content index over full-block prompt-prefix
+        # chunks -> pool block id. The index holds its own reference on every
+        # registered block (fork at registration), so cached prefixes outlive
+        # the registering request; index-only blocks (ref == 1) are the
+        # eviction candidates, reclaimed LRU-first under pool pressure.
+        self.prefix_sharing = bool(cfg.prefix_sharing if prefix_sharing is None
+                                   else prefix_sharing)
+        # trie keys: (parent block id | -1 for the root, chunk bytes)
+        self._prefix_index: dict[tuple, int] = {}   # trie key -> block id
+        self._block_key: dict[int, tuple] = {}      # block id -> trie key
+        self._children: dict[int, int] = {}         # block id -> indexed kids
+        self._lru: dict[tuple, int] = {}            # trie key -> last touch
+        self._lru_clock = 0
+        self.prefix_lookups = 0
+        self.prefix_hits = 0
+        self.prefill_tokens_total = 0
+        self.prefill_tokens_skipped = 0
+        self.cow_copies = 0
+        self.prefix_evictions = 0
 
         # block tables + host slot table
         self._tables = np.full((max_batch, self._nblk_per_seq), -1, np.int32)
@@ -220,20 +324,173 @@ class PagedEngine:
     def _admit(self):
         """FIFO admission into free slots, gated on UNRESERVED free blocks
         covering the request's worst case (deadlock-free: admitted requests
-        can always grow to their budget)."""
+        can always grow to their budget).
+
+        With prefix sharing, the longest run of full-block prompt chunks
+        already in the index is forked into the new slot's table and prefill
+        starts at the first unmatched token; the reservation shrinks by the
+        matched blocks (they need no allocation) and grows by one when the
+        WHOLE prompt matched — re-feeding the last prompt token will write
+        inside a shared block, and the copy-on-write copy needs a block.
+        Index-only cached blocks are evicted on demand when the gate would
+        otherwise stall (num_free alone still covers every reservation, so
+        eviction can only help, never deadlock)."""
         while self._queue and not self._live.all():
             req = self._queue[0]
-            need = self._blocks_for(len(req.prompt), req.max_new_tokens)
-            if self.alloc.num_free - int(self._resv.sum()) < need:
+            matched = (self._match_prefix(req.prompt)
+                       if self.prefix_sharing else [])
+            start = min(len(matched) * self.block_size, len(req.prompt) - 1)
+            need = (self._blocks_for(len(req.prompt), req.max_new_tokens)
+                    - len(matched))
+            if len(matched) * self.block_size > start:
+                need += 1                    # full-prompt hit: COW copy block
+            resv_other = int(self._resv.sum())
+            protect = {blk for _, blk in matched}
+            while (self.alloc.num_free - resv_other < need
+                   and self._evict_one(protect)):
+                pass
+            if self.alloc.num_free - resv_other < need:
                 break                        # wait for EOS to free blocks
             self._queue.pop(0)
             slot = int(np.argmin(self._live))
+            for j, (key, blk) in enumerate(matched):
+                self._tables[slot, j] = self.alloc.fork(blk)
+                self._touch(key)
+            if self.prefix_sharing:
+                # counted at admission (not per gate retry), so hit_rate is
+                # per-request: lookups == requests admitted while sharing
+                self.prefix_lookups += 1
+                self.prefix_hits += bool(matched)
+            self.prefill_tokens_total += len(req.prompt)
+            self.prefill_tokens_skipped += start
             self._slots[slot] = req
             self._live[slot] = True
-            self._lengths[slot] = 0
-            self._prompt_pos[slot] = 0
+            self._lengths[slot] = start
+            self._prompt_pos[slot] = start
             self._resv[slot] = need
             self._temps[slot] = req.temperature
+
+    # ------------------------------------------------------------ prefix --
+
+    def _touch(self, key: tuple):
+        self._lru_clock += 1
+        self._lru[key] = self._lru_clock
+
+    def _match_prefix(self, prompt) -> list[tuple[tuple, int]]:
+        """Longest contiguous run of full-block prompt chunks present in the
+        prefix index, as [(trie key, block id), ...] from block 0 up. The
+        trie walk threads each hit's block id into the next level's key, so
+        it stops naturally at the first missing level — a deeper entry
+        without its parents is unreachable by construction."""
+        bs = self.block_size
+        matched = []
+        parent, j = -1, 0
+        while (j + 1) * bs <= len(prompt):
+            key = (parent, prefix_chunk(prompt, j, bs))
+            blk = self._prefix_index.get(key)
+            if blk is None:
+                break
+            matched.append((key, blk))
+            parent, j = blk, j + 1
+        return matched
+
+    def _register_prefix(self, slot: int, req: Request):
+        """Index every block of this slot now FULLY covered by prompt tokens.
+        The index takes its own reference (fork) so the cached KV survives
+        the request's EOS; on equal content the first writer wins (the walk
+        threads the INDEXED block into the next level's key, so a chain stays
+        rooted in index blocks even when this slot's table holds a COW copy
+        or a duplicate)."""
+        bs = self.block_size
+        parent = -1
+        for j in range(int(self._prompt_pos[slot]) // bs):
+            key = (parent, prefix_chunk(req.prompt, j, bs))
+            blk = self._prefix_index.get(key)
+            if blk is None:
+                blk = int(self._tables[slot, j])
+                self._prefix_index[key] = self.alloc.fork(blk)
+                self._block_key[blk] = key
+                self._children[parent] = self._children.get(parent, 0) + 1
+            self._touch(key)
+            parent = blk
+
+    def _evict_one(self, protect=frozenset()) -> bool:
+        """Reclaim the least-recently-used index-only LEAF block (ref == 1:
+        no live slot maps it; no indexed children: evicting an interior node
+        would orphan its whole subtree — unreachable entries squatting on
+        pool blocks). Returns False when nothing is evictable."""
+        for key in sorted(self._lru, key=self._lru.get):
+            blk = self._prefix_index[key]
+            if (blk in protect or self.alloc.ref(blk) != 1
+                    or self._children.get(blk, 0)):
+                continue
+            del self._prefix_index[key]
+            del self._block_key[blk]
+            del self._lru[key]
+            parent = key[0]          # a block id, or -1 for the trie root
+            self._children[parent] -= 1
+            if not self._children[parent]:
+                del self._children[parent]
+            self.alloc.free([blk])
+            self.prefix_evictions += 1
+            return True
+        return False
+
+    def _alloc_block(self) -> int:
+        """Pool alloc with eviction fallback: cached prefixes are a best-
+        effort use of free space and are reclaimed before exhaustion."""
+        if self.alloc.num_free == 0:
+            self._evict_one()
+        return self.alloc.alloc()
+
+    def _cow_shared(self, t_valid: np.ndarray):
+        """Copy-on-write: a slot may only write into a block whose refcount
+        is 1. Any shared block in this step's write range [length, length +
+        t_valid) is copied to a fresh block first (device-side copy across
+        all layers), the table entry is swapped, and the writer's reference
+        on the original is dropped — shared KV bytes stay immutable."""
+        bs = self.block_size
+        for slot in np.flatnonzero(t_valid > 0):
+            lo = int(self._lengths[slot])
+            hi = lo + int(t_valid[slot])
+            for j in range(lo // bs, -(-hi // bs)):
+                blk = int(self._tables[slot, j])
+                if self.alloc.ref(blk) <= 1:
+                    continue
+                new = self._alloc_block()
+                self._resv[slot] = max(self._resv[slot] - 1, 0)
+                self._cache = dict(
+                    self._cache,
+                    layers=_copy_block_kv(self._cache["layers"],
+                                          jnp.int32(blk), jnp.int32(new)))
+                self.alloc.free([blk])       # drop this slot's reference
+                self._tables[slot, j] = new
+                self.cow_copies += 1
+
+    def clear_prefix_cache(self):
+        """Drop every index reference; blocks with no live holder return to
+        the free list immediately."""
+        blocks = list(self._prefix_index.values())
+        self._prefix_index.clear()
+        self._block_key.clear()
+        self._children.clear()
+        self._lru.clear()
+        self.alloc.free(blocks)
+
+    def prefix_stats(self) -> dict:
+        """Cumulative prefix-sharing telemetry. prefill_tokens counts all
+        admitted prompt tokens regardless of the sharing setting (it is the
+        skip-rate denominator); every other counter stays zero when sharing
+        is disabled."""
+        return dict(
+            lookups=self.prefix_lookups, hits=self.prefix_hits,
+            hit_rate=self.prefix_hits / max(self.prefix_lookups, 1),
+            prefill_tokens=self.prefill_tokens_total,
+            prefill_tokens_skipped=self.prefill_tokens_skipped,
+            skip_rate=(self.prefill_tokens_skipped
+                       / max(self.prefill_tokens_total, 1)),
+            cow_copies=self.cow_copies, evictions=self.prefix_evictions,
+            cached_blocks=len(self._prefix_index))
 
     # ------------------------------------------------------------- slots --
 
@@ -241,7 +498,9 @@ class PagedEngine:
         req = self._slots[slot]
         req.done = True
         row = self._tables[slot]
-        self.alloc.free(row[row >= 0])       # free-at-EOS
+        # free-at-EOS drops this slot's references; blocks registered in the
+        # prefix index keep the index's reference and stay cached
+        self.alloc.free(row[row >= 0])
         row[:] = -1
         self._resv[slot] = 0
         self._slots[slot] = None
@@ -260,13 +519,20 @@ class PagedEngine:
             row = self._tables[slot]
             held = int((row >= 0).sum())
             for j in range(held, needed):
-                row[j] = self.alloc.alloc()
+                row[j] = self._alloc_block()
                 self._resv[slot] = max(self._resv[slot] - 1, 0)
 
     def _write_positions(self, t_valid: np.ndarray, width: int) -> np.ndarray:
         """Flat pool scatter targets (B, width): token i of slot b lands at
         table[b, (len+i)//bs]*bs + (len+i)%bs while i < t_valid[b]; invalid
-        lanes are steered into the trash block (position i of block 0)."""
+        lanes are steered into the trash block (position i of block 0).
+
+        The per-slot length is also the partial-prefill start offset under
+        prefix sharing: a slot admitted with `start` matched tokens begins
+        with _lengths[slot] == start, so both the write targets here and the
+        RoPE positions in attention.py (cache["length"] + arange(t)) resume
+        exactly past the shared frontier. _cow_shared ran before this, so no
+        target block has refcount > 1."""
         bs = self.block_size
         wp = np.tile(np.arange(width, dtype=np.int64)[None, :],
                      (self.max_batch, 1)) + TRASH_BLOCK * bs
@@ -296,6 +562,8 @@ class PagedEngine:
                 toks[slot, 0] = self._last[slot]
                 t_valid[slot] = 1
         self._grow_tables(t_valid)
+        if self.prefix_sharing:
+            self._cow_shared(t_valid)
         cache = dict(self._cache, length=jnp.asarray(self._lengths))
         extras = {"block_table": jnp.asarray(self._tables),
                   "write_pos": jnp.asarray(self._write_positions(t_valid,
@@ -319,6 +587,11 @@ class PagedEngine:
             self._lengths[slot] += tv
             self._prompt_pos[slot] = min(self._prompt_pos[slot] + tv,
                                          len(req.prompt))
+            if self.prefix_sharing and was_prefill:
+                # registration precedes any possible _finish below, so a
+                # prompt that completes and terminates on the same step still
+                # leaves its full-block prefix KV cached
+                self._register_prefix(slot, req)
             if not samples[slot]:
                 continue                     # still mid-prompt
             tok = int(nxt[slot])

@@ -15,6 +15,20 @@ import pytest
 jax.config.update("jax_platform_name", "cpu")
 
 
+def require_hypothesis():
+    """Module-level guard shared by the property-test files: skips the whole
+    module cleanly when `hypothesis` is not installed (bare environments run
+    the deterministic suites only). Use as the first executable statement,
+    BEFORE any `import hypothesis...`:
+
+        from conftest import require_hypothesis
+        hypothesis = require_hypothesis()
+
+    Centralized here so new property-test modules don't copy the
+    importorskip boilerplate (and can't typo the distribution name)."""
+    return pytest.importorskip("hypothesis")
+
+
 def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: heavyweight integration test (needs --runslow)")
@@ -29,6 +43,11 @@ def pytest_addoption(parser):
                      choices=("slot", "paged"),
                      help="KV-cache layout the engine-level decode-kernel "
                           "parity suite runs against (CI runs both)")
+    parser.addoption("--prefix-sharing", default="off", choices=("on", "off"),
+                     help="run the engine-level suites with paged prompt-"
+                          "prefix sharing (refcounted COW blocks) enabled; "
+                          "only meaningful with --cache-layout paged "
+                          "(CI runs paged under both settings)")
 
 
 def pytest_collection_modifyitems(config, items):
@@ -59,15 +78,23 @@ def cache_layout(request):
 
 
 @pytest.fixture
-def make_engine(cache_layout):
+def prefix_sharing(request):
+    """The --prefix-sharing option as a bool (paged engines only)."""
+    return request.config.getoption("--prefix-sharing") == "on"
+
+
+@pytest.fixture
+def make_engine(cache_layout, prefix_sharing):
     """Factory building the continuous-batching engine for the selected
-    cache layout: ContinuousEngine (slot arena) or PagedEngine (block pool).
-    Both schedule mixed-length traffic step-by-step, so engine-level tests
-    are layout-agnostic through this fixture."""
+    cache layout: ContinuousEngine (slot arena) or PagedEngine (block pool,
+    optionally with --prefix-sharing prompt-prefix reuse). Both schedule
+    mixed-length traffic step-by-step, so engine-level tests are
+    layout-agnostic through this fixture."""
     def make(params, cfg, **kw):
         if cache_layout == "paged":
             from repro.serve import PagedEngine
             kw.setdefault("block_size", 16)
+            kw.setdefault("prefix_sharing", prefix_sharing)
             return PagedEngine(params, cfg, **kw)
         from repro.serve import ContinuousEngine
         return ContinuousEngine(params, cfg, **kw)

@@ -4,9 +4,9 @@ These are the randomized generalizations of the deterministic unit tests in
 test_hccs_core.py. The whole module skips cleanly when `hypothesis` is not
 installed (bare environments run the deterministic suite only).
 """
-import pytest
+from conftest import require_hypothesis
 
-hypothesis = pytest.importorskip("hypothesis")
+hypothesis = require_hypothesis()
 
 import hypothesis.strategies as st  # noqa: E402
 import jax  # noqa: E402

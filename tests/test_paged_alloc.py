@@ -1,17 +1,25 @@
-"""Property-based tests for the paged-KV block allocator (hypothesis-driven).
+"""Property-based tests for the refcounted paged-KV block allocator
+(hypothesis-driven).
 
-Invariants under arbitrary alloc/free interleavings:
-  * no block is ever aliased across live holders;
-  * free + live always partition {1, ..., num_blocks-1} (conservation —
-    the trash block 0 is reserved and never handed out);
-  * exhaustion raises BlockPoolExhausted BEFORE any state is corrupted.
+Invariants under arbitrary alloc/fork/free interleavings (the serving
+engine's block churn: requests acquiring blocks at frontier crossings,
+forking shared prompt-prefix blocks, and dropping references at EOS / COW):
+  * conservation: num_free + unique live blocks == num_blocks - 1 (the
+    trash block 0 is reserved and never part of either side);
+  * alloc never hands out a block with a nonzero refcount, and a freed
+    block only returns to the free list when its LAST reference drops;
+  * double free (freeing below zero) and foreign free raise without
+    corrupting state;
+  * block 0 (the trash block) is never handed out, forked, or freed;
+  * exhaustion raises BlockPoolExhausted without mutating state.
 
 The whole module skips cleanly when `hypothesis` is not installed (bare
 environments run the deterministic allocator tests in test_serve_engine.py).
 """
 import pytest
+from conftest import require_hypothesis
 
-hypothesis = pytest.importorskip("hypothesis")
+hypothesis = require_hypothesis()
 
 import hypothesis.strategies as st  # noqa: E402
 from hypothesis import given, settings  # noqa: E402
@@ -21,26 +29,29 @@ from repro.serve.paged import (BlockAllocator, BlockPoolExhausted,  # noqa: E402
 
 
 @st.composite
-def alloc_free_trace(draw):
-    """(num_blocks, ops): ops are ('alloc', holder) / ('free', holder) over a
-    handful of holders — a compressed model of requests acquiring blocks at
-    frontier crossings and releasing them all at EOS."""
+def alloc_fork_free_trace(draw):
+    """(num_blocks, ops): ops are ('alloc', h, _) / ('fork', h, src) /
+    ('free_all', h, _) / ('free_one', h, _) over a handful of holders — a
+    compressed model of requests acquiring blocks at frontier crossings,
+    forking another holder's blocks on prefix hits, dropping a single
+    reference at COW, and releasing everything at EOS."""
     num_blocks = draw(st.integers(2, 24))
     n_holders = draw(st.integers(1, 6))
     ops = draw(st.lists(
-        st.tuples(st.sampled_from(["alloc", "free"]),
+        st.tuples(st.sampled_from(["alloc", "fork", "free_all", "free_one"]),
+                  st.integers(0, n_holders - 1),
                   st.integers(0, n_holders - 1)),
-        max_size=80))
+        max_size=100))
     return num_blocks, ops
 
 
-@given(alloc_free_trace())
-@settings(max_examples=200, deadline=None)
-def test_no_aliasing_and_conservation(trace):
+@given(alloc_fork_free_trace())
+@settings(max_examples=500, deadline=None)
+def test_refcount_conservation_and_no_aliasing(trace):
     num_blocks, ops = trace
     alloc = BlockAllocator(num_blocks)
-    held = {}                                  # holder -> [blocks]
-    for op, holder in ops:
+    held: dict[int, list] = {}                 # holder -> [block refs]
+    for op, holder, other in ops:
         if op == "alloc":
             try:
                 blk = alloc.alloc()
@@ -50,16 +61,38 @@ def test_no_aliasing_and_conservation(trace):
                 continue
             assert blk != TRASH_BLOCK
             assert 0 < blk < num_blocks
-            # no aliasing: the block is in no other holder's set
-            for other in held.values():
-                assert blk not in other
+            # a fresh block had refcount 0 before and exactly 1 now: it was
+            # in no holder's reference list (aliasing only via explicit fork)
+            for refs in held.values():
+                assert blk not in refs
+            assert alloc.ref(blk) == 1
             held.setdefault(holder, []).append(blk)
-        else:
-            blocks = held.pop(holder, [])
-            alloc.free(blocks)                 # free-at-EOS releases all
-        # conservation: free + live partition the usable id range
-        n_held = sum(len(v) for v in held.values())
-        assert alloc.num_free + n_held == num_blocks - 1
+        elif op == "fork":
+            src_refs = held.get(other)
+            if not src_refs:
+                # forking a block that is not live must raise cleanly
+                with pytest.raises(ValueError):
+                    alloc.fork(num_blocks)     # out-of-range id, never live
+                continue
+            blk = alloc.fork(src_refs[-1])
+            assert blk == src_refs[-1]
+            held.setdefault(holder, []).append(blk)
+        elif op == "free_all":
+            alloc.free(held.pop(holder, []))   # free-at-EOS drops every ref
+        else:                                  # free_one: a COW-style decref
+            refs = held.get(holder)
+            if refs:
+                alloc.free([refs.pop()])
+        # refcounts match the model exactly...
+        live = set()
+        for refs in held.values():
+            live.update(refs)
+        for blk in live:
+            assert alloc.ref(blk) == sum(
+                refs.count(blk) for refs in held.values())
+        # ...and free + unique-live partition the usable id range
+        assert alloc.num_free + len(live) == num_blocks - 1
+        assert alloc.num_live == len(live)
 
 
 @given(st.integers(2, 16))
@@ -77,13 +110,39 @@ def test_exhaustion_raises_before_corruption(num_blocks):
     assert alloc.alloc() == got[0]
 
 
+@given(st.integers(2, 16), st.integers(1, 4))
+@settings(max_examples=50, deadline=None)
+def test_forked_block_survives_until_last_free(num_blocks, n_forks):
+    """A block forked n times only returns to the free list on the (n+1)-th
+    free — the refcount rule COW and the prefix index depend on."""
+    alloc = BlockAllocator(num_blocks)
+    blk = alloc.alloc()
+    for _ in range(n_forks):
+        assert alloc.fork(blk) == blk
+    assert alloc.ref(blk) == n_forks + 1
+    for i in range(n_forks):
+        alloc.free([blk])
+        assert alloc.ref(blk) == n_forks - i
+        assert blk not in alloc._free          # still live: a ref remains
+    alloc.free([blk])                          # last reference
+    assert alloc.ref(blk) == 0
+    assert alloc.num_free == num_blocks - 1
+
+
 @given(st.integers(2, 16))
 @settings(max_examples=50, deadline=None)
-def test_double_free_and_foreign_free_rejected(num_blocks):
+def test_double_free_foreign_free_and_trash_guards(num_blocks):
     alloc = BlockAllocator(num_blocks)
     blk = alloc.alloc()
     alloc.free([blk])
     with pytest.raises(ValueError):
         alloc.free([blk])                      # double free
     with pytest.raises(ValueError):
-        alloc.free([TRASH_BLOCK])              # never-allocated block
+        alloc.free([TRASH_BLOCK])              # the trash block is never freed
+    with pytest.raises(ValueError):
+        alloc.fork(TRASH_BLOCK)                # ... and never forked
+    with pytest.raises(ValueError):
+        alloc.fork(blk)                        # forking a freed block
+    # none of the rejected calls corrupted state
+    assert alloc.num_free == num_blocks - 1
+    assert alloc.num_live == 0

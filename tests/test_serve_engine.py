@@ -278,6 +278,11 @@ def test_paged_allocator_exhaustion_and_admission_gate(served, rng):
     assert {a, b} == {1, 2}
     with pytest.raises(BlockPoolExhausted):
         alloc.alloc()
+    # deterministic refcount coverage for bare (no-hypothesis) environments:
+    # a forked block needs BOTH references dropped before it is free again
+    assert alloc.fork(a) == a and alloc.ref(a) == 2
+    alloc.free([a])
+    assert alloc.ref(a) == 1 and alloc.num_free == 0
     alloc.free([a, b])
     # pool of 4 usable blocks; each request needs ceil((13+6)/8) = 3
     eng = PagedEngine(params, cfg, max_batch=2, max_len=32, block_size=8,
@@ -295,6 +300,100 @@ def test_paged_allocator_exhaustion_and_admission_gate(served, rng):
     with pytest.raises(ValueError):
         small.submit(Request(uid=9, prompt=rng.integers(0, 256, 17).astype(
             np.int32), max_new_tokens=5))
+
+
+def test_prefix_sharing_cow_and_shared_kv_immutable(served, rng):
+    """COW regression (cache-poisoning analog of the finished-slot test):
+    requests sharing a prompt prefix, then diverging, produce greedy outputs
+    token-identical to a prefix_sharing=off run — and the shared blocks' KV
+    bytes are bit-unchanged after every request finished, even though one
+    request (the full-prompt hit) had to WRITE inside the shared range and
+    was copy-on-write'd onto a fresh block."""
+    cfg, params = served
+    shared = rng.integers(0, 256, 32).astype(np.int32)   # 2 full 16-blocks
+    prompts = [
+        np.concatenate([shared, rng.integers(0, 256, 7).astype(np.int32)]),
+        np.concatenate([shared, rng.integers(0, 256, 11).astype(np.int32)]),
+        shared.copy(),   # full-prompt hit: re-fed last token triggers COW
+    ]
+
+    def serve(sharing):
+        eng = PagedEngine(params, cfg, max_batch=1, max_len=64, block_size=16,
+                          prefix_sharing=sharing)
+        outs, snap, blocks = {}, None, None
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=p.copy(), max_new_tokens=5))
+            (done,) = eng.run()
+            outs[i] = done.out_tokens
+            if sharing and i == 0:
+                # request 0's two full prefix blocks are now cached; snapshot
+                # their pool KV bytes before anyone reuses them
+                blocks = [blk for _, blk in eng._match_prefix(shared)]
+                assert len(blocks) == 2
+                snap = (np.asarray(eng._cache["layers"]["k"][:, blocks]),
+                        np.asarray(eng._cache["layers"]["v"][:, blocks]))
+        if sharing:
+            s = eng.prefix_stats()
+            assert s["hits"] == 2 and s["lookups"] == 3
+            assert s["cow_copies"] == 1        # only the full-prompt hit
+            # request 1 skipped the full 32-token prefix; request 2 matched
+            # everything but must re-feed its last token: 32 + 31
+            assert s["prefill_tokens_skipped"] == 63
+            after = (np.asarray(eng._cache["layers"]["k"][:, blocks]),
+                     np.asarray(eng._cache["layers"]["v"][:, blocks]))
+            np.testing.assert_array_equal(snap[0], after[0])
+            np.testing.assert_array_equal(snap[1], after[1])
+            # dropping the index references drains the pool completely
+            eng.clear_prefix_cache()
+            assert eng.alloc.num_free == eng.num_blocks - 1
+        return outs
+
+    assert serve(False) == serve(True)
+
+
+def test_prefix_sharing_skip_rate_and_parity(served, rng):
+    """Acceptance: a shared-system-prompt workload (every request starts with
+    the same 48-token prefix) skips >= 30% of prefill tokens while producing
+    greedy outputs token-identical to prefix_sharing=off."""
+    cfg, params = served
+    system = rng.integers(0, 256, 48).astype(np.int32)
+    reqs = [Request(uid=i,
+                    prompt=np.concatenate([system, rng.integers(
+                        0, 256, int(rng.integers(3, 12))).astype(np.int32)]),
+                    max_new_tokens=4)
+            for i in range(8)]
+    outs = {}
+    for sharing in (False, True):
+        eng = PagedEngine(params, cfg, max_batch=2, max_len=96, block_size=16,
+                          prefix_sharing=sharing)
+        for r in copy.deepcopy(reqs):
+            eng.submit(r)
+        outs[sharing] = {r.uid: r.out_tokens for r in eng.run()}
+        if sharing:
+            s = eng.prefix_stats()
+            assert s["skip_rate"] >= 0.30, s
+            # every request admitted after the first prefill completed hits
+            assert s["hits"] >= 6
+            assert s["prefill_tokens_skipped"] >= 6 * 48
+    assert outs[False] == outs[True]
+
+
+def test_prefix_sharing_eviction_under_pool_pressure(served, rng):
+    """Distinct prompts churning a tiny pool force LRU eviction of cached
+    (index-only) blocks; the run still completes and never deadlocks."""
+    cfg, params = served
+    eng = PagedEngine(params, cfg, max_batch=2, max_len=64, block_size=16,
+                      num_blocks=6, prefix_sharing=True)
+    for i in range(6):
+        eng.submit(Request(uid=i,
+                           prompt=rng.integers(0, 256, 35).astype(np.int32),
+                           max_new_tokens=4))
+    done = eng.run()
+    assert len(done) == 6 and all(r.done for r in done)
+    assert eng.prefix_stats()["evictions"] > 0
+    # the index never points at a freed block
+    for blk in eng._prefix_index.values():
+        assert eng.alloc.ref(blk) >= 1
 
 
 def test_temperature_sampling_and_validation(served, rng):
