@@ -1,5 +1,6 @@
 """Serving throughput: wave lockstep vs slot-based continuous batching vs
-paged-KV chunked prefill, plus paged prompt-prefix sharing.
+paged-KV chunked prefill (lockstep AND packed token steps), plus paged
+prompt-prefix sharing.
 
 A mixed prompt/output-length workload (the online-serving regime): prompt
 lengths and output budgets drawn from skewed distributions, so the wave
@@ -9,15 +10,28 @@ freed slots every step. Reported tokens/sec is generated tokens over wall
 clock, after a warm-up pass that covers every jit shape (prefill buckets or
 chunk widths + decode) for each engine, so compile time is excluded.
 
-A second, shared-system-prompt workload (every request opens with the same
-48-token prefix — the chatbot/few-shot regime) runs the paged engine with
-prefix sharing off vs on and records prefix hit-rate, prefill tokens
-skipped, COW copies, and cache bytes.
+Every row also records PADDING EFFICIENCY (valid token-lanes / padded
+token-lanes over the timed steps): the paged lockstep chunk step pads every
+decode-riding slot to (block_size,) lanes, and the packed token step
+(serve/paged.py packed mode) removes that structurally — the third,
+prefill-heavy workload (long prompts, short outputs, so decode-riding waste
+dominates chunk steps) runs paged lockstep vs packed head-to-head and is the
+acceptance gate for the packing win.
+
+A shared-system-prompt workload (every request opens with the same 48-token
+prefix — the chatbot/few-shot regime) runs the paged engine with prefix
+sharing off vs on and records prefix hit-rate, prefill tokens skipped, COW
+copies, and cache bytes.
+
+Cache bytes are reported as cache_bytes_logical AND cache_bytes_padded:
+with the decode kernel active the arena is lane-padded (head_dim -> 128),
+so the raw allocation is up to 4x the logical cache — reporting both keeps
+kernel and non-kernel rows comparable.
 
 Machine-readable output: every run writes BENCH_serving.json (override with
---json) with tok/s, persistent KV-cache bytes, and mean batch occupancy per
-engine — plus the prefix-sharing rows — so the perf trajectory is tracked
-across PRs.
+--json) with tok/s, cache bytes, mean batch occupancy and padding efficiency
+per engine — plus the prefix-sharing and prefill-heavy rows — so the perf
+trajectory is tracked across PRs.
 
     PYTHONPATH=src python -m benchmarks.serving_throughput \
         --engine wave --engine paged --json out.json
@@ -35,7 +49,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import model as M
 from repro.serve import (ContinuousEngine, PagedEngine, Request, ServeEngine,
-                         kv_cache_bytes)
+                         kv_cache_byte_stats)
 
 VOCAB = 512
 MAX_BATCH = 8
@@ -81,40 +95,80 @@ def _prefix_workload(rng, n):
     return reqs
 
 
+def _prefill_heavy_workload(rng, n):
+    """Long prompts, short-to-moderate outputs: most steps are chunk steps
+    where the decode-riding slots dominate the padded lanes — the regime the
+    packed token step targets (lockstep burns block_size lanes per rider)."""
+    reqs = []
+    for i in range(n):
+        plen = int(rng.choice([40, 56, 72, 88], p=[.35, .3, .2, .15]))
+        out = int(rng.choice([8, 16, 24], p=[.4, .35, .25]))
+        reqs.append(Request(uid=i,
+                            prompt=rng.integers(0, VOCAB, plen).astype(np.int32),
+                            max_new_tokens=out))
+    return reqs
+
+
 def _engine_factories(cfg, params):
     mk = dict(max_batch=MAX_BATCH, max_len=MAX_LEN)
+    # "paged" is the lockstep (B, block_size)/(B, 1) baseline; "paged+packed"
+    # flattens each step to a ragged token batch (the library default)
     return {
         "wave": lambda: ServeEngine(params, cfg, **mk),
         "continuous": lambda: ContinuousEngine(params, cfg, **mk),
         "continuous+kernel": lambda: ContinuousEngine(
             params, cfg.replace(decode_kernel="fused"), **mk),
-        "paged": lambda: PagedEngine(params, cfg, block_size=BLOCK_SIZE, **mk),
+        "paged": lambda: PagedEngine(params, cfg, block_size=BLOCK_SIZE,
+                                     packed=False, **mk),
+        "paged+packed": lambda: PagedEngine(params, cfg,
+                                            block_size=BLOCK_SIZE,
+                                            packed=True, **mk),
         "paged+kernel": lambda: PagedEngine(
             params, cfg.replace(decode_kernel="fused"),
-            block_size=BLOCK_SIZE, **mk),
+            block_size=BLOCK_SIZE, packed=False, **mk),
+        "paged+packed+kernel": lambda: PagedEngine(
+            params, cfg.replace(decode_kernel="fused"),
+            block_size=BLOCK_SIZE, packed=True, **mk),
     }
 
 
-def _cache_bytes(eng):
+# interpret-mode kernel emulation is slow on CPU; the packed+kernel row is
+# opt-in via --engine so the default sweep stays fast
+DEFAULT_ENGINES = ["wave", "continuous", "continuous+kernel", "paged",
+                   "paged+packed", "paged+kernel"]
+
+
+def _cache_byte_stats(eng):
     cache = getattr(eng, "_cache", None)
     if cache is None:
         # the wave engine allocates a fresh (max_batch, max_len) slot cache
         # per wave rather than holding one; measure that reservation
         cache = M.init_cache(eng.cfg, eng.max_batch, eng.max_len,
                              eng.cache_dtype)
-    return kv_cache_bytes(cache)
+    # paged pools pass max_len=None: their rows axis is block_size, unpadded
+    max_len = None if isinstance(eng, PagedEngine) else eng.max_len
+    return kv_cache_byte_stats(cache, eng.cfg, max_len)
 
 
-def _serve(make_engine, warmup, reqs):
+def _serve(make_engine, warmup, reqs, warmup_passes: int = 1):
     """Warm and time the SAME engine instance: the jitted closures live on
     the instance, so a throwaway warm-up engine would discard its compile
-    cache and the timed run would re-trace every shape."""
+    cache and the timed run would re-trace every shape.
+
+    warmup_passes > 1 is for engines whose STATE changes the step shapes:
+    with prefix sharing, the first pass runs against a cold prefix cache
+    (full-length chunk steps) while the timed run is all-hit (short tail
+    chunks) — the second pass covers the warm-cache shapes."""
     eng = make_engine()
-    for r in copy.deepcopy(warmup):
-        eng.submit(r)
-    eng.run()
+    for _ in range(warmup_passes):
+        for r in copy.deepcopy(warmup):
+            eng.submit(r)
+        eng.run()
     s0 = getattr(eng, "occupancy_sum", 0.0)
     n0 = getattr(eng, "occupancy_steps", 0)
+    lv0 = getattr(eng, "lanes_valid", 0)
+    lt0 = getattr(eng, "lanes_total", 0)
+    ps0 = getattr(eng, "pad_lanes_skipped", 0)
     p0 = eng.prefix_stats() if getattr(eng, "prefix_sharing", False) else None
     work = copy.deepcopy(reqs)
     for r in work:
@@ -125,6 +179,10 @@ def _serve(make_engine, warmup, reqs):
     # mean live fraction over the TIMED steps only (delta past the warm-up)
     n = getattr(eng, "occupancy_steps", 0) - n0
     occ = (getattr(eng, "occupancy_sum", 0.0) - s0) / n if n else None
+    # per-step padding efficiency (valid token-lanes / padded token-lanes)
+    # over the timed steps; None for engines without lane telemetry
+    lt = getattr(eng, "lanes_total", 0) - lt0
+    pad_eff = ((getattr(eng, "lanes_valid", 0) - lv0) / lt) if lt else None
     prefix = None
     if p0 is not None:
         # counters are cumulative; report the timed segment only (the warm-up
@@ -133,13 +191,16 @@ def _serve(make_engine, warmup, reqs):
         prefix = {k: p1[k] - p0[k]
                   for k in ("lookups", "hits", "prefill_tokens",
                             "prefill_tokens_skipped", "cow_copies",
-                            "evictions")}
+                            "evictions", "pad_lanes_skipped")}
         prefix["hit_rate"] = prefix["hits"] / max(prefix["lookups"], 1)
         prefix["skip_rate"] = (prefix["prefill_tokens_skipped"]
                                / max(prefix["prefill_tokens"], 1))
     return dict(tokens=sum(len(r.out_tokens) for r in done), seconds=dt,
-                cache_bytes=_cache_bytes(eng),
-                occupancy=occ, prefix=prefix)
+                **_cache_byte_stats(eng), occupancy=occ,
+                padding_efficiency=pad_eff,
+                pad_lanes_skipped=(getattr(eng, "pad_lanes_skipped", 0) - ps0
+                                   if lt else None),
+                prefix=prefix)
 
 
 def run(fast: bool = True, engines: list | None = None,
@@ -154,11 +215,11 @@ def run(fast: bool = True, engines: list | None = None,
     warmup = _workload(np.random.default_rng(0), n)
 
     factories = _engine_factories(cfg, params)
-    names = engines or list(factories)
+    names = engines or DEFAULT_ENGINES
 
     out = []
     print("\n# serving throughput: scheduler, tokens, s, tok/s, vs_first, "
-          "cache_MB, occupancy")
+          "cache_MB(logical/padded), occupancy, pad_eff")
     base_tps = None
     for name in names:
         row = _serve(factories[name], warmup, reqs)
@@ -166,11 +227,41 @@ def run(fast: bool = True, engines: list | None = None,
         if base_tps is None:
             base_tps = tps
         occ = "-" if row["occupancy"] is None else "%.2f" % row["occupancy"]
-        print("serving,%s,%d,%.2f,%.1f,%.2fx,%.2f,%s" % (
+        eff = ("-" if row["padding_efficiency"] is None
+               else "%.2f" % row["padding_efficiency"])
+        print("serving,%s,%d,%.2f,%.1f,%.2fx,%.2f/%.2f,%s,%s" % (
             name, row["tokens"], row["seconds"], tps, tps / base_tps,
-            row["cache_bytes"] / 2**20, occ))
+            row["cache_bytes_logical"] / 2**20,
+            row["cache_bytes_padded"] / 2**20, occ, eff))
         out.append(dict(scheduler=name, tok_per_s=tps,
                         vs_first=tps / base_tps, **row))
+
+    # prefill-heavy workload: paged lockstep vs packed token steps — the
+    # acceptance gate for the packing win (tok/s AND padding efficiency)
+    packed_out = []
+    if engines is None or any(e.startswith("paged") for e in names):
+        # 2x the request count: the packed-vs-lockstep delta is the
+        # acceptance gate, so the timed region gets extra length to keep
+        # scheduler noise well below the effect size
+        hreqs = _prefill_heavy_workload(np.random.default_rng(3), 2 * n)
+        hwarm = _prefill_heavy_workload(np.random.default_rng(3), 2 * n)
+        # full pool so packing, not admission gating, is what differs
+        nblk = MAX_BATCH * (MAX_LEN // BLOCK_SIZE) + 1
+        print("\n# prefill-heavy (paged, long prompts): step_layout, tokens, "
+              "s, tok/s, pad_eff, pad_lanes_skipped")
+        for packed in (False, True):
+            row = _serve(
+                lambda: PagedEngine(params, cfg, block_size=BLOCK_SIZE,
+                                    max_batch=MAX_BATCH, max_len=MAX_LEN,
+                                    num_blocks=nblk, packed=packed),
+                hwarm, hreqs)
+            tps = row["tokens"] / row["seconds"]
+            print("prefill_heavy,%s,%d,%.2f,%.1f,%.2f,%d" % (
+                "packed" if packed else "lockstep", row["tokens"],
+                row["seconds"], tps, row["padding_efficiency"],
+                row["pad_lanes_skipped"]))
+            packed_out.append(dict(step_layout="packed" if packed
+                                   else "lockstep", tok_per_s=tps, **row))
 
     # shared-system-prompt workload: paged engine, prefix sharing off vs on
     # (skipped when --engine filters to non-paged rows only)
@@ -185,7 +276,7 @@ def run(fast: bool = True, engines: list | None = None,
                 lambda: PagedEngine(params, cfg, block_size=BLOCK_SIZE,
                                     max_batch=MAX_BATCH, max_len=MAX_LEN,
                                     prefix_sharing=sharing),
-                pwarm, preqs)
+                pwarm, preqs, warmup_passes=2)
             tps = row["tokens"] / row["seconds"]
             p = row["prefix"]
             print("prefix,%s,%d,%.2f,%.1f,%s,%s,%s,%.2f" % (
@@ -194,7 +285,7 @@ def run(fast: bool = True, engines: list | None = None,
                 "-" if p is None else "%.2f" % p["hit_rate"],
                 "-" if p is None else "%.2f" % p["skip_rate"],
                 "-" if p is None else p["cow_copies"],
-                row["cache_bytes"] / 2**20))
+                row["cache_bytes_logical"] / 2**20))
             prefix_out.append(dict(variant="on" if sharing else "off",
                                    tok_per_s=tps, **row))
 
@@ -204,6 +295,7 @@ def run(fast: bool = True, engines: list | None = None,
                            max_batch=MAX_BATCH, max_len=MAX_LEN,
                            block_size=BLOCK_SIZE, requests=n,
                            system_prompt_len=SYSTEM_PROMPT_LEN, engines=out,
+                           prefill_heavy=packed_out,
                            prefix_sharing=prefix_out),
                       f, indent=2)
         print(f"# wrote {json_path}")
@@ -214,8 +306,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--engine", action="append",
                     choices=["wave", "continuous", "continuous+kernel",
-                             "paged", "paged+kernel"],
-                    help="engine row(s) to run (default: all)")
+                             "paged", "paged+packed", "paged+kernel",
+                             "paged+packed+kernel"],
+                    help="engine row(s) to run (default: all but the "
+                         "interpret-slow paged+packed+kernel)")
     ap.add_argument("--json", default=DEFAULT_JSON,
                     help="output path for the machine-readable results")
     ap.add_argument("--full", action="store_true",

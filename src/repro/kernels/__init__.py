@@ -3,8 +3,9 @@
 #   softmax_bf16.py — exp-based reference baseline (paper's comparison target)
 #   attention.py    — fused two-pass HCCS flash-attention (beyond-paper)
 #   decode.py       — fused single-query HCCS decode attention (serving path:
-#                     contiguous slot arena + paged block-table variants)
+#                     contiguous slot arena + paged block-table variants +
+#                     token-centric packed chunked prefill)
 # ops.py holds the jit'd wrappers; ref.py the pure-jnp oracles.
 from repro.kernels.ops import (hccs_attention, hccs_decode,
-                               hccs_paged_decode, hccs_softmax,
-                               softmax_reference)
+                               hccs_packed_prefill, hccs_paged_decode,
+                               hccs_softmax, softmax_reference)

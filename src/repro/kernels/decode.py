@@ -39,6 +39,14 @@ gather is free (it steers the DMA), and sentinel (-1) table entries reuse the
 dead-block `pl.when` skip path. HCCS linearity is what makes paging trivial
 here — partial sums over blocks are exact, so no per-block rescaling is ever
 needed regardless of the physical block order.
+
+A fourth, `hccs_packed_prefill`, is the token-centric packed-step variant
+(serve/paged.py packed mode): rows are TOKENS, not slots. Each of the T
+packed tokens carries a slot id and a per-token frontier; the KV index_map
+walks `block_table[slot_ids[token]]` — one extra scalar indirection on top of
+the paged walk — so a ragged mixed prefill/decode batch runs as T independent
+single-query sweeps with zero padded query lanes. Pad lanes (slot id -1)
+reuse the dead-block skip and return zeros.
 """
 from __future__ import annotations
 
@@ -167,6 +175,59 @@ def _paged_kernel(tbl_ref, len_ref, scale_ref, theta_ref, q_ref, k_ref, v_ref,
                  sm_denom=sm_denom)
 
 
+def _packed_kernel(sid_ref, tbl_ref, len_ref, scale_ref, theta_ref, q_ref,
+                   k_ref, v_ref, o_ref, m_scr, z_scr, acc_scr, *, num_kv: int,
+                   group: int, block_size: int, block_k: int, mode: str,
+                   static_max: bool, sm_denom: float):
+    i = pl.program_id(0)                      # token * num_kv + kv head
+    ki = pl.program_id(2)                     # sub-tile of a table entry
+    tok = i // num_kv
+    kv = jax.lax.rem(i, num_kv)
+    per = block_size // block_k               # kernel tiles per KV block
+    ti = ki // per                            # block-table column
+    slot = sid_ref[tok]                       # owning slot, -1 = pad lane
+    entry = tbl_ref[jnp.maximum(slot, 0), ti]
+    nk = len_ref[tok]                         # per-TOKEN causal frontier
+    col0 = ti * block_size + jax.lax.rem(ki, per) * block_k
+    # a pad lane (slot < 0) is a whole-row dead block: every tile skipped,
+    # the epilogue still writes zeros (acc/z are zeroed unconditionally)
+    _decode_tile(scale_ref, theta_ref, q_ref, k_ref, v_ref, o_ref,
+                 m_scr, z_scr, acc_scr, kv=kv, nk=nk, col0=col0,
+                 block_live=(slot >= 0) & (entry >= 0) & (col0 < nk),
+                 group=group, mode=mode, static_max=static_max,
+                 sm_denom=sm_denom)
+
+
+def _lane_pad_q(q, hkv: int, d_pad: int):
+    """Pack per-KV-head query groups and pad head_dim to the lane tile:
+    (rows, H, d) -> (rows * Hkv, g, d_pad) float32. Shared prologue of all
+    three single-query kernels (rows are slots or packed tokens)."""
+    rows, h, d = q.shape
+    g = h // hkv
+    qg = q.astype(jnp.float32).reshape(rows * hkv, g, d)
+    return jnp.zeros((rows * hkv, g, d_pad), jnp.float32).at[:, :, :d].set(qg)
+
+
+def _lane_pad_pool(k_pool, v_pool, d_pad: int):
+    """Lane-pad a (N, Hkv, bs, dp) KV block pool to d_pad, passing a
+    lane-padded pool (the production layout from serve/paged.py) through
+    zero-copy so blocks stream straight from the pool."""
+    n, hkv, bs, dp = k_pool.shape
+    if dp == d_pad:
+        return k_pool, v_pool
+    kp = jnp.zeros((n, hkv, bs, d_pad), k_pool.dtype).at[..., :dp].set(k_pool)
+    vp = jnp.zeros((n, hkv, bs, d_pad), v_pool.dtype).at[..., :dp].set(v_pool)
+    return kp, vp
+
+
+def _decode_scratch(g: int, d_pad: int):
+    """VMEM scratch triple (running max, Z accumulator, s @ V accumulator)
+    shared by every _decode_tile caller."""
+    return [pltpu.VMEM((g, 128), jnp.int32),
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, d_pad), jnp.float32)]
+
+
 @functools.partial(jax.jit, static_argnames=("mode", "static_max", "block_k",
                                              "interpret"))
 def hccs_decode(q: jax.Array, k: jax.Array, v: jax.Array, lengths: jax.Array,
@@ -188,8 +249,7 @@ def hccs_decode(q: jax.Array, k: jax.Array, v: jax.Array, lengths: jax.Array,
     sm_denom = float(d) ** 0.5
     d_pad = max(-(-d // 128) * 128, 128)
     tk_pad = -(-tmax // block_k) * block_k
-    qg = q.astype(jnp.float32).reshape(b * hkv, g, d)
-    qp = jnp.zeros((b * hkv, g, d_pad), jnp.float32).at[:, :, :d].set(qg)
+    qp = _lane_pad_q(q, hkv, d_pad)
     # the decode step runs per generated token: when the cache arena is
     # already tile-aligned (head_dim padded to the lane multiple, max_len a
     # block_k multiple — what init_cache allocates whenever the kernel is
@@ -223,11 +283,7 @@ def hccs_decode(q: jax.Array, k: jax.Array, v: jax.Array, lengths: jax.Array,
         ],
         out_specs=pl.BlockSpec((1, g, d_pad), lambda i, ph, ki: (i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b * hkv, g, d_pad), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((g, 128), jnp.int32),                  # running max
-            pltpu.VMEM((g, 128), jnp.float32),                # Z accumulator
-            pltpu.VMEM((g, d_pad), jnp.float32),              # s @ V acc
-        ],
+        scratch_shapes=_decode_scratch(g, d_pad),
         interpret=interpret,
     )(scale.astype(jnp.float32), theta.astype(jnp.int32),
       lengths.astype(jnp.int32), qp, kp, vp)
@@ -266,17 +322,8 @@ def hccs_paged_decode(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     assert bs % bk == 0, (bs, bk)
     per = bs // bk
     d_pad = max(-(-d // 128) * 128, 128)
-    qg = q.astype(jnp.float32).reshape(b * hkv, g, d)
-    qp = jnp.zeros((b * hkv, g, d_pad), jnp.float32).at[:, :, :d].set(qg)
-    if dp == d_pad:
-        # lane-padded pool (the production layout from serve/paged.py):
-        # zero-copy pass-through, blocks stream straight from the pool
-        kp, vp = k_pool, v_pool
-    else:
-        kp = jnp.zeros((n, hkv, bs, d_pad),
-                       k_pool.dtype).at[..., :dp].set(k_pool)
-        vp = jnp.zeros((n, hkv, bs, d_pad),
-                       v_pool.dtype).at[..., :dp].set(v_pool)
+    qp = _lane_pad_q(q, hkv, d_pad)
+    kp, vp = _lane_pad_pool(k_pool, v_pool, d_pad)
     nblk = block_table.shape[1]
     num_phases = 1 if static_max else 2
     grid = (b * hkv, num_phases, nblk * per)
@@ -302,11 +349,7 @@ def hccs_paged_decode(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
         ],
         out_specs=pl.BlockSpec((1, g, d_pad),
                                lambda i, ph, ki, tbl, ln, sc, th: (i, 0, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((g, 128), jnp.int32),                  # running max
-            pltpu.VMEM((g, 128), jnp.float32),                # Z accumulator
-            pltpu.VMEM((g, d_pad), jnp.float32),              # s @ V acc
-        ],
+        scratch_shapes=_decode_scratch(g, d_pad),
     )
     out = pl.pallas_call(
         functools.partial(_paged_kernel, num_kv=hkv, group=g, block_size=bs,
@@ -318,3 +361,81 @@ def hccs_paged_decode(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     )(block_table.astype(jnp.int32), lengths.astype(jnp.int32),
       scale.astype(jnp.float32), theta.astype(jnp.int32), qp, kp, vp)
     return out[:, :, :d].reshape(b, h, d)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "static_max", "block_k",
+                                             "interpret"))
+def hccs_packed_prefill(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                        block_table: jax.Array, slot_ids: jax.Array,
+                        lengths: jax.Array, scale: jax.Array,
+                        theta: jax.Array, *, mode: str = "wide",
+                        static_max: bool = False, block_k: int = 128,
+                        interpret: bool = True) -> jax.Array:
+    """Token-centric HCCS attention over a PAGED pool: one query per TOKEN.
+
+    The packed chunked-prefill step (serve/paged.py packed mode) flattens a
+    mixed prefill/decode batch into T ragged tokens; each runs the same
+    single-query sweep as `hccs_paged_decode`, but the KV walk is steered by
+    the token's OWNING SLOT: tile ki of token t DMAs pool block
+    `block_table[slot_ids[t], ki // per]`. Causality inside a chunk needs no
+    extra mask — token t's frontier `lengths[t]` (its logical position + 1)
+    already stops the sweep before any later token's KV.
+
+    q: (T, H, d) one query per packed token; k_pool/v_pool:
+    (N, Hkv, block_size, dp) global pools (dp = d or lane-padded 128);
+    block_table: (B, nblk) int32 pool ids, -1 = unallocated; slot_ids: (T,)
+    int32 owning slot per token, -1 = pad lane (returns zeros); lengths: (T,)
+    per-token valid-KV counts *including* the token's own K/V; scale: (H,)
+    f32; theta: (H, 3) int32. Returns (T, H, d) in q.dtype.
+    """
+    t, h, d = q.shape
+    n, hkv, bs, dp = k_pool.shape
+    assert h % hkv == 0
+    g = h // hkv
+    sm_denom = float(d) ** 0.5
+    bk = min(block_k, bs)
+    assert bs % bk == 0, (bs, bk)
+    per = bs // bk
+    d_pad = max(-(-d // 128) * 128, 128)
+    qp = _lane_pad_q(q, hkv, d_pad)
+    kp, vp = _lane_pad_pool(k_pool, v_pool, d_pad)
+    nblk = block_table.shape[1]
+    num_phases = 1 if static_max else 2
+    grid = (t * hkv, num_phases, nblk * per)
+
+    def kv_spec():
+        # the slot-indirect block-table gather: pad lanes clamp to slot 0 and
+        # sentinel entries to pool block 0 so the DMA has a valid source; the
+        # kernel body never reads those tiles (block_live is False)
+        return pl.BlockSpec(
+            (1, 1, bk, d_pad),
+            lambda i, ph, ki, sid, tbl, ln, sc, th, KV=hkv, PER=per: (
+                jnp.maximum(
+                    tbl[jnp.maximum(sid[i // KV], 0), ki // PER], 0),
+                jax.lax.rem(i, KV), jax.lax.rem(ki, PER), 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,               # sid, table, lengths, scale, theta
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, g, d_pad),
+                         lambda i, ph, ki, sid, tbl, ln, sc, th: (i, 0, 0)),
+            kv_spec(),
+            kv_spec(),
+        ],
+        out_specs=pl.BlockSpec((1, g, d_pad),
+                               lambda i, ph, ki, sid, tbl, ln, sc, th:
+                               (i, 0, 0)),
+        scratch_shapes=_decode_scratch(g, d_pad),
+    )
+    out = pl.pallas_call(
+        functools.partial(_packed_kernel, num_kv=hkv, group=g, block_size=bs,
+                          block_k=bk, mode=mode, static_max=static_max,
+                          sm_denom=sm_denom),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t * hkv, g, d_pad), q.dtype),
+        interpret=interpret,
+    )(slot_ids.astype(jnp.int32), block_table.astype(jnp.int32),
+      lengths.astype(jnp.int32), scale.astype(jnp.float32),
+      theta.astype(jnp.int32), qp, kp, vp)
+    return out[:, :, :d].reshape(t, h, d)

@@ -13,6 +13,7 @@ from repro.kernels.softmax_bf16 import softmax_bf16 as _softmax_bf16
 from repro.kernels.attention import hccs_mha_fused as _hccs_mha_fused
 from repro.kernels.decode import hccs_decode as _hccs_decode
 from repro.kernels.decode import hccs_paged_decode as _hccs_paged_decode
+from repro.kernels.decode import hccs_packed_prefill as _hccs_packed_prefill
 
 
 def _interp() -> bool:
@@ -54,3 +55,14 @@ def hccs_paged_decode(q, k_pool, v_pool, block_table, lengths, scale, theta,
     return _hccs_paged_decode(q, k_pool, v_pool, block_table, lengths, scale,
                               theta, mode=mode, static_max=static_max,
                               block_k=block_k, interpret=_interp())
+
+
+def hccs_packed_prefill(q, k_pool, v_pool, block_table, slot_ids, lengths,
+                        scale, theta, mode: str = "wide",
+                        static_max: bool = False,
+                        block_k: int = 128) -> jax.Array:
+    """Token-centric packed-step HCCS attention (see kernels/decode.py)."""
+    return _hccs_packed_prefill(q, k_pool, v_pool, block_table, slot_ids,
+                                lengths, scale, theta, mode=mode,
+                                static_max=static_max, block_k=block_k,
+                                interpret=_interp())

@@ -115,6 +115,26 @@ def hccs_paged_decode_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                            static_max=static_max)
 
 
+def hccs_packed_prefill_ref(q: jax.Array, k_pool: jax.Array,
+                            v_pool: jax.Array, block_table: jax.Array,
+                            slot_ids: jax.Array, lengths: jax.Array,
+                            scale: jax.Array, theta: jax.Array,
+                            mode: str = "wide",
+                            static_max: bool = False) -> jax.Array:
+    """Oracle for the token-centric packed prefill kernel.
+
+    q: (T, H, d) one query per packed token; slot_ids: (T,) owning slot per
+    token (-1 = pad lane, returns zeros); lengths: (T,) per-token causal
+    frontiers. Gathers each token's OWNING SLOT's block-table row and defers
+    to hccs_paged_decode_ref with tokens as batch rows — the packed step is
+    exactly T independent single-query sweeps.
+    """
+    tbl = block_table[jnp.maximum(slot_ids, 0)]          # (T, nblk)
+    lens = jnp.where(slot_ids >= 0, lengths, 0)          # pad lanes: zeros
+    return hccs_paged_decode_ref(q, k_pool, v_pool, tbl, lens, scale, theta,
+                                 mode=mode, static_max=static_max)
+
+
 def hccs_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                        scale: jax.Array, theta: jax.Array,
                        causal: bool = True) -> jax.Array:

@@ -31,10 +31,25 @@ def main():
                     help="reuse full-block prompt-prefix KV across requests "
                          "(refcounted copy-on-write blocks; paged scheduler "
                          "only)")
+    ap.add_argument("--step-layout", default=None,
+                    choices=["packed", "lockstep"],
+                    help="paged step layout (default packed): 'packed' "
+                         "flattens each step to a ragged token batch (rows "
+                         "are tokens, zero padded decode-riding lanes); "
+                         "'lockstep' keeps the (B, block_size)/(B, 1) "
+                         "baseline shapes")
+    ap.add_argument("--token-budget", type=int, default=0,
+                    help="packed-step token lanes per chunk step "
+                         "(0 = max_batch * block_size, one lockstep chunk "
+                         "step's lane count)")
     args = ap.parse_args()
     if args.prefix_sharing and args.scheduler != "paged":
         raise SystemExit("--prefix-sharing requires --scheduler paged "
                          "(prefix reuse needs the block pool)")
+    if args.scheduler != "paged" and (args.step_layout is not None
+                                      or args.token_budget):
+        raise SystemExit("--step-layout/--token-budget configure the paged "
+                         "engine's packed token step; use --scheduler paged")
 
     import jax
     import numpy as np
@@ -60,7 +75,9 @@ def main():
         eng = PagedEngine(params, cfg, max_batch=args.max_batch,
                           max_len=max_len,
                           block_size=args.block_size or None,
-                          num_blocks=args.num_blocks or None)
+                          num_blocks=args.num_blocks or None,
+                          packed=(args.step_layout != "lockstep"),
+                          token_budget=args.token_budget or None)
     else:
         engine_cls = (ContinuousEngine if args.scheduler == "continuous"
                       else ServeEngine)
@@ -91,11 +108,28 @@ def main():
     total_new = sum(len(r.out_tokens) for r in done)
     print(f"served {len(done)} requests, {total_new} tokens in {dt:.2f}s "
           f"({total_new / dt:.1f} tok/s)")
+    cache = getattr(eng, "_cache", None)
+    if cache is not None:
+        # logical vs padded: with the decode kernel active the arena is
+        # lane-padded, so the allocation can be 4x the logical cache
+        from repro.serve import kv_cache_byte_stats
+        cb = kv_cache_byte_stats(
+            cache, cfg, None if args.scheduler == "paged" else max_len)
+        print(f"kv cache: {cb['cache_bytes_logical'] / 2**20:.2f} MB logical, "
+              f"{cb['cache_bytes_padded'] / 2**20:.2f} MB allocated")
+    if args.scheduler == "paged":
+        pad = eng.padding_stats()
+        print(f"step padding: {pad['lanes_valid']}/{pad['lanes_total']} "
+              f"token-lanes valid ({100 * pad['efficiency']:.0f}%), "
+              f"{pad['pad_lanes_skipped']} lanes skipped by packing")
     if args.prefix_sharing:
         s = eng.prefix_stats()
+        # the two prefill savings side by side: prefix sharing skips real
+        # prompt tokens, packing skips padded token-lanes
         print(f"prefix sharing: {s['hits']}/{s['lookups']} hits, "
               f"{s['prefill_tokens_skipped']}/{s['prefill_tokens']} prefill "
-              f"tokens skipped ({100 * s['skip_rate']:.0f}%), "
+              f"tokens skipped by prefix ({100 * s['skip_rate']:.0f}%) vs "
+              f"{s['pad_lanes_skipped']} token-lanes skipped by packing, "
               f"{s['cow_copies']} COW copies, {s['evictions']} evictions, "
               f"{s['cached_blocks']} blocks cached")
 

@@ -129,8 +129,12 @@ def _slot_scatter(cache_kv, new_kv, lengths):
 
 
 # transient per-step keys the paged engine attaches to the cache; they steer
-# the step and are not part of the carried cache state
-_PAGED_TRANSIENT = ("block_table", "write_pos", "kv_len")
+# the step and are not part of the carried cache state. The last four only
+# ride on packed token steps: `slot_ids` selects the token-centric branch,
+# `q_pos_grid`/`grid_pos`/`kv_len_slot` steer the XLA path's per-slot
+# attention grid (see _packed_attention)
+_PAGED_TRANSIENT = ("block_table", "write_pos", "kv_len", "slot_ids",
+                    "q_pos_grid", "grid_pos", "kv_len_slot")
 
 
 def _paged_scatter(pool, new_kv, write_pos):
@@ -352,6 +356,66 @@ def _segment_max(q, k, valid, cfg, hccs):
     return jnp.where(valid, logits, -1e9).max(-1)
 
 
+def _packed_attention(q, k_pool, v_pool, cache, cfg, hccs, hd):
+    """Token-centric attention for the packed paged step.
+
+    q: (1, H, T, hd) — the T lanes are ragged tokens from different slots;
+    cache carries `slot_ids` (T,) owning slot (-1 = pad lane), `kv_len` (T,)
+    per-token causal frontiers (position + 1), `block_table` (B, nblk), and
+    the grid steering below. Each token attends only within ITS slot's
+    blocks, so cross-slot leakage is structurally impossible. Returns
+    (1, T, H*hd).
+
+    With cfg.decode_kernel active, the whole ragged batch runs the fused
+    `hccs_packed_prefill` kernel — per-token single-query sweeps whose
+    BlockSpec index_map walks `block_table[slot_ids[token]]` (a gather-free
+    DMA steer).
+
+    The XLA path instead rides the packed tokens through a compact PER-SLOT
+    GRID for the attention core only: `grid_pos` (T,) scatters each token to
+    cell (slot, position - frontier) of a (B, Wb) grid (Wb = this step's
+    bucketed max per-slot chunk, carried by `q_pos_grid`'s static shape; pad
+    lanes land in a spill row), the grid runs the SAME dense/blockwise
+    attention as the lockstep layout at width Wb — one per-slot KV gather,
+    NOT one per token, which is what makes the packed step cheaper rather
+    than gather-bound — and the outputs gather back to packed lanes. Every
+    other layer (projections, MLP, norms, logits) stays token-packed: that
+    is where the padding FLOPs go, while the attention core's work is
+    identical to lockstep's for the same tokens (bit-parity for free).
+    """
+    b, h, t, _ = q.shape
+    sid = cache["slot_ids"]
+    qt = q[0].transpose(1, 0, 2)                          # (T, H, hd)
+    if (cfg.decode_kernel != "none" and not decode_kernel_blockers(cfg)
+            and hccs is not None):
+        from repro.kernels.ops import hccs_packed_prefill
+        theta = jnp.stack([hccs["B"], hccs["S"], hccs["D"]], axis=-1)
+        o = hccs_packed_prefill(qt.astype(jnp.float32), k_pool, v_pool,
+                                cache["block_table"], sid, cache["kv_len"],
+                                hccs["scale"], theta, mode=cfg.hccs_mode,
+                                static_max=(cfg.decode_kernel == "static_max"))
+        return o.astype(q.dtype).reshape(1, t, h * hd)
+    q_pos_grid = cache["q_pos_grid"]                      # (B, Wb)
+    gp = cache["grid_pos"]                                # (T,) spill = B*Wb
+    k_len = cache["kv_len_slot"]                          # (B,)
+    bs_, wb = q_pos_grid.shape
+    qg = jnp.zeros((bs_ * wb + 1, h, qt.shape[-1]), qt.dtype).at[gp].set(qt)
+    qg = qg[:bs_ * wb].reshape(bs_, wb, h, -1).transpose(0, 2, 1, 3)
+    kg = _paged_gather(k_pool, cache["block_table"], hd)  # (B, Hkv, L, hd)
+    vg = _paged_gather(v_pool, cache["block_table"], hd)
+    tk = kg.shape[2]
+    use_blockwise = (cfg.attention_impl == "blockwise" or
+                     (cfg.attention_impl == "auto" and wb > 1 and
+                      tk >= cfg.blockwise_threshold))
+    if use_blockwise:
+        out = _blockwise_attention(qg, kg, vg, q_pos_grid, k_len, cfg, hccs)
+    else:
+        valid = _block_valid(cfg, q_pos_grid, jnp.arange(tk), k_len)
+        out = _dense_attention(qg, kg, vg, valid, cfg, hccs)
+    out = out.transpose(0, 2, 1, 3).reshape(bs_ * wb, h * hd)
+    return out[jnp.where(sid >= 0, gp, 0)][None]          # (1, T, H*hd)
+
+
 def apply_attention(p, x, cfg, hccs=None, positions=None, cache=None,
                     mrope_positions=None):
     """x: (B, T, D). Returns (out, new_cache).
@@ -366,6 +430,9 @@ def apply_attention(p, x, cfg, hccs=None, positions=None, cache=None,
     `write_pos` (B, T) flat scatter targets, and `kv_len` (B,) per-slot
     valid counts — the dispatch keys off `block_table`'s presence, the paged
     analogue of `length` going scalar-vs-vector for the slot arena.
+    PACKED paged steps additionally carry `slot_ids` (T,): x is then a
+    (1, T) ragged token batch (rows are tokens, not slots), positions are
+    per-token, and `kv_len` is per-TOKEN — see _packed_attention.
     Prefix sharing changes nothing here: a slot admitted past a shared
     prefix arrives with cache["length"] already at the partial-prefill start
     offset (so the default `positions = length + arange(t)` resumes RoPE at
@@ -445,6 +512,14 @@ def apply_attention(p, x, cfg, hccs=None, positions=None, cache=None,
         # per-slot valid-KV counts for this step (length + per-slot t_valid;
         # chunked prefill makes t_valid ragged, so `length + t` is wrong here)
         k_len = cache["kv_len"]
+        if "slot_ids" in cache:
+            # PACKED token step (b == 1): lane i of the t axis is an
+            # independent single-query token owned by slot_ids[i], at global
+            # position positions[0, i], with causal frontier kv_len[i] —
+            # rows are tokens, so a ragged mixed prefill/decode batch runs
+            # with zero padded query lanes (see serve/paged.py packed mode)
+            out = _packed_attention(q, kc, vc, cache, cfg, hccs, hd)
+            return _project_out(out, p, b, t), new_cache
         if (t == 1 and cfg.decode_kernel != "none"
                 and not decode_kernel_blockers(cfg) and hccs is not None):
             # block-sparse fused decode: the kernel walks the block table

@@ -97,11 +97,14 @@ def forward(weights, hccs, batch, cfg, cache=None, decode: bool = False):
         hot_len = length - cache.get("prompt_len", jnp.zeros((), jnp.int32))
     # paged cache: the block table + this step's write targets are model-level
     # state shared by every layer (one table, per-layer pools); inject them
-    # into each per-layer cache the same way hot_len rides along
+    # into each per-layer cache the same way hot_len rides along. `slot_ids`
+    # only rides on packed token steps (token-centric chunked prefill).
     paged_extras = None
     if cache is not None and "block_table" in cache:
         paged_extras = {kk: cache[kk]
-                        for kk in ("block_table", "write_pos", "kv_len")}
+                        for kk in ("block_table", "write_pos", "kv_len",
+                                   "slot_ids", "q_pos_grid", "grid_pos",
+                                   "kv_len_slot") if kk in cache}
 
     hccs = jax.tree.map(jax.lax.stop_gradient, hccs)  # theta frozen (paper QAT)
     call = _block_caller(cfg, decode)

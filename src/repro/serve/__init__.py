@@ -1,8 +1,11 @@
 # engine.py     — wave scheduler: same-length prompt batches, lockstep decode
 # continuous.py — slot arena: continuous batching with per-slot lengths
 # paged.py      — block pool + block tables: paged KV with chunked prefill
+#                 (packed token steps by default; lockstep via packed=False)
 from repro.serve.continuous import ContinuousEngine
-from repro.serve.engine import (Request, ServeEngine, kv_cache_bytes,
-                                sample_tokens)
+from repro.serve.engine import (Request, ServeEngine, kv_cache_byte_stats,
+                                kv_cache_bytes, sample_tokens)
 from repro.serve.paged import (BlockAllocator, BlockPoolExhausted,
-                               PagedEngine, prefix_chunk)
+                               PagedEngine, pack_slot_ids,
+                               packed_write_positions, prefix_chunk,
+                               schedule_step_tokens)

@@ -55,6 +55,33 @@ def kv_cache_bytes(cache) -> int:
     return total
 
 
+def kv_cache_byte_stats(cache, cfg, max_len: int | None = None) -> dict:
+    """Padded (as-allocated) vs LOGICAL KV bytes of an engine cache.
+
+    When the fused decode kernel is active, the arena is allocated
+    lane-padded (head_dim -> 128 lanes, slot arenas additionally round seq
+    to the kernel block — attention.kv_store_geometry), so raw kv_cache_bytes
+    reports up to 4x the bytes the model semantically uses for the SAME
+    logical cache. `logical` counts only the true head_dim lanes and (for
+    slot arenas, when max_len is given) the first max_len rows; `padded` is
+    the real allocation. Benchmarks report both so kernel and non-kernel
+    rows stay comparable."""
+    padded = kv_cache_bytes(cache)
+    logical = 0
+    for name in ("k", "v", "hot_k", "hot_v"):
+        leaf = cache["layers"].get(name)
+        if leaf is None:
+            continue
+        rows_c, hd_c = leaf.shape[-2], leaf.shape[-1]
+        rows = rows_c
+        if name in ("k", "v") and max_len is not None:
+            rows = min(rows_c, max_len)      # paged pools pass None: their
+            # rows axis is block_size, which kv_store_geometry never pads
+        logical += (leaf.size // (rows_c * hd_c) * rows
+                    * min(hd_c, cfg.head_dim) * leaf.dtype.itemsize)
+    return dict(cache_bytes_logical=logical, cache_bytes_padded=padded)
+
+
 @dataclasses.dataclass
 class Request:
     uid: int

@@ -37,6 +37,37 @@ t_valid = 1 — instead of the continuous engine's separate bucket-padded
 prefill call. That kills the O(log max_len) prefill retrace buckets: the
 engine compiles exactly two step shapes, (B, block_size) and (B, 1).
 
+PACKED TOKEN STEPS (packed=True, the default): the lockstep chunk layout
+above still pads every decode-riding slot to a full (block_size,) row — a
+step with one prefilling prompt and seven decoders burns 8 x 16 = 128 token
+lanes for 23 useful tokens. The packed step flattens the step's work into a
+RAGGED TOKEN BATCH instead (vLLM-v2 style): rows are tokens, not slots.
+
+    lockstep chunk step (B=4, bs=4)        packed step (budget T=8)
+    slot 0  p4 p5 p6 p7   ← prefilling     lane     0  1  2  3  4  5  6  7
+    slot 1  d  ░  ░  ░    ← decode rides   token   p4 p5 p6 p7 d  d  d  ░
+    slot 2  d  ░  ░  ░      with 3 pad     slot_id  0  0  0  0  1  2  3 -1
+    slot 3  d  ░  ░  ░      lanes each     pos      4  5  6  7  9  12 5  0
+    12/16 lanes wasted                     7/8 lanes useful
+
+The host packer emits (token, slot_id, position) triples padded to a fixed
+token budget: each live decode slot contributes exactly one token, each
+prefilling slot a chunk of any length up to the leftover budget (the chunk
+size is BUDGET-driven, no longer hard-wired to block_size), and per-token
+`kv_len = position + 1` frontiers replace the per-slot mask. A token only
+attends within its own slot's blocks: the fused packed kernel
+(kernels/decode.py hccs_packed_prefill) walks `block_table[slot_ids[t]]` in
+its scalar-prefetched index_map (a gather-free DMA steer), while the XLA
+path scatters the tokens into a compact (B, Wb) per-slot grid for the
+attention core only — one per-slot KV gather, not one per token — and keeps
+every other layer token-packed (see models/attention.py
+_packed_attention). Each step runs at the
+smallest rung of a 4-entry chunk-width ladder (max_batch ... token_budget,
+default budget max_batch * block_size) that covers its pending work, so
+prompt tails and rider-dominated steps don't pad to the full budget — at
+most 4 traced shapes, still O(1). The lockstep layout stays available
+(packed=False) as the parity/benchmark baseline.
+
 PREFIX SHARING (cfg.prefix_sharing / --prefix-sharing): as a request's
 prefill fills a block entirely with prompt tokens, the engine registers it
 in a prefix TRIE keyed by (parent block id, chunk token bytes) — exact
@@ -80,7 +111,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import model as M
-from repro.models.attention import kv_store_geometry
+from repro.models.attention import decode_kernel_blockers, kv_store_geometry
 from repro.serve.engine import (Request, sample_tokens, validate_prompt,
                                 warn_decode_kernel_fallback)
 
@@ -180,6 +211,78 @@ def prefix_chunk(prompt, j: int, block_size: int) -> bytes:
                    np.int32)).tobytes()
 
 
+def schedule_step_tokens(live, remaining, budget: int,
+                         chunk_cap: int | None = None):
+    """Per-slot token counts for one packed step (pure; property-tested in
+    tests/test_packed_step.py).
+
+    live: (B,) bool; remaining: (B,) prompt tokens still to feed (0 for
+    decoding slots); budget: total token lanes this step. Every live slot is
+    scheduled: decode slots take exactly one lane, prefilling slots at least
+    one, and the leftover budget is dealt to prefilling slots in slot order
+    (greedy FIFO fill), at most `chunk_cap` tokens per slot — the cap bounds
+    the attention-grid width a single long prompt can force on every other
+    slot's grid row (see PagedEngine._grid_widths). Requires
+    budget >= live.sum()."""
+    live = np.asarray(live, bool)
+    remaining = np.asarray(remaining, np.int64)
+    cap = int(chunk_cap) if chunk_cap else int(budget)
+    t_valid = np.zeros(live.shape[0], np.int32)
+    t_valid[live] = 1
+    left = int(budget) - int(t_valid.sum())
+    if left < 0:
+        raise ValueError(
+            f"token budget {budget} below live slot count {live.sum()}")
+    for slot in np.flatnonzero(live & (remaining > 0)):
+        take = min(int(remaining[slot]) - 1, cap - 1, left)
+        t_valid[slot] += take
+        left -= take
+        if not left:
+            break
+    return t_valid
+
+
+def pack_slot_ids(t_valid, width: int):
+    """Flatten per-slot counts into the packed lane layout: slot segments
+    are contiguous, in slot order, pad lanes (-1) at the tail. Returns
+    (slot_ids (width,) int32, per-slot lane offsets (B,) int32)."""
+    t_valid = np.asarray(t_valid)
+    sid = np.full(width, -1, np.int32)
+    off = np.zeros(t_valid.shape[0], np.int32)
+    c = 0
+    for slot in np.flatnonzero(t_valid > 0):
+        tv = int(t_valid[slot])
+        off[slot] = c
+        sid[c:c + tv] = slot
+        c += tv
+    return sid, off
+
+
+def _slot_write_targets(table_row, start: int, tv: int, bs: int):
+    """Flat pool positions for one slot's next tv tokens: token i lands at
+    table_row[(start+i)//bs] * bs + (start+i) % bs. The single source of the
+    block-addressing rule, shared by the lockstep and packed layouts."""
+    gpos = start + np.arange(tv)
+    return np.asarray(table_row)[gpos // bs].astype(np.int64) * bs + gpos % bs
+
+
+def packed_write_positions(t_valid, off, tables, lengths, block_size: int,
+                           width: int):
+    """Flat pool scatter targets (width,): lane off[b] + i of slot b lands at
+    tables[b, (len+i)//bs] * bs + (len+i) % bs. Pad lanes are steered into
+    the trash block (row lane % bs — colliding writes are fine, it is
+    trash). _cow_shared ran before this, so no target block is shared."""
+    bs = block_size
+    wp = TRASH_BLOCK * bs + np.arange(width, dtype=np.int64) % bs
+    tables = np.asarray(tables)
+    for slot in np.flatnonzero(np.asarray(t_valid) > 0):
+        tv = int(t_valid[slot])
+        o = int(off[slot])
+        wp[o:o + tv] = _slot_write_targets(tables[slot], int(lengths[slot]),
+                                           tv, bs)
+    return wp.astype(np.int32)
+
+
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _copy_block_kv(layers, src, dst):
     """Copy-on-write: duplicate pool block `src` into `dst` across all layers
@@ -211,7 +314,9 @@ class PagedEngine:
                  max_len: int = 512, eos_id: int | None = None,
                  cache_dtype=jnp.float32, block_size: int | None = None,
                  num_blocks: int | None = None,
-                 prefix_sharing: bool | None = None):
+                 prefix_sharing: bool | None = None,
+                 packed: bool | None = None,
+                 token_budget: int | None = None):
         if cfg.hot_buffer != 0:
             raise ValueError(
                 "paged batching uses the block pool, not hot buffers "
@@ -254,6 +359,57 @@ class PagedEngine:
         # occupancy telemetry: running sum/count, O(1) state
         self.occupancy_sum = 0.0
         self.occupancy_steps = 0
+
+        # packed token steps (the default): rows are tokens, not slots —
+        # chunk size is budget-driven, decode slots cost one lane each.
+        # packed=False keeps the lockstep (B, block_size)/(B, 1) layout as
+        # the parity/benchmark baseline. The default budget matches one
+        # lockstep chunk step's lane count (max_batch * block_size): any
+        # lockstep step's work fits in one packed step, so the packed step
+        # COUNT never exceeds lockstep's (per-step dispatch overhead is the
+        # other half of the padding tax) while ragged packing keeps the
+        # lanes that lockstep would pad doing useful prefill work instead.
+        self.packed = True if packed is None else bool(packed)
+        budget = (int(token_budget) if token_budget
+                  else max_batch * bs)
+        if budget < max_batch:
+            raise ValueError(
+                f"token_budget {budget} cannot schedule every live slot "
+                f"(max_batch {max_batch})")
+        self.token_budget = budget
+        # chunk-width ladder: a packed step runs at the smallest traced width
+        # that covers its work, so prompt-tail and rider-dominated steps
+        # don't pad all the way to the budget. At most 4 traced shapes —
+        # still O(1), vs the O(log max_len) prefill buckets paging killed.
+        self._widths = sorted({max_batch, max(budget // 4, max_batch),
+                               max(budget // 2, max_batch), budget})
+        # attention-grid width ladder: the XLA packed path runs its attention
+        # core on a (B, Wb) per-slot grid (models/attention.py
+        # _packed_attention) where Wb buckets this step's max per-slot chunk
+        # — 1 for pure decode (the lockstep decode shape), exact block_size
+        # multiples otherwise. Per-slot chunks are capped at 4 blocks so a
+        # long prompt can neither monopolize the step nor blow the grid up
+        # for every rider's row (grid rounding waste stays < one block/slot,
+        # same as lockstep's ragged final chunk) while chunk steps still
+        # prefill 4x the tokens a lockstep step can.
+        self._chunk_cap = min(4 * bs, budget)
+        self._grid_widths = [1] + [k * bs for k in
+                                   range(1, self._chunk_cap // bs + 1)]
+        if self._grid_widths[-1] < self._chunk_cap:
+            self._grid_widths.append(self._chunk_cap)
+        # with the fused packed kernel active, attention never reads the
+        # grid-steering arrays — omit them so the step traces once per chunk
+        # width, not once per (chunk width, grid width) pair
+        self._use_grid = not (cfg.decode_kernel != "none"
+                              and not decode_kernel_blockers(cfg)
+                              and bool(params["hccs"]))
+        # token-lane telemetry: padding efficiency is lanes_valid/lanes_total;
+        # pad_lanes_skipped estimates the lanes the lockstep layout would
+        # have burned for the same steps (packing's analogue of the prefix
+        # index's prefill_tokens_skipped)
+        self.lanes_valid = 0
+        self.lanes_total = 0
+        self.pad_lanes_skipped = 0
 
         # prefix sharing: exact-content index over full-block prompt-prefix
         # chunks -> pool block id. The index holds its own reference on every
@@ -306,6 +462,25 @@ class PagedEngine:
             return logits[:, 0], cache
 
         self._step_fn = _step
+
+        # packed token step: tokens ride the sequence axis of a batch-of-one
+        # forward, steered by slot_ids / per-token positions / per-token
+        # kv_len. One traced shape per (chunk width, grid width) pair the
+        # traffic actually hits — both ladders are O(1)-sized, so the trace
+        # count is bounded (~a dozen worst case), but callers timing steps
+        # must warm every shape their workload reaches (see the double
+        # warm-up note in benchmarks/serving_throughput.py). lane_idx picks
+        # each slot's LAST packed lane for sampling.
+        @functools.partial(jax.jit, donate_argnums=(4,))
+        def _packed(w, hccs, tokens, positions, cache, extras, lane_idx):
+            x, cache, _ = M.forward(
+                w, hccs, {"tokens": tokens, "positions": positions}, cfg_,
+                cache=dict(cache, **extras), decode=True)
+            h_last = x[0, lane_idx][:, None]             # (B, 1, D)
+            logits = M.logits_from_hidden(w, h_last, cfg_)
+            return logits[:, 0], cache
+
+        self._packed_fn = _packed
 
     # ------------------------------------------------------------- queue --
 
@@ -481,7 +656,11 @@ class PagedEngine:
         """Cumulative prefix-sharing telemetry. prefill_tokens counts all
         admitted prompt tokens regardless of the sharing setting (it is the
         skip-rate denominator); every other counter stays zero when sharing
-        is disabled."""
+        is disabled. pad_lanes_skipped is the OTHER prefill saving — token
+        lanes the packed step avoided versus the lockstep layout (zero with
+        packed=False) — reported here so the two are distinguishable in the
+        same printout: prefix sharing skips real prefill FLOPs, packing
+        skips padding FLOPs."""
         return dict(
             lookups=self.prefix_lookups, hits=self.prefix_hits,
             hit_rate=self.prefix_hits / max(self.prefix_lookups, 1),
@@ -490,7 +669,17 @@ class PagedEngine:
             skip_rate=(self.prefill_tokens_skipped
                        / max(self.prefill_tokens_total, 1)),
             cow_copies=self.cow_copies, evictions=self.prefix_evictions,
-            cached_blocks=len(self._prefix_index))
+            cached_blocks=len(self._prefix_index),
+            pad_lanes_skipped=self.pad_lanes_skipped)
+
+    def padding_stats(self) -> dict:
+        """Token-lane telemetry: efficiency = valid lanes / padded lanes over
+        every step so far (the packing win the benchmark records), plus the
+        estimated lanes the lockstep layout would have burned extra."""
+        return dict(lanes_valid=self.lanes_valid,
+                    lanes_total=self.lanes_total,
+                    efficiency=self.lanes_valid / max(self.lanes_total, 1),
+                    pad_lanes_skipped=self.pad_lanes_skipped)
 
     # ------------------------------------------------------------- slots --
 
@@ -538,14 +727,13 @@ class PagedEngine:
                      (self.max_batch, 1)) + TRASH_BLOCK * bs
         for slot in np.flatnonzero(t_valid > 0):
             tv = int(t_valid[slot])
-            gpos = int(self._lengths[slot]) + np.arange(tv)
-            blocks = self._tables[slot, gpos // bs].astype(np.int64)
-            wp[slot, :tv] = blocks * bs + gpos % bs
+            wp[slot, :tv] = _slot_write_targets(
+                self._tables[slot], int(self._lengths[slot]), tv, bs)
         return wp.astype(np.int32)
 
     def _step(self, width: int) -> list[Request]:
-        """One batched step: chunk (width == block_size, some slot is mid-
-        prompt) or pure decode (width == 1). Returns newly finished."""
+        """One lockstep batched step: chunk (width == block_size, some slot
+        is mid-prompt) or pure decode (width == 1). Returns newly finished."""
         live = self._live.copy()
         self.occupancy_sum += float(live.mean())
         self.occupancy_steps += 1
@@ -561,6 +749,8 @@ class PagedEngine:
             else:                            # decode rides along, t_valid 1
                 toks[slot, 0] = self._last[slot]
                 t_valid[slot] = 1
+        self.lanes_valid += int(t_valid.sum())
+        self.lanes_total += self.max_batch * width
         self._grow_tables(t_valid)
         if self.prefix_sharing:
             self._cow_shared(t_valid)
@@ -572,6 +762,97 @@ class PagedEngine:
         logits, self._cache = self._step_fn(self.w, self.hccs,
                                             jnp.asarray(toks), cache, extras,
                                             jnp.asarray(t_valid))
+        return self._sample_and_finish(live, t_valid, logits)
+
+    def _step_packed(self) -> list[Request]:
+        """One PACKED token step: the step's work — a chunk of any length per
+        prefilling slot plus one token per decoding slot — flattened into a
+        ragged (1, width) token batch with per-token slot ids, positions and
+        causal frontiers. width is the smallest rung of the chunk-width
+        ladder covering the step's pending work (capped at token_budget);
+        pure decode lands on the max_batch rung. Returns newly finished."""
+        live = self._live.copy()
+        self.occupancy_sum += float(live.mean())
+        self.occupancy_steps += 1
+        remaining = np.zeros(self.max_batch, np.int64)
+        for slot in np.flatnonzero(live):
+            remaining[slot] = (len(self._slots[slot].prompt)
+                               - int(self._prompt_pos[slot]))
+        needed = int(np.where(
+            live, np.minimum(np.maximum(remaining, 1), self._chunk_cap),
+            0).sum())
+        needed = min(needed, self.token_budget)
+        width = next(w for w in self._widths if w >= needed)
+        t_valid = schedule_step_tokens(live, remaining, width,
+                                       self._chunk_cap)
+        sid, off = pack_slot_ids(t_valid, width)
+        toks = np.zeros(width, np.int32)
+        positions = np.zeros(width, np.int32)
+        for slot in np.flatnonzero(t_valid > 0):
+            tv = int(t_valid[slot])
+            o = int(off[slot])
+            if remaining[slot] > 0:          # prefill chunk (budget-sized)
+                pos = int(self._prompt_pos[slot])
+                toks[o:o + tv] = self._slots[slot].prompt[pos:pos + tv]
+            else:                            # decode: one lane
+                toks[o] = self._last[slot]
+            positions[o:o + tv] = int(self._lengths[slot]) + np.arange(tv)
+        self.lanes_valid += int(t_valid.sum())
+        self.lanes_total += width
+        # lanes the lockstep layout would burn for the SAME scheduled work:
+        # it caps each slot at block_size tokens per chunk step, so this
+        # step's largest per-slot chunk takes ceil(max tv / bs) lockstep
+        # steps of max_batch * block_size lanes each. Those extra lockstep
+        # steps would ALSO advance every decode rider by one token each —
+        # progress this packed step has not made — so credit the riders one
+        # future packed decode lane per extra step (decode-only steps
+        # themselves save nothing).
+        if (remaining > 0).any():
+            n_lockstep = -(-int(t_valid.max()) // self.block_size)
+            riders = int((live & (remaining == 0)).sum())
+            lockstep = n_lockstep * self.max_batch * self.block_size
+            self.pad_lanes_skipped += max(
+                lockstep - width - (n_lockstep - 1) * riders, 0)
+        self._grow_tables(t_valid)
+        if self.prefix_sharing:
+            self._cow_shared(t_valid)
+        wp = packed_write_positions(t_valid, off, self._tables, self._lengths,
+                                    self.block_size, width)
+        kv_len = np.where(sid >= 0, positions + 1, 0).astype(np.int32)
+        lane_idx = np.maximum(off + t_valid - 1, 0).astype(np.int32)
+        cache = dict(self._cache, length=jnp.asarray(self._lengths))
+        extras = {"block_table": jnp.asarray(self._tables),
+                  "write_pos": jnp.asarray(wp[None]),
+                  "kv_len": jnp.asarray(kv_len),
+                  "slot_ids": jnp.asarray(sid)}
+        if self._use_grid:
+            # XLA attention-grid steering: cell (slot, i) of the (B, Wb)
+            # grid is the slot's i-th token this step; grid_pos maps packed
+            # lanes to flat cells (pad lanes -> the spill row B*Wb)
+            max_tv = max(int(t_valid.max()), 1)
+            wb = next(w for w in self._grid_widths if w >= max_tv)
+            q_pos_grid = (self._lengths[:, None]
+                          + np.arange(wb, dtype=np.int32)[None, :])
+            grid_pos = np.full(width, self.max_batch * wb, np.int32)
+            valid_lane = sid >= 0
+            grid_pos[valid_lane] = (sid[valid_lane] * wb
+                                    + (np.flatnonzero(valid_lane)
+                                       - off[sid[valid_lane]]))
+            extras.update(
+                q_pos_grid=jnp.asarray(q_pos_grid.astype(np.int32)),
+                grid_pos=jnp.asarray(grid_pos),
+                kv_len_slot=jnp.asarray((self._lengths
+                                         + t_valid).astype(np.int32)))
+        logits, self._cache = self._packed_fn(
+            self.w, self.hccs, jnp.asarray(toks[None]),
+            jnp.asarray(positions[None]), cache, extras,
+            jnp.asarray(lane_idx))
+        return self._sample_and_finish(live, t_valid, logits)
+
+    def _sample_and_finish(self, live, t_valid, logits) -> list[Request]:
+        """Shared step tail (lockstep and packed layouts): sample each slot
+        that produced a next token, advance frontiers, register prefixes,
+        finish slots at budget/EOS/cache-full."""
         # a slot samples this step iff it produced a next token: decoding, or
         # its prompt completed within this chunk
         samples = live & (self._prompt_pos + t_valid
@@ -616,6 +897,9 @@ class PagedEngine:
         while self._queue or self._live.any():
             self._admit()
             assert self._live.any(), "admission stalled with free pool"
+            if self.packed:
+                finished.extend(self._step_packed())
+                continue
             prefilling = any(
                 self._live[s] and self._prompt_pos[s] < len(self._slots[s].prompt)
                 for s in range(self.max_batch) if self._slots[s] is not None)

@@ -6,14 +6,19 @@ causal semantics, GQA packing, per-slot padded lengths, and per-head theta.
 hccs_paged_decode (the block-table gather variant) is asserted against its
 own oracle and against hccs_decode on an equivalent contiguous layout,
 covering sentinel skipping, scrambled physical block order, and sub-block
-tiling. All cases run in interpret mode (CPU); on TPU they lower to Mosaic.
+tiling. hccs_packed_prefill (the token-centric packed-step variant) is
+asserted against its own oracle and against hccs_paged_decode with tokens
+expanded to slots, covering the slot-id indirection, per-token frontiers,
+and pad lanes. All cases run in interpret mode (CPU); on TPU they lower to
+Mosaic.
 """
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core.constraints import default_params
-from repro.kernels import hccs_attention, hccs_decode, hccs_paged_decode
+from repro.kernels import (hccs_attention, hccs_decode, hccs_packed_prefill,
+                           hccs_paged_decode)
 from repro.kernels import ref as REF
 
 pytestmark = pytest.mark.kernel
@@ -200,6 +205,77 @@ def test_paged_decode_subblock_tiling_invariant(rng):
     a = hccs_paged_decode(q, kp, vp, table, ln, scale, theta, block_k=32)
     c = hccs_paged_decode(q, kp, vp, table, ln, scale, theta, block_k=8)
     np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=1e-5)
+
+
+# --------------------------------------------------------------- packed --
+
+def _packed_case(rng, b, h, hkv, d, bs, nblk, slens, sid, lens):
+    """A paged pool/table pair plus a packed token batch over it: sid (T,)
+    assigns each token a slot (-1 = pad lane), lens (T,) its causal
+    frontier. Reuses _paged_case for the pool/table construction."""
+    _, kp, vp, table, scale, theta, _, _ = _paged_case(
+        rng, b, h, hkv, d, bs, nblk, slens)
+    t = len(sid)
+    q = jnp.asarray(rng.normal(0, 1, (t, h, d)), jnp.float32)
+    return (q, kp, vp, table, jnp.asarray(sid, jnp.int32),
+            jnp.asarray(lens, jnp.int32), scale, theta)
+
+
+@pytest.mark.parametrize("gqa", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("mode", ["wide", "i16_div", "i16_clb"])
+def test_packed_prefill_vs_oracle(gqa, mode, rng):
+    """Ragged mixed batch: several tokens of one slot at successive
+    frontiers (a prefill chunk), single tokens of others (decode riders),
+    and pad lanes — against the pure-jnp oracle."""
+    h, hkv = gqa
+    b, d, bs, nblk = 3, 32, 16, 4
+    sid = [0, 0, 0, 1, 2, 2, 0, 1, -1, -1]
+    lens = [38, 39, 40, 16, 6, 7, 17, 3, 0, 0]
+    case = _packed_case(rng, b, h, hkv, d, bs, nblk, [40, 16, 7], sid, lens)
+    got = hccs_packed_prefill(*case, mode=mode)
+    want = REF.hccs_packed_prefill_ref(*case, mode=mode)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-3)
+    # pad lanes return exact zeros
+    np.testing.assert_allclose(np.asarray(got)[-2:], 0.0, atol=1e-7)
+
+
+def test_packed_prefill_matches_paged_decode_per_token(rng):
+    """A packed batch of T tokens must equal T single-slot hccs_paged_decode
+    rows: the slot-id indirection is the only difference between the two
+    walks."""
+    b, h, hkv, d, bs, nblk = 3, 4, 2, 32, 16, 4
+    sid = np.asarray([2, 0, 1, 0, 2], np.int32)
+    lens = np.asarray([7, 40, 16, 39, 3], np.int32)
+    q, kp, vp, table, sidj, lensj, scale, theta = _packed_case(
+        rng, b, h, hkv, d, bs, nblk, [40, 16, 7], sid, lens)
+    got = hccs_packed_prefill(q, kp, vp, table, sidj, lensj, scale, theta)
+    want = hccs_paged_decode(q, kp, vp, table[sid], lensj, scale, theta)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+def test_packed_prefill_chunk_causality(rng):
+    """Tokens of one chunk at successive frontiers: token i's output must
+    not change when KV rows PAST its own frontier are poisoned — intra-chunk
+    causality comes entirely from the per-token lengths."""
+    b, h, hkv, d, bs, nblk = 2, 4, 2, 32, 16, 3
+    sid = np.asarray([0, 0, 0, 1], np.int32)
+    lens = np.asarray([33, 34, 35, 10], np.int32)
+    q, kp, vp, table, sidj, lensj, scale, theta = _packed_case(
+        rng, b, h, hkv, d, bs, nblk, [35, 10], sid, lens)
+    got = hccs_packed_prefill(q, kp, vp, table, sidj, lensj, scale, theta)
+    # poison slot 0's rows 33+ (the last two tokens of its final block):
+    # only the tokens whose frontier covers them may change
+    tbl = np.asarray(table)
+    blk = int(tbl[0, 2])                      # slot 0's third block: rows 32+
+    kp_p = np.asarray(kp).copy()
+    kp_p[blk, :, 33 - 2 * bs:, :] = 1e6
+    poisoned = hccs_packed_prefill(jnp.asarray(q), jnp.asarray(kp_p), vp,
+                                   table, sidj, lensj, scale, theta)
+    np.testing.assert_allclose(np.asarray(poisoned)[0], np.asarray(got)[0],
+                               atol=1e-6)    # frontier 33: sees rows < 33
+    np.testing.assert_allclose(np.asarray(poisoned)[3], np.asarray(got)[3],
+                               atol=1e-6)    # other slot: structurally blind
+    assert np.abs(np.asarray(poisoned)[2] - np.asarray(got)[2]).max() > 0
 
 
 def test_paged_decode_sentinel_blocks_inert(rng):

@@ -1,6 +1,7 @@
 """Continuous-batching engine behavior: slot reuse, mid-flight admission,
 wave-vs-continuous greedy parity, finished-slot cache isolation, the fused
-decode-kernel dispatch, and paged-KV (block pool) parity + memory bounds."""
+decode-kernel dispatch, paged-KV (block pool) parity + memory bounds, and
+packed-token-step parity (token-centric chunked prefill)."""
 import copy
 
 import jax
@@ -394,6 +395,111 @@ def test_prefix_sharing_eviction_under_pool_pressure(served, rng):
     # the index never points at a freed block
     for blk in eng._prefix_index.values():
         assert eng.alloc.ref(blk) >= 1
+
+
+@pytest.mark.parametrize("sharing", [False, True])
+def test_packed_step_parity_with_lockstep(served, rng, sharing):
+    """Acceptance: the packed token step produces greedy outputs
+    token-identical to the lockstep (B, block_size)/(B, 1) layout on a mixed
+    workload — under prefix sharing both off AND on (the shared-prefix set
+    includes a full-prompt hit, so the packed path exercises COW and the
+    re-fed last token too) — while padding out far fewer token lanes."""
+    cfg, params = served
+    shared = rng.integers(0, 256, 32).astype(np.int32)   # 2 full 16-blocks
+    prompts = ([rng.integers(0, 256, int(n)).astype(np.int32)
+                for n in (5, 13, 21)]
+               + [np.concatenate([shared,
+                                  rng.integers(0, 256, 7).astype(np.int32)]),
+                  np.concatenate([shared,
+                                  rng.integers(0, 256, 3).astype(np.int32)]),
+                  shared.copy()])         # full-prompt hit: COW under sharing
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=5)
+            for i, p in enumerate(prompts)]
+    reqs[1].max_new_tokens = 1
+    outs, engines = {}, {}
+    for packed in (False, True):
+        eng = PagedEngine(params, cfg, max_batch=4, max_len=64, block_size=16,
+                          packed=packed, prefix_sharing=sharing)
+        for r in copy.deepcopy(reqs):
+            eng.submit(r)
+        outs[packed] = {r.uid: r.out_tokens for r in eng.run()}
+        engines[packed] = eng
+    assert outs[False] == outs[True]
+    # prefix telemetry is scheduling-independent...
+    assert (engines[False].prefix_stats()["prefill_tokens_skipped"]
+            == engines[True].prefix_stats()["prefill_tokens_skipped"])
+    # ...but the packed layout burns strictly fewer padded token lanes
+    pf, pt = engines[False].padding_stats(), engines[True].padding_stats()
+    assert pt["efficiency"] > pf["efficiency"]
+    assert pt["pad_lanes_skipped"] > 0 and pf["pad_lanes_skipped"] == 0
+
+
+def test_packed_step_prefill_heavy_efficiency(served, rng):
+    """The packing acceptance regime: long prompts chunk-prefilling while
+    short-prompt long-output requests decode alongside (every lockstep chunk
+    step pads each rider to a full block_size row). The packed step's
+    padding efficiency must be >= 2x the lockstep layout's on the same
+    workload (the benchmark gates the same ratio plus tok/s on its
+    prefill-heavy workload)."""
+    cfg, params = served
+    reqs = ([Request(uid=i, prompt=rng.integers(0, 256, 5).astype(np.int32),
+                     max_new_tokens=16) for i in range(3)]
+            + [Request(uid=3 + j,
+                       prompt=rng.integers(0, 256, 45).astype(np.int32),
+                       max_new_tokens=4) for j in range(3)])
+    eff, outs = {}, {}
+    for packed in (False, True):
+        eng = PagedEngine(params, cfg, max_batch=4, max_len=64, block_size=16,
+                          num_blocks=17, packed=packed)
+        for r in copy.deepcopy(reqs):
+            eng.submit(r)
+        outs[packed] = {r.uid: r.out_tokens for r in eng.run()}
+        eff[packed] = eng.padding_stats()["efficiency"]
+    assert outs[False] == outs[True]
+    assert eff[True] >= 2 * eff[False], eff
+
+
+def test_packed_step_budget_drives_chunk_size(served, rng):
+    """The packed chunk size is budget-driven, not block_size-bound: with a
+    large token budget a long prompt prefills in ONE step, and outputs stay
+    token-identical to a small-budget engine (scheduling never changes what
+    is generated)."""
+    cfg, params = served
+    prompt = rng.integers(0, 256, 41).astype(np.int32)
+    outs, steps = [], []
+    for budget in (4, 48):
+        eng = PagedEngine(params, cfg, max_batch=2, max_len=64, block_size=16,
+                          packed=True, token_budget=budget)
+        eng.submit(Request(uid=0, prompt=prompt.copy(), max_new_tokens=4))
+        (done,) = eng.run()
+        outs.append(done.out_tokens)
+        steps.append(eng.occupancy_steps)
+    assert outs[0] == outs[1]
+    # 41-token prompt: one 48-lane chunk step + decode vs ceil(41/4) chunks
+    assert steps[1] < steps[0]
+    with pytest.raises(ValueError):
+        PagedEngine(params, cfg, max_batch=4, max_len=64, block_size=16,
+                    packed=True, token_budget=2)      # below max_batch
+
+
+@pytest.mark.parametrize("mode", ["i16_div", "wide"])
+def test_packed_decode_kernel_engine_parity(tiny_cfg, rng, mode):
+    """cfg.decode_kernel under the packed layout dispatches EVERY step
+    (chunks included) to the fused hccs_packed_prefill kernel; greedy outputs
+    must match the packed XLA STE path bit-for-bit."""
+    base = dict(attention_prob="hccs", hccs_mode=mode)
+    cfg0 = tiny_cfg(**base)
+    cfgk = tiny_cfg(**base, decode_kernel="fused")
+    params = M.init_params(jax.random.PRNGKey(0), cfg0)
+    reqs = _requests(rng, 4, lens=(5, 9, 19), max_new=4)
+    outs = []
+    for cfg in (cfg0, cfgk):
+        eng = PagedEngine(params, cfg, max_batch=4, max_len=64, block_size=16,
+                          packed=True)
+        for r in copy.deepcopy(reqs):
+            eng.submit(r)
+        outs.append({r.uid: r.out_tokens for r in eng.run()})
+    assert outs[0] == outs[1]
 
 
 def test_temperature_sampling_and_validation(served, rng):
