@@ -23,6 +23,15 @@ prefix — the chatbot/few-shot regime) runs the paged engine with prefix
 sharing off vs on and records prefix hit-rate, prefill tokens skipped, COW
 copies, and cache bytes.
 
+A MULTI-TURN chat workload (sessions of several turns, each turn a fresh
+user message on top of the stored history) runs the paged engine with
+decode-block sharing off vs on: off re-prefills the whole conversation —
+prompt AND previously generated replies — every turn, on prefix-matches the
+cached blocks (decode-origin ones included) and prefills only the new
+message. Records tok/s, decode-block hit counts, and follow-up-turn
+skip rates; the on/off tok/s ratio is the acceptance gate for the
+decode-sharing win (>= 1.5x).
+
 Cache bytes are reported as cache_bytes_logical AND cache_bytes_padded:
 with the decode kernel active the arena is lane-padded (head_dim -> 128),
 so the raw allocation is up to 4x the logical cache — reporting both keeps
@@ -56,6 +65,14 @@ MAX_BATCH = 8
 MAX_LEN = 128
 BLOCK_SIZE = 16
 SYSTEM_PROMPT_LEN = 48               # shared prefix of the prefix workload
+# multi-turn chat workload geometry: user-message length is a non-multiple
+# of BLOCK_SIZE and replies cross block boundaries mid-decode, so the trie
+# caches genuine decode-origin blocks (not just re-registered prompt ones)
+MT_SESSIONS = 6
+MT_TURNS = 6
+MT_USER_LEN = 40
+MT_REPLY = 12
+MT_MAX_LEN = 384                     # holds a full 6-turn history per slot
 DEFAULT_JSON = "BENCH_serving.json"
 
 
@@ -109,6 +126,60 @@ def _prefill_heavy_workload(rng, n):
     return reqs
 
 
+def _multi_turn_traffic(rng):
+    """Chat sessions: per session, MT_TURNS fresh user messages. Every turn
+    rides on the engine-stored history, so turn k's effective prompt is the
+    whole conversation so far plus this message."""
+    return [[rng.integers(0, VOCAB, MT_USER_LEN).astype(np.int32)
+             for _ in range(MT_TURNS)] for _ in range(MT_SESSIONS)]
+
+
+def _serve_turns(eng, traffic, tag):
+    """Drive one round of every session per turn through the session API
+    (all sessions' turn-k requests batch together); returns generated
+    tokens."""
+    tokens = 0
+    for turn in range(MT_TURNS):
+        for s, msgs in enumerate(traffic):
+            eng.submit(Request(uid=turn * len(traffic) + s,
+                               prompt=msgs[turn].copy(),
+                               max_new_tokens=MT_REPLY),
+                       session=f"{tag}{s}")
+        tokens += sum(len(r.out_tokens) for r in eng.run())
+    return tokens
+
+
+def _serve_multi_turn(make_engine, warm_traffic, traffic, passes: int = 3):
+    """Warm-up + timed multi-turn serve on the SAME engine instance (the jit
+    cache lives on it). The warm-up drives identical turn structure under
+    throwaway session ids; each timed pass then starts from a cold prefix
+    cache and fresh sessions, so it measures the steady-state multi-turn
+    regime, compile excluded. Reports the BEST of `passes` identical passes:
+    the multi-turn runs are short and the on/off ratio is an acceptance
+    gate, so a single pass is too exposed to scheduler noise on a shared
+    box — the minimum is the least-contended measurement of the same
+    deterministic work."""
+    eng = make_engine()
+    _serve_turns(eng, warm_traffic, "warm")
+    for s in range(MT_SESSIONS):
+        eng.end_session(f"warm{s}")
+    best = None
+    for p in range(passes):
+        if eng.prefix_sharing:
+            eng.clear_prefix_cache()
+        p0 = eng.prefix_stats() if eng.prefix_sharing else None
+        t0 = time.perf_counter()
+        tokens = _serve_turns(eng, traffic, f"chat{p}-")
+        dt = time.perf_counter() - t0
+        for s in range(MT_SESSIONS):
+            eng.end_session(f"chat{p}-{s}")
+        row = dict(tokens=tokens, seconds=dt,
+                   prefix=None if p0 is None else _prefix_delta(eng, p0))
+        if best is None or dt < best["seconds"]:
+            best = row
+    return best
+
+
 def _engine_factories(cfg, params):
     mk = dict(max_batch=MAX_BATCH, max_len=MAX_LEN)
     # "paged" is the lockstep (B, block_size)/(B, 1) baseline; "paged+packed"
@@ -150,6 +221,26 @@ def _cache_byte_stats(eng):
     return kv_cache_byte_stats(cache, eng.cfg, max_len)
 
 
+def _prefix_delta(eng, p0):
+    """Prefix-sharing counters over a timed segment: the engine counters are
+    cumulative, so subtract the pre-segment snapshot (the warm-up populates
+    the prefix cache — this is the steady-state rate) and rebuild the
+    rates."""
+    p1 = eng.prefix_stats()
+    d = {k: p1[k] - p0[k]
+         for k in ("lookups", "hits", "prompt_hits", "decode_hits",
+                   "prefill_tokens", "prefill_tokens_skipped",
+                   "prompt_tokens_skipped", "decode_tokens_skipped",
+                   "followup_prefill_tokens", "followup_tokens_skipped",
+                   "cow_copies", "evictions", "pad_lanes_skipped")}
+    d["hit_rate"] = d["hits"] / max(d["lookups"], 1)
+    d["skip_rate"] = (d["prefill_tokens_skipped"]
+                      / max(d["prefill_tokens"], 1))
+    d["followup_skip_rate"] = (d["followup_tokens_skipped"]
+                               / max(d["followup_prefill_tokens"], 1))
+    return d
+
+
 def _serve(make_engine, warmup, reqs, warmup_passes: int = 1):
     """Warm and time the SAME engine instance: the jitted closures live on
     the instance, so a throwaway warm-up engine would discard its compile
@@ -185,16 +276,7 @@ def _serve(make_engine, warmup, reqs, warmup_passes: int = 1):
     pad_eff = ((getattr(eng, "lanes_valid", 0) - lv0) / lt) if lt else None
     prefix = None
     if p0 is not None:
-        # counters are cumulative; report the timed segment only (the warm-up
-        # populates the prefix cache, so this is the steady-state hit rate)
-        p1 = eng.prefix_stats()
-        prefix = {k: p1[k] - p0[k]
-                  for k in ("lookups", "hits", "prefill_tokens",
-                            "prefill_tokens_skipped", "cow_copies",
-                            "evictions", "pad_lanes_skipped")}
-        prefix["hit_rate"] = prefix["hits"] / max(prefix["lookups"], 1)
-        prefix["skip_rate"] = (prefix["prefill_tokens_skipped"]
-                               / max(prefix["prefill_tokens"], 1))
+        prefix = _prefix_delta(eng, p0)
     return dict(tokens=sum(len(r.out_tokens) for r in done), seconds=dt,
                 **_cache_byte_stats(eng), occupancy=occ,
                 padding_efficiency=pad_eff,
@@ -289,14 +371,47 @@ def run(fast: bool = True, engines: list | None = None,
             prefix_out.append(dict(variant="on" if sharing else "off",
                                    tok_per_s=tps, **row))
 
+    # multi-turn chat workload: paged engine + session API, decode-block
+    # sharing off vs on — off re-prefills the whole conversation every turn,
+    # on serves it from cached prompt+decode blocks. The on/off tok/s ratio
+    # is the acceptance gate for the decode-sharing win.
+    mt_out = []
+    if engines is None or any(e.startswith("paged") for e in names):
+        traffic = _multi_turn_traffic(np.random.default_rng(11))
+        mwarm = _multi_turn_traffic(np.random.default_rng(13))
+        nblk = MAX_BATCH * (MT_MAX_LEN // BLOCK_SIZE) + 1
+        print("\n# multi-turn chat (paged, %d sessions x %d turns): "
+              "decode_sharing, tokens, s, tok/s, vs_off, decode_hits, "
+              "followup_skip" % (MT_SESSIONS, MT_TURNS))
+        for sharing in (False, True):
+            row = _serve_multi_turn(
+                lambda: PagedEngine(params, cfg, block_size=BLOCK_SIZE,
+                                    max_batch=MAX_BATCH, max_len=MT_MAX_LEN,
+                                    num_blocks=nblk, prefix_sharing=sharing,
+                                    decode_sharing=sharing),
+                mwarm, traffic)
+            tps = row["tokens"] / row["seconds"]
+            row["vs_off"] = tps / mt_out[0]["tok_per_s"] if mt_out else 1.0
+            p = row["prefix"]
+            print("multi_turn,%s,%d,%.2f,%.1f,%.2fx,%s,%s" % (
+                "on" if sharing else "off", row["tokens"], row["seconds"],
+                tps, row["vs_off"],
+                "-" if p is None else p["decode_hits"],
+                "-" if p is None else "%.2f" % p["followup_skip_rate"]))
+            mt_out.append(dict(variant="on" if sharing else "off",
+                               tok_per_s=tps, **row))
+
     if json_path:
         with open(json_path, "w") as f:
             json.dump(dict(benchmark="serving_throughput",
                            max_batch=MAX_BATCH, max_len=MAX_LEN,
                            block_size=BLOCK_SIZE, requests=n,
-                           system_prompt_len=SYSTEM_PROMPT_LEN, engines=out,
+                           system_prompt_len=SYSTEM_PROMPT_LEN,
+                           multi_turn_sessions=MT_SESSIONS,
+                           multi_turn_turns=MT_TURNS, engines=out,
                            prefill_heavy=packed_out,
-                           prefix_sharing=prefix_out),
+                           prefix_sharing=prefix_out,
+                           multi_turn=mt_out),
                       f, indent=2)
         print(f"# wrote {json_path}")
     return out

@@ -3,7 +3,11 @@ batched requests through the continuous-batching slot engine, HCCS integer
 attention end to end, and compare against the wave scheduler.
 
 Trains a small model briefly first (so generations aren't pure noise), then
-serves a mixed queue of requests and reports throughput for both schedulers.
+serves a mixed queue of requests and reports throughput for both schedulers,
+and finally drives a multi-turn CHAT SESSION through the paged engine with
+decode-block sharing: follow-up turns prefix-match the prior turns' KV —
+prompt and generated tokens alike — instead of re-prefilling the
+conversation.
 
     PYTHONPATH=src python examples/serving.py
 """
@@ -27,7 +31,7 @@ cfg = ModelConfig(
     vocab_pad_multiple=1, attention_prob="hccs", hccs_mode="i16_div",
     attention_impl="dense")
 
-print("[1/2] quick pre-train so generations follow the planted bigrams ...")
+print("[1/3] quick pre-train so generations follow the planted bigrams ...")
 tcfg = TrainConfig(total_steps=60, warmup_steps=6, learning_rate=3e-3)
 state = make_train_state(jax.random.PRNGKey(0), cfg, tcfg)
 step = jax.jit(make_train_step(cfg, tcfg), donate_argnums=0)
@@ -37,7 +41,7 @@ state, hist = train_loop(
                             for k, v in stream.batch_at(s).items()},
     total_steps=60, log_every=20)
 
-print("[2/2] serving a mixed-length queue (HCCS i16+div attention) ...")
+print("[2/3] serving a mixed-length queue (HCCS i16+div attention) ...")
 rng = np.random.default_rng(0)
 reqs = []
 for i in range(16):
@@ -77,3 +81,24 @@ for name, eng in [
 sample = min(done, key=lambda r: r.uid)
 print(f"sample request {sample.uid}: prompt={sample.prompt[:6].tolist()}... "
       f"-> {sample.out_tokens[:12]}...")
+
+print("[3/3] multi-turn chat sessions (paged + decode-block sharing) ...")
+# submit(..., session=) prepends the stored history to each turn's message;
+# decode_sharing caches generated blocks as they fill, so follow-up turns
+# skip the prefill for everything already in the conversation
+chat = PagedEngine(state["params"], cfg, max_batch=4, max_len=256,
+                   block_size=16, decode_sharing=True)
+for turn in range(3):
+    for s in range(2):
+        chat.submit(Request(uid=10 * s + turn,
+                            prompt=rng.integers(0, VOCAB, 24).astype(np.int32),
+                            max_new_tokens=12),
+                    session=f"user-{s}")
+    for r in sorted(chat.run(), key=lambda r: r.uid):
+        print(f"  turn {turn}, session user-{r.uid // 10}: "
+              f"-> {r.out_tokens[:8]}...")
+stats = chat.prefix_stats()
+print(f"decode-block sharing: {stats['decode_hits']} decode-block hits, "
+      f"{100 * stats['followup_skip_rate']:.0f}% of follow-up-turn prefill "
+      f"tokens skipped, {stats['cached_decode_blocks']} generated blocks "
+      f"cached")

@@ -85,6 +85,12 @@ class ModelConfig:
     # refcounted copy-on-write blocks (serve/paged.py). Only meaningful with
     # cache_layout == "paged"; the slot-arena engines ignore it.
     prefix_sharing: bool = False
+    # paged decode-block sharing: additionally insert GENERATED-token blocks
+    # into the prefix trie as they fill (vLLM-style full-sequence hashing),
+    # so multi-turn sessions (PagedEngine.submit(..., session=)) reuse the
+    # KV of prior turns' replies instead of re-prefilling them. Implies the
+    # prefix-sharing machinery (the engine enables it automatically).
+    decode_sharing: bool = False
 
     def __post_init__(self):
         if self.num_heads and not self.head_dim:

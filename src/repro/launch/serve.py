@@ -3,6 +3,12 @@ scheduler.
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --reduced \
         --requests 8 --new-tokens 16 --scheduler paged --decode-kernel fused
+
+Multi-turn chat demo (each request becomes a session; follow-up turns reuse
+the prior turns' KV — prompt AND generated — via decode-block sharing):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --reduced \
+        --scheduler paged --decode-sharing --turns 4
 """
 from __future__ import annotations
 
@@ -31,6 +37,16 @@ def main():
                     help="reuse full-block prompt-prefix KV across requests "
                          "(refcounted copy-on-write blocks; paged scheduler "
                          "only)")
+    ap.add_argument("--decode-sharing", action="store_true",
+                    help="additionally cache GENERATED blocks as they fill "
+                         "at the decode frontier, so multi-turn sessions "
+                         "(--turns) reuse prior replies' KV; implies "
+                         "--prefix-sharing (paged scheduler only)")
+    ap.add_argument("--turns", type=int, default=1,
+                    help="multi-turn demo: serve each request as a session "
+                         "of this many chat turns (every turn submits a "
+                         "fresh --prompt-len user message on top of the "
+                         "stored history; paged scheduler only)")
     ap.add_argument("--step-layout", default=None,
                     choices=["packed", "lockstep"],
                     help="paged step layout (default packed): 'packed' "
@@ -43,9 +59,15 @@ def main():
                          "(0 = max_batch * block_size, one lockstep chunk "
                          "step's lane count)")
     args = ap.parse_args()
-    if args.prefix_sharing and args.scheduler != "paged":
-        raise SystemExit("--prefix-sharing requires --scheduler paged "
-                         "(prefix reuse needs the block pool)")
+    if (args.prefix_sharing or args.decode_sharing) \
+            and args.scheduler != "paged":
+        raise SystemExit("--prefix-sharing/--decode-sharing require "
+                         "--scheduler paged (KV reuse needs the block pool)")
+    if args.turns > 1 and args.scheduler != "paged":
+        raise SystemExit("--turns drives the paged engine's multi-turn "
+                         "session API; use --scheduler paged")
+    if args.turns < 1:
+        raise SystemExit(f"--turns must be >= 1, got {args.turns}")
     if args.scheduler != "paged" and (args.step_layout is not None
                                       or args.token_budget):
         raise SystemExit("--step-layout/--token-budget configure the paged "
@@ -68,10 +90,12 @@ def main():
         raise SystemExit(f"{args.arch} takes embedding inputs; the serve demo "
                          "targets token models (see examples/serving.py)")
     params = M.init_params(jax.random.PRNGKey(0), cfg)
-    max_len = args.prompt_len + args.new_tokens + 1
+    # a session's history grows every turn: the cache must hold all of them
+    max_len = args.turns * (args.prompt_len + args.new_tokens) + 1
     if args.scheduler == "paged":
         cfg = cfg.replace(cache_layout="paged",
-                          prefix_sharing=args.prefix_sharing)
+                          prefix_sharing=args.prefix_sharing,
+                          decode_sharing=args.decode_sharing)
         eng = PagedEngine(params, cfg, max_batch=args.max_batch,
                           max_len=max_len,
                           block_size=args.block_size or None,
@@ -84,12 +108,14 @@ def main():
         eng = engine_cls(params, cfg, max_batch=args.max_batch,
                          max_len=max_len)
     rng = np.random.default_rng(0)
-    # with --prefix-sharing the demo traffic shares a system-prompt-style
-    # prefix (~3/4 of the prompt, rounded DOWN to the block size: sharing is
-    # block-granular, so a sub-block prefix can never hit — pass a smaller
-    # --block-size if the default swallows the whole prompt)
+    # with --prefix-sharing the single-turn demo traffic shares a system-
+    # prompt-style prefix (~3/4 of the prompt, rounded DOWN to the block
+    # size: sharing is block-granular, so a sub-block prefix can never hit —
+    # pass a smaller --block-size if the default swallows the whole prompt).
+    # The --turns demo gets its reuse from the session histories instead, so
+    # its per-turn messages are fully random.
     shared_len = 0
-    if args.prefix_sharing:
+    if args.prefix_sharing and args.turns == 1:
         bs = args.block_size or cfg.block_size
         shared_len = 3 * args.prompt_len // 4 // bs * bs
         if shared_len == 0:
@@ -97,17 +123,37 @@ def main():
                   f"({bs} tokens); prefix sharing cannot hit — lower "
                   f"--block-size or raise --prompt-len")
     shared = rng.integers(0, cfg.vocab_size, shared_len).astype(np.int32)
-    for i in range(args.requests):
-        tail = rng.integers(0, cfg.vocab_size,
-                            args.prompt_len - shared_len).astype(np.int32)
-        eng.submit(Request(uid=i, prompt=np.concatenate([shared, tail]),
-                           max_new_tokens=args.new_tokens))
-    t0 = time.perf_counter()
-    done = eng.run()
-    dt = time.perf_counter() - t0
-    total_new = sum(len(r.out_tokens) for r in done)
-    print(f"served {len(done)} requests, {total_new} tokens in {dt:.2f}s "
-          f"({total_new / dt:.1f} tok/s)")
+    if args.turns > 1:
+        # multi-turn demo: each "request" is a chat session; every turn
+        # submits a fresh user message on top of the engine-stored history,
+        # so with --decode-sharing the follow-up turns prefix-match prior
+        # prompts AND replies instead of re-prefilling them
+        t0 = time.perf_counter()
+        done = []
+        for turn in range(args.turns):
+            for i in range(args.requests):
+                msg = rng.integers(0, cfg.vocab_size,
+                                   args.prompt_len).astype(np.int32)
+                eng.submit(Request(uid=args.requests * turn + i, prompt=msg,
+                                   max_new_tokens=args.new_tokens),
+                           session=f"session-{i}")
+            done.extend(eng.run())
+        dt = time.perf_counter() - t0
+        total_new = sum(len(r.out_tokens) for r in done)
+        print(f"served {args.requests} sessions x {args.turns} turns, "
+              f"{total_new} tokens in {dt:.2f}s ({total_new / dt:.1f} tok/s)")
+    else:
+        for i in range(args.requests):
+            tail = rng.integers(0, cfg.vocab_size,
+                                args.prompt_len - shared_len).astype(np.int32)
+            eng.submit(Request(uid=i, prompt=np.concatenate([shared, tail]),
+                               max_new_tokens=args.new_tokens))
+        t0 = time.perf_counter()
+        done = eng.run()
+        dt = time.perf_counter() - t0
+        total_new = sum(len(r.out_tokens) for r in done)
+        print(f"served {len(done)} requests, {total_new} tokens in {dt:.2f}s "
+              f"({total_new / dt:.1f} tok/s)")
     cache = getattr(eng, "_cache", None)
     if cache is not None:
         # logical vs padded: with the decode kernel active the arena is
@@ -122,16 +168,27 @@ def main():
         print(f"step padding: {pad['lanes_valid']}/{pad['lanes_total']} "
               f"token-lanes valid ({100 * pad['efficiency']:.0f}%), "
               f"{pad['pad_lanes_skipped']} lanes skipped by packing")
-    if args.prefix_sharing:
+    if args.prefix_sharing or args.decode_sharing:
         s = eng.prefix_stats()
         # the two prefill savings side by side: prefix sharing skips real
-        # prompt tokens, packing skips padded token-lanes
-        print(f"prefix sharing: {s['hits']}/{s['lookups']} hits, "
+        # prompt tokens, packing skips padded token-lanes — with the skip
+        # split by matched-block origin (prompt-cached vs decode-cached)
+        print(f"prefix sharing: {s['hits']}/{s['lookups']} hits "
+              f"({s['prompt_hits']} prompt-block, {s['decode_hits']} "
+              f"decode-block), "
               f"{s['prefill_tokens_skipped']}/{s['prefill_tokens']} prefill "
-              f"tokens skipped by prefix ({100 * s['skip_rate']:.0f}%) vs "
+              f"tokens skipped by prefix ({100 * s['skip_rate']:.0f}%: "
+              f"{s['prompt_tokens_skipped']} prompt + "
+              f"{s['decode_tokens_skipped']} decode) vs "
               f"{s['pad_lanes_skipped']} token-lanes skipped by packing, "
               f"{s['cow_copies']} COW copies, {s['evictions']} evictions, "
-              f"{s['cached_blocks']} blocks cached")
+              f"{s['cached_blocks']} blocks cached "
+              f"({s['cached_decode_blocks']} from decode)")
+        if args.turns > 1:
+            print(f"sessions: {100 * s['followup_skip_rate']:.0f}% of "
+                  f"follow-up-turn prefill tokens "
+                  f"({s['followup_tokens_skipped']}/"
+                  f"{s['followup_prefill_tokens']}) served from cached KV")
 
 
 if __name__ == "__main__":

@@ -6,6 +6,6 @@ from repro.serve.continuous import ContinuousEngine
 from repro.serve.engine import (Request, ServeEngine, kv_cache_byte_stats,
                                 kv_cache_bytes, sample_tokens)
 from repro.serve.paged import (BlockAllocator, BlockPoolExhausted,
-                               PagedEngine, pack_slot_ids,
+                               PagedEngine, PrefixTrie, pack_slot_ids,
                                packed_write_positions, prefix_chunk,
                                schedule_step_tokens)

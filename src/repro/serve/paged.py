@@ -86,6 +86,27 @@ needs logits to sample from), which lands a write inside a shared block —
 the copy-on-write rule copies that block to a fresh one first, so shared KV
 bytes are immutable for their whole cached lifetime.
 
+DECODE-BLOCK SHARING + SESSIONS (cfg.decode_sharing / --decode-sharing): the
+prefix trie above only keys on prompt tokens known at submit, so a follow-up
+turn of a conversation re-prefills every token the engine itself GENERATED
+last turn. With decode sharing on, blocks are inserted into the trie as they
+fill during decode too (vLLM-style full-sequence chunk hashing over
+prompt + output tokens — same (parent block id, chunk bytes) keys, tagged
+with a "decode" origin): a block that reaches block_size tokens at the
+decode frontier is registered at that step, refcount rules unchanged, and is
+COW-safe for the same reason prompt blocks are — cached blocks are immutable
+because writers only ever touch refcount-1 blocks. On top of that sits the
+multi-turn SESSION API: `submit(req, session="chat-1")` prepends the
+session's stored history (prompt + generated tokens of every prior turn) to
+the request's prompt, so admission prefix-matches the full prior
+conversation and a follow-up turn skips both the prefill FLOPs and the
+duplicate KV for everything already decoded. The session layer is
+correctness-orthogonal: with sharing off it degenerates to re-feeding the
+concatenated history (token-identical outputs, property of the parity
+tests); sharing only makes it cheap. prefix_stats() splits the reuse
+telemetry into prompt_hits/decode_hits (and the matching token counters) so
+prompt-prefix reuse and decode-block reuse are separately visible.
+
 Attention dispatch (models/attention.py) keys off `block_table` in the cache:
 the XLA path gathers each slot's blocks into a contiguous view; with
 cfg.decode_kernel != "none" the t == 1 hot path runs the block-sparse Pallas
@@ -211,6 +232,149 @@ def prefix_chunk(prompt, j: int, block_size: int) -> bytes:
                    np.int32)).tobytes()
 
 
+def sequence_chunk(prompt, out_tokens, j: int, block_size: int) -> bytes:
+    """Chunk j's bytes of the full sequence prompt + out_tokens, without
+    materializing the whole concatenation — registration only ever needs the
+    newly filled block's O(block_size) span."""
+    lo, hi = j * block_size, (j + 1) * block_size
+    plen = len(prompt)
+    if hi <= plen:
+        return prefix_chunk(prompt, j, block_size)
+    head = np.asarray(prompt[lo:plen] if lo < plen else [], np.int32)
+    tail = np.asarray(out_tokens[max(lo - plen, 0):hi - plen], np.int32)
+    return np.ascontiguousarray(np.concatenate([head, tail])).tobytes()
+
+
+class PrefixTrie:
+    """Exact-content prefix trie over full-block token chunks -> pool block.
+
+    Keys are (parent block id | -1 for the root, chunk bytes): the parent id
+    pins the whole history, so equal chunk content under different prefixes
+    stays distinct (zero collisions) at O(block_size) per level. The trie
+    holds its OWN allocator reference on every indexed block (fork at
+    insert, free at evict/clear), so cached KV outlives the registering
+    request. Entries carry the origin of their tokens — "prompt" (known at
+    submit) or "decode" (generated, possibly a boundary block mixing both) —
+    so engine telemetry can split prompt-prefix reuse from decode-block
+    (multi-turn) reuse.
+
+    Invariants (property-tested in tests/test_prefix_trie.py):
+      * reachability: an indexed key's parent is the root or itself an
+        indexed block — match() threads each level's block id into the next
+        key, so a chain can never dangle;
+      * insert is first-writer-wins: an existing key is touched and
+        returned, never replaced (the caller keeps using its own duplicate
+        block, which dies with the caller);
+      * evict_one only removes LEAF entries (no indexed children) whose
+        block has no holder besides the trie (ref == 1), least-recently-
+        touched first — so surviving chains stay reachable and in-flight
+        writers/holders are structurally protected;
+      * every indexed block has refcount >= 1 (the trie's own reference).
+    """
+
+    def __init__(self, alloc: BlockAllocator, block_size: int):
+        self.alloc = alloc
+        self.block_size = block_size
+        self._index: dict[tuple, int] = {}   # (parent, chunk bytes) -> block
+        self._block_key: dict[int, tuple] = {}      # block -> its trie key
+        self._children: dict[int, int] = {}         # parent -> indexed kids
+        self._lru: dict[tuple, int] = {}            # key -> last touch
+        self._origin: dict[tuple, str] = {}         # key -> prompt | decode
+        self._clock = 0
+
+    def __len__(self) -> int:
+        return len(self._index)
+
+    def blocks(self):
+        """The indexed pool block ids (for pool-hygiene checks)."""
+        return self._index.values()
+
+    def origin(self, key: tuple) -> str:
+        return self._origin[key]
+
+    def origin_counts(self) -> dict:
+        counts = {"prompt": 0, "decode": 0}
+        for o in self._origin.values():
+            counts[o] += 1
+        return counts
+
+    def touch(self, key: tuple):
+        self._clock += 1
+        self._lru[key] = self._clock
+
+    def match(self, tokens) -> list[tuple[tuple, int]]:
+        """Longest contiguous run of full-block chunks of `tokens` present in
+        the trie, as [(key, block id), ...] from block 0 up. Each hit's block
+        id threads into the next level's key, so the walk stops naturally at
+        the first missing level — a deeper entry without its parents is
+        unreachable by construction. Pure: does not touch the LRU (callers
+        touch the keys they actually map)."""
+        bs = self.block_size
+        matched = []
+        parent, j = -1, 0
+        while (j + 1) * bs <= len(tokens):
+            key = (parent, prefix_chunk(tokens, j, bs))
+            blk = self._index.get(key)
+            if blk is None:
+                break
+            matched.append((key, blk))
+            parent, j = blk, j + 1
+        return matched
+
+    def insert(self, parent: int, chunk: bytes, blk, origin: str) -> int:
+        """Index `blk` under (parent, chunk) and take a reference on it;
+        first writer wins — an existing key is touched and its block
+        returned, so chains stay rooted in index blocks even when the caller
+        holds a COW copy or a duplicate. Returns the indexed block id (the
+        caller threads it into the next level's parent)."""
+        key = (int(parent), chunk)
+        have = self._index.get(key)
+        if have is not None:
+            self.touch(key)
+            return have
+        blk = int(blk)
+        self._index[key] = self.alloc.fork(blk)
+        self._block_key[blk] = key
+        self._origin[key] = origin
+        self._children[key[0]] = self._children.get(key[0], 0) + 1
+        self.touch(key)
+        return blk
+
+    def evict_one(self, protect=frozenset()) -> int | None:
+        """Reclaim the least-recently-used index-only LEAF block (ref == 1:
+        no live slot or session holds it; no indexed children: evicting an
+        interior node would orphan its whole subtree — unreachable entries
+        squatting on pool blocks). Returns the freed block id, or None when
+        nothing is evictable."""
+        for key in sorted(self._lru, key=self._lru.get):
+            blk = self._index[key]
+            if (blk in protect or self.alloc.ref(blk) != 1
+                    or self._children.get(blk, 0)):
+                continue
+            del self._index[key]
+            del self._block_key[blk]
+            del self._lru[key]
+            del self._origin[key]
+            parent = key[0]          # a block id, or -1 for the trie root
+            self._children[parent] -= 1
+            if not self._children[parent]:
+                del self._children[parent]
+            self.alloc.free([blk])
+            return blk
+        return None
+
+    def clear(self):
+        """Drop every index reference; blocks with no other holder return to
+        the free list immediately."""
+        blocks = list(self._index.values())
+        self._index.clear()
+        self._block_key.clear()
+        self._children.clear()
+        self._lru.clear()
+        self._origin.clear()
+        self.alloc.free(blocks)
+
+
 def schedule_step_tokens(live, remaining, budget: int,
                          chunk_cap: int | None = None):
     """Per-slot token counts for one packed step (pure; property-tested in
@@ -315,6 +479,7 @@ class PagedEngine:
                  cache_dtype=jnp.float32, block_size: int | None = None,
                  num_blocks: int | None = None,
                  prefix_sharing: bool | None = None,
+                 decode_sharing: bool | None = None,
                  packed: bool | None = None,
                  token_budget: int | None = None):
         if cfg.hot_buffer != 0:
@@ -411,25 +576,51 @@ class PagedEngine:
         self.lanes_total = 0
         self.pad_lanes_skipped = 0
 
-        # prefix sharing: exact-content index over full-block prompt-prefix
-        # chunks -> pool block id. The index holds its own reference on every
-        # registered block (fork at registration), so cached prefixes outlive
-        # the registering request; index-only blocks (ref == 1) are the
-        # eviction candidates, reclaimed LRU-first under pool pressure.
-        self.prefix_sharing = bool(cfg.prefix_sharing if prefix_sharing is None
-                                   else prefix_sharing)
-        # trie keys: (parent block id | -1 for the root, chunk bytes)
-        self._prefix_index: dict[tuple, int] = {}   # trie key -> block id
-        self._block_key: dict[int, tuple] = {}      # block id -> trie key
-        self._children: dict[int, int] = {}         # block id -> indexed kids
-        self._lru: dict[tuple, int] = {}            # trie key -> last touch
-        self._lru_clock = 0
+        # prefix sharing: exact-content trie over full-block chunks -> pool
+        # block id (PrefixTrie above). The trie holds its own reference on
+        # every registered block (fork at registration), so cached prefixes
+        # outlive the registering request; index-only blocks (ref == 1) are
+        # the eviction candidates, reclaimed LRU-first under pool pressure.
+        # decode_sharing additionally registers GENERATED blocks as they fill
+        # at the decode frontier (multi-turn reuse) — it rides the same trie,
+        # so it implies the prefix-sharing machinery.
+        self.decode_sharing = bool(cfg.decode_sharing if decode_sharing is None
+                                   else decode_sharing)
+        self.prefix_sharing = (bool(cfg.prefix_sharing if prefix_sharing
+                                    is None else prefix_sharing)
+                               or self.decode_sharing)
+        self.trie = PrefixTrie(self.alloc, bs)
         self.prefix_lookups = 0
         self.prefix_hits = 0
+        self.prompt_hits = 0            # admissions matching >=1 prompt block
+        self.decode_hits = 0            # admissions matching >=1 decode block
         self.prefill_tokens_total = 0
         self.prefill_tokens_skipped = 0
+        self.prompt_tokens_skipped = 0  # skip split by matched-block origin
+        self.decode_tokens_skipped = 0
         self.cow_copies = 0
         self.prefix_evictions = 0
+
+        # multi-turn sessions: submit(req, session=sid) prepends the stored
+        # history (prompt + generated tokens of every prior turn) to the
+        # request's prompt; _finish extends the history with this turn. With
+        # decode_sharing the history's KV is still cached in the trie, so a
+        # follow-up turn prefix-matches it instead of re-prefilling.
+        self._sessions: dict = {}            # session id -> token history
+        self._session_busy: set = set()      # sessions with an in-flight turn
+        self._req_session: dict[int, object] = {}   # id(req) -> session id
+        self._followups: set[int] = set()    # id(req) of follow-up turns
+        self.followup_prefill_tokens = 0     # follow-up-turn skip telemetry
+        self.followup_tokens_skipped = 0
+
+        # per-slot registration watermark: trie levels already indexed for
+        # this request and the INDEXED parent at that depth (which may
+        # differ from the slot's own table under first-writer-wins), so
+        # frontier-crossing registration only ever walks the newly filled
+        # block(s) — O(1) amortized per step instead of re-walking the
+        # whole sequence from the root
+        self._reg_level = np.zeros(max_batch, np.int32)
+        self._reg_parent = np.full(max_batch, -1, np.int64)
 
         # block tables + host slot table
         self._tables = np.full((max_batch, self._nblk_per_seq), -1, np.int32)
@@ -487,14 +678,54 @@ class PagedEngine:
     def _blocks_for(self, plen: int, max_new: int) -> int:
         return -(-min(plen + max_new, self.max_len) // self.block_size)
 
-    def submit(self, req: Request):
-        validate_prompt(req.prompt, self.max_len)
-        need = self._blocks_for(len(req.prompt), req.max_new_tokens)
+    def submit(self, req: Request, session=None):
+        """Queue a request. With `session`, the request is one TURN of a
+        multi-turn conversation: the session's stored history (prompt +
+        generated tokens of every prior turn) is prepended to req.prompt, so
+        admission prefix-matches the full prior conversation — with
+        decode_sharing on, that skips prefill FLOPs and duplicate KV for
+        everything already decoded; with sharing off it degenerates to
+        re-feeding the concatenated history (same outputs, full cost). The
+        history (and the max_len bound) grows with every turn; a session
+        admits one turn at a time."""
+        prompt = req.prompt
+        followup = False
+        if session is not None:
+            if session in self._session_busy:
+                raise ValueError(
+                    f"session {session!r} already has an in-flight turn")
+            hist = self._sessions.get(session)
+            if hist is not None and len(hist):
+                prompt = np.concatenate(
+                    [hist, np.asarray(prompt, np.int32)])
+                followup = True
+        validate_prompt(prompt, self.max_len)
+        need = self._blocks_for(len(prompt), req.max_new_tokens)
         if need > self.num_blocks - 1:
             raise ValueError(
                 f"request needs up to {need} KV blocks but the pool has "
                 f"{self.num_blocks - 1} usable")
+        # all validation passed: commit the concat + session bookkeeping
+        req.prompt = prompt
+        if session is not None:
+            self._session_busy.add(session)
+            self._req_session[id(req)] = session
+            if followup:
+                self._followups.add(id(req))
         self._queue.append(req)
+
+    def session_history(self, session):
+        """Full token history (prompt + generated, every finished turn) of a
+        session, or None for an unknown session."""
+        hist = self._sessions.get(session)
+        return None if hist is None else np.asarray(hist).copy()
+
+    def end_session(self, session):
+        """Forget a session's history. Its cached KV stays in the trie until
+        evicted under pool pressure or clear_prefix_cache()."""
+        if session in self._session_busy:
+            raise ValueError(f"session {session!r} has an in-flight turn")
+        self._sessions.pop(session, None)
 
     def _admit(self):
         """FIFO admission into free slots, gated on UNRESERVED free blocks
@@ -528,88 +759,98 @@ class PagedEngine:
                 break                        # wait for EOS to free blocks
             self._queue.pop(0)
             slot = int(np.argmin(self._live))
+            origins = [self.trie.origin(key) for key, _ in matched]
             for j, (key, blk) in enumerate(matched):
                 self._tables[slot, j] = self.alloc.fork(blk)
-                self._touch(key)
+                self.trie.touch(key)
             if self.prefix_sharing:
                 # counted at admission (not per gate retry), so hit_rate is
                 # per-request: lookups == requests admitted while sharing
                 self.prefix_lookups += 1
                 self.prefix_hits += bool(matched)
+                self.prompt_hits += any(o == "prompt" for o in origins)
+                self.decode_hits += any(o == "decode" for o in origins)
             self.prefill_tokens_total += len(req.prompt)
             self.prefill_tokens_skipped += start
+            # split the skip by matched-block origin (the last matched block
+            # may contribute < block_size when the whole prompt matched and
+            # the final token is re-fed)
+            bs = self.block_size
+            for j, o in enumerate(origins):
+                skipped = max(min(bs, start - j * bs), 0)
+                if o == "decode":
+                    self.decode_tokens_skipped += skipped
+                else:
+                    self.prompt_tokens_skipped += skipped
+            if id(req) in self._followups:
+                self.followup_prefill_tokens += len(req.prompt)
+                self.followup_tokens_skipped += start
             self._slots[slot] = req
             self._live[slot] = True
             self._lengths[slot] = start
             self._prompt_pos[slot] = start
             self._resv[slot] = need
             self._temps[slot] = req.temperature
+            # matched blocks are already indexed: registration resumes past
+            # them, threading the indexed chain tail as the parent
+            self._reg_level[slot] = len(matched)
+            self._reg_parent[slot] = matched[-1][1] if matched else -1
 
     # ------------------------------------------------------------ prefix --
 
-    def _touch(self, key: tuple):
-        self._lru_clock += 1
-        self._lru[key] = self._lru_clock
-
     def _match_prefix(self, prompt) -> list[tuple[tuple, int]]:
-        """Longest contiguous run of full-block prompt chunks present in the
-        prefix index, as [(trie key, block id), ...] from block 0 up. The
-        trie walk threads each hit's block id into the next level's key, so
-        it stops naturally at the first missing level — a deeper entry
-        without its parents is unreachable by construction."""
-        bs = self.block_size
-        matched = []
-        parent, j = -1, 0
-        while (j + 1) * bs <= len(prompt):
-            key = (parent, prefix_chunk(prompt, j, bs))
-            blk = self._prefix_index.get(key)
-            if blk is None:
-                break
-            matched.append((key, blk))
-            parent, j = blk, j + 1
-        return matched
+        """Longest run of full-block chunks of `prompt` cached in the trie
+        (see PrefixTrie.match) — prompt AND decode-origin blocks alike, so a
+        session's follow-up turn matches straight through prior replies."""
+        return self.trie.match(prompt)
 
-    def _register_prefix(self, slot: int, req: Request):
-        """Index every block of this slot now FULLY covered by prompt tokens.
-        The index takes its own reference (fork) so the cached KV survives
-        the request's EOS; on equal content the first writer wins (the walk
-        threads the INDEXED block into the next level's key, so a chain stays
-        rooted in index blocks even when this slot's table holds a COW copy
-        or a duplicate)."""
+    def _register_blocks(self, slot: int, req: Request):
+        """Index every block of this slot now FULLY covered by tokens whose
+        values are known (frontier-crossing insertion). Without decode
+        sharing that is the prompt-covered prefix; with it, the whole
+        written sequence prompt + out_tokens (the KV at positions
+        [0, length) holds exactly those tokens — the newest sampled token is
+        appended to out_tokens only after this runs, and its KV is written
+        next step). Boundary blocks mixing prompt and generated tokens count
+        as "decode": they need decode to exist, so reusing one is a
+        decode-block hit. The per-slot watermark makes this O(1) amortized:
+        only blocks past the already-registered level are hashed and
+        inserted, so the per-step cost is zero except on the step a block
+        fills. The trie takes its own reference (fork) so the cached KV
+        survives the request's EOS; on equal content the first writer wins
+        (the walk threads the INDEXED block into the next level's key, so a
+        chain stays rooted in index blocks even when this slot's table
+        holds a COW copy or a duplicate)."""
         bs = self.block_size
-        parent = -1
-        for j in range(int(self._prompt_pos[slot]) // bs):
-            key = (parent, prefix_chunk(req.prompt, j, bs))
-            blk = self._prefix_index.get(key)
-            if blk is None:
-                blk = int(self._tables[slot, j])
-                self._prefix_index[key] = self.alloc.fork(blk)
-                self._block_key[blk] = key
-                self._children[parent] = self._children.get(parent, 0) + 1
-            self._touch(key)
-            parent = blk
+        plen = len(req.prompt)
+        covered = (int(self._lengths[slot]) if self.decode_sharing
+                   else min(int(self._prompt_pos[slot]), plen))
+        n_levels = covered // bs
+        parent = int(self._reg_parent[slot])
+        for j in range(int(self._reg_level[slot]), n_levels):
+            origin = "prompt" if (j + 1) * bs <= plen else "decode"
+            parent = self.trie.insert(
+                parent, sequence_chunk(req.prompt, req.out_tokens, j, bs),
+                int(self._tables[slot, j]), origin)
+        if n_levels > self._reg_level[slot]:
+            self._reg_level[slot] = n_levels
+            self._reg_parent[slot] = parent
 
     def _evict_one(self, protect=frozenset()) -> bool:
-        """Reclaim the least-recently-used index-only LEAF block (ref == 1:
-        no live slot maps it; no indexed children: evicting an interior node
-        would orphan its whole subtree — unreachable entries squatting on
-        pool blocks). Returns False when nothing is evictable."""
-        for key in sorted(self._lru, key=self._lru.get):
-            blk = self._prefix_index[key]
-            if (blk in protect or self.alloc.ref(blk) != 1
-                    or self._children.get(blk, 0)):
-                continue
-            del self._prefix_index[key]
-            del self._block_key[blk]
-            del self._lru[key]
-            parent = key[0]          # a block id, or -1 for the trie root
-            self._children[parent] -= 1
-            if not self._children[parent]:
-                del self._children[parent]
-            self.alloc.free([blk])
-            self.prefix_evictions += 1
-            return True
-        return False
+        """Reclaim one LRU index-only leaf block (PrefixTrie.evict_one);
+        returns False when nothing is evictable. Live slots' registration
+        watermark PARENTS are always protected: under first-writer-wins a
+        slot's cached parent may be another chain's indexed block that the
+        slot holds no reference to (ref 1, evictable leaf) — evicting it
+        would let the allocator recycle the id while the watermark still
+        threads new children under it, silently corrupting the
+        parent-id-pins-history invariant."""
+        protect = set(protect) | {int(p) for p in
+                                  self._reg_parent[self._live] if p >= 0}
+        if self.trie.evict_one(protect) is None:
+            return False
+        self.prefix_evictions += 1
+        return True
 
     def _alloc_block(self) -> int:
         """Pool alloc with eviction fallback: cached prefixes are a best-
@@ -644,32 +885,50 @@ class PagedEngine:
 
     def clear_prefix_cache(self):
         """Drop every index reference; blocks with no live holder return to
-        the free list immediately."""
-        blocks = list(self._prefix_index.values())
-        self._prefix_index.clear()
-        self._block_key.clear()
-        self._children.clear()
-        self._lru.clear()
-        self.alloc.free(blocks)
+        the free list immediately. Session histories (host-side token lists)
+        survive — a later turn simply re-prefills. Live slots' registration
+        watermarks reset to the root: their cached parents just left the
+        trie, so the next frontier crossing re-registers the whole covered
+        sequence from the slot's own table (the pre-watermark behavior)."""
+        self.trie.clear()
+        self._reg_level[:] = 0
+        self._reg_parent[:] = -1
 
     def prefix_stats(self) -> dict:
         """Cumulative prefix-sharing telemetry. prefill_tokens counts all
         admitted prompt tokens regardless of the sharing setting (it is the
         skip-rate denominator); every other counter stays zero when sharing
-        is disabled. pad_lanes_skipped is the OTHER prefill saving — token
+        is disabled. The hit/skip counters are SPLIT by matched-block
+        origin: prompt_hits / prompt_tokens_skipped count reuse of blocks
+        cached from prompt tokens (system prompts, few-shot headers), while
+        decode_hits / decode_tokens_skipped count reuse of blocks cached at
+        the decode frontier (multi-turn sessions re-matching prior replies)
+        — `hits` stays the per-request union. followup_* restrict the
+        token counters to session follow-up turns (the multi-turn acceptance
+        metric). pad_lanes_skipped is the OTHER prefill saving — token
         lanes the packed step avoided versus the lockstep layout (zero with
         packed=False) — reported here so the two are distinguishable in the
         same printout: prefix sharing skips real prefill FLOPs, packing
         skips padding FLOPs."""
+        cached = self.trie.origin_counts()
         return dict(
             lookups=self.prefix_lookups, hits=self.prefix_hits,
             hit_rate=self.prefix_hits / max(self.prefix_lookups, 1),
+            prompt_hits=self.prompt_hits, decode_hits=self.decode_hits,
             prefill_tokens=self.prefill_tokens_total,
             prefill_tokens_skipped=self.prefill_tokens_skipped,
+            prompt_tokens_skipped=self.prompt_tokens_skipped,
+            decode_tokens_skipped=self.decode_tokens_skipped,
             skip_rate=(self.prefill_tokens_skipped
                        / max(self.prefill_tokens_total, 1)),
+            followup_prefill_tokens=self.followup_prefill_tokens,
+            followup_tokens_skipped=self.followup_tokens_skipped,
+            followup_skip_rate=(self.followup_tokens_skipped
+                                / max(self.followup_prefill_tokens, 1)),
             cow_copies=self.cow_copies, evictions=self.prefix_evictions,
-            cached_blocks=len(self._prefix_index),
+            cached_blocks=len(self.trie),
+            cached_prompt_blocks=cached["prompt"],
+            cached_decode_blocks=cached["decode"],
             pad_lanes_skipped=self.pad_lanes_skipped)
 
     def padding_stats(self) -> dict:
@@ -686,6 +945,15 @@ class PagedEngine:
     def _finish(self, slot: int) -> Request:
         req = self._slots[slot]
         req.done = True
+        session = self._req_session.pop(id(req), None)
+        if session is not None:
+            # the session's next turn prepends this full history (and, with
+            # decode sharing, prefix-matches its cached blocks)
+            self._sessions[session] = np.concatenate(
+                [np.asarray(req.prompt, np.int32),
+                 np.asarray(req.out_tokens, np.int32)])
+            self._session_busy.discard(session)
+        self._followups.discard(id(req))
         row = self._tables[slot]
         # free-at-EOS drops this slot's references; blocks registered in the
         # prefix index keep the index's reference and stay cached
@@ -697,6 +965,8 @@ class PagedEngine:
         self._lengths[slot] = 0
         self._prompt_pos[slot] = 0
         self._temps[slot] = 0.0
+        self._reg_level[slot] = 0
+        self._reg_parent[slot] = -1
         return req
 
     def _grow_tables(self, t_valid: np.ndarray):
@@ -868,11 +1138,13 @@ class PagedEngine:
             self._lengths[slot] += tv
             self._prompt_pos[slot] = min(self._prompt_pos[slot] + tv,
                                          len(req.prompt))
-            if self.prefix_sharing and was_prefill:
+            if self.prefix_sharing and (was_prefill or self.decode_sharing):
                 # registration precedes any possible _finish below, so a
-                # prompt that completes and terminates on the same step still
-                # leaves its full-block prefix KV cached
-                self._register_prefix(slot, req)
+                # prompt that completes (or a block that fills at the decode
+                # frontier) on a terminating step still leaves its full-block
+                # KV cached; with decode sharing this runs every step, so
+                # generated blocks enter the trie the step they fill
+                self._register_blocks(slot, req)
             if not samples[slot]:
                 continue                     # still mid-prompt
             tok = int(nxt[slot])

@@ -48,6 +48,12 @@ def pytest_addoption(parser):
                           "prefix sharing (refcounted COW blocks) enabled; "
                           "only meaningful with --cache-layout paged "
                           "(CI runs paged under both settings)")
+    parser.addoption("--decode-sharing", default="off", choices=("on", "off"),
+                     help="run the engine-level suites with paged DECODE-"
+                          "block sharing (generated blocks enter the prefix "
+                          "trie as they fill; implies prefix sharing); only "
+                          "meaningful with --cache-layout paged (CI runs a "
+                          "decode-sharing leg)")
     parser.addoption("--packed-step", default="off", choices=("on", "off"),
                      help="run the engine-level suites with the paged "
                           "engine's token-centric PACKED step (ragged token "
@@ -96,18 +102,25 @@ def packed_step(request):
 
 
 @pytest.fixture
-def make_engine(cache_layout, prefix_sharing, packed_step):
+def decode_sharing(request):
+    """The --decode-sharing option as a bool (paged engines only)."""
+    return request.config.getoption("--decode-sharing") == "on"
+
+
+@pytest.fixture
+def make_engine(cache_layout, prefix_sharing, decode_sharing, packed_step):
     """Factory building the continuous-batching engine for the selected
     cache layout: ContinuousEngine (slot arena) or PagedEngine (block pool,
-    optionally with --prefix-sharing prompt-prefix reuse and/or the
-    --packed-step token-centric step layout). Both schedule mixed-length
-    traffic step-by-step, so engine-level tests are layout-agnostic through
-    this fixture."""
+    optionally with --prefix-sharing prompt-prefix reuse, --decode-sharing
+    generated-block reuse, and/or the --packed-step token-centric step
+    layout). Both schedule mixed-length traffic step-by-step, so
+    engine-level tests are layout-agnostic through this fixture."""
     def make(params, cfg, **kw):
         if cache_layout == "paged":
             from repro.serve import PagedEngine
             kw.setdefault("block_size", 16)
             kw.setdefault("prefix_sharing", prefix_sharing)
+            kw.setdefault("decode_sharing", decode_sharing)
             kw.setdefault("packed", packed_step)
             return PagedEngine(params, cfg, **kw)
         from repro.serve import ContinuousEngine

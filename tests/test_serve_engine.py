@@ -393,8 +393,205 @@ def test_prefix_sharing_eviction_under_pool_pressure(served, rng):
     assert len(done) == 6 and all(r.done for r in done)
     assert eng.prefix_stats()["evictions"] > 0
     # the index never points at a freed block
-    for blk in eng._prefix_index.values():
+    for blk in eng.trie.blocks():
         assert eng.alloc.ref(blk) >= 1
+
+
+@pytest.mark.parametrize("packed", [False, True])
+@pytest.mark.parametrize("sharing", [False, True])
+def test_multi_turn_session_parity(served, rng, sharing, packed):
+    """Acceptance: session-continued greedy outputs are token-identical to
+    re-feeding the full concatenated history from scratch — with
+    decode-block sharing both OFF and ON, and with the packed step layout
+    both OFF and ON. The reference engine never uses sessions or sharing:
+    each turn it is fed the manually concatenated history (prior prompts +
+    generated replies) as a plain prompt, so any divergence in the session
+    bookkeeping, decode-block trie reuse, or COW path shows up as a token
+    mismatch."""
+    cfg, params = served
+    n_sessions, turns = 2, 3
+    # turn-1 geometry crosses a block boundary DURING decode (25 prompt + 7
+    # written replies = KV frontier 32), so a generated block is cached and
+    # follow-up turns exercise decode-block hits, not just prompt ones
+    msgs = [[rng.integers(0, 256, int(n)).astype(np.int32)
+             for n in (25, 7, 22)] for _ in range(n_sessions)]
+    sess = PagedEngine(params, cfg, max_batch=2, max_len=128, block_size=16,
+                       prefix_sharing=sharing, decode_sharing=sharing,
+                       packed=packed)
+    ref = PagedEngine(params, cfg, max_batch=2, max_len=128, block_size=16,
+                      packed=packed)
+    hist = [np.zeros(0, np.int32)] * n_sessions
+    for turn in range(turns):
+        srun, rrun = [], []
+        for s in range(n_sessions):
+            sreq = Request(uid=s, prompt=msgs[s][turn].copy(),
+                           max_new_tokens=8)
+            sess.submit(sreq, session=f"chat{s}")
+            srun.append(sreq)
+            full = np.concatenate([hist[s], msgs[s][turn]])
+            rreq = Request(uid=s, prompt=full, max_new_tokens=8)
+            ref.submit(rreq)
+            rrun.append(rreq)
+        sess.run()
+        ref.run()
+        for s in range(n_sessions):
+            assert srun[s].out_tokens == rrun[s].out_tokens, (turn, s)
+            hist[s] = np.concatenate(
+                [hist[s], msgs[s][turn],
+                 np.asarray(rrun[s].out_tokens, np.int32)])
+            # the engine's stored history equals the manual concatenation
+            np.testing.assert_array_equal(sess.session_history(f"chat{s}"),
+                                          hist[s])
+    if sharing:
+        s = sess.prefix_stats()
+        # follow-up turns matched prior turns' blocks, generated ones
+        # included, and split counters add up
+        assert s["decode_hits"] > 0 and s["cached_decode_blocks"] > 0
+        assert s["followup_tokens_skipped"] > 0
+        assert (s["prompt_tokens_skipped"] + s["decode_tokens_skipped"]
+                == s["prefill_tokens_skipped"])
+    # sessions ended + cache cleared -> the pool fully drains
+    for s in range(n_sessions):
+        sess.end_session(f"chat{s}")
+    sess.clear_prefix_cache()
+    assert sess.alloc.num_free == sess.num_blocks - 1
+
+
+def test_session_bookkeeping_guards(served, rng):
+    """A session admits one turn at a time, histories are per-session, and
+    end_session forgets the history (the next turn starts fresh)."""
+    cfg, params = served
+    eng = PagedEngine(params, cfg, max_batch=2, max_len=64, block_size=16,
+                      decode_sharing=True)
+    assert eng.prefix_sharing            # decode sharing implies the trie
+    r0 = Request(uid=0, prompt=rng.integers(0, 256, 9).astype(np.int32),
+                 max_new_tokens=4)
+    eng.submit(r0, session="a")
+    with pytest.raises(ValueError):      # turn 2 before turn 1 finished
+        eng.submit(Request(uid=1, prompt=r0.prompt.copy()), session="a")
+    eng.run()
+    assert len(eng.session_history("a")) == len(r0.prompt) + 4
+    assert eng.session_history("missing") is None
+    eng.end_session("a")
+    assert eng.session_history("a") is None
+    # a fresh turn on the forgotten session is NOT a follow-up
+    r1 = Request(uid=2, prompt=rng.integers(0, 256, 9).astype(np.int32),
+                 max_new_tokens=4)
+    eng.submit(r1, session="a")
+    eng.run()
+    assert len(eng.session_history("a")) == len(r1.prompt) + 4
+
+
+def test_decode_block_churn_refcounts_and_drain(served, rng):
+    """Pool hygiene under decode-block churn WITH eviction pressure (the
+    PR-3 drain test extended to generated blocks): multi-turn sessions on a
+    tiny pool force LRU eviction of cached blocks while decode-frontier
+    registration keeps inserting new ones. Stepping the engine manually,
+    every step must satisfy: allocator conservation (free + unique-live
+    partitions the pool), the trie never points at a freed block, and every
+    in-flight writer's table blocks stay referenced (in-flight-writer
+    protection: a registered-while-decoding block has ref >= 2, so eviction
+    can never reclaim it). Afterwards the pool fully drains."""
+    cfg, params = served
+    eng = PagedEngine(params, cfg, max_batch=2, max_len=64, block_size=8,
+                      num_blocks=12, prefix_sharing=True, decode_sharing=True)
+
+    def run_checked(engine):
+        while engine._queue or engine._live.any():
+            engine._admit()
+            engine._step_packed()
+            assert (engine.alloc.num_free + engine.alloc.num_live
+                    == engine.num_blocks - 1)
+            for blk in engine.trie.blocks():
+                assert engine.alloc.ref(blk) >= 1
+            for slot in np.flatnonzero(engine._live):
+                row = engine._tables[slot]
+                for blk in row[row >= 0]:
+                    assert engine.alloc.ref(int(blk)) >= 1
+
+    for i in range(4):                   # 4 sessions x 2 turns, distinct
+        for turn in range(2):
+            eng.submit(Request(
+                uid=10 * i + turn,
+                prompt=rng.integers(0, 256, 21).astype(np.int32),
+                max_new_tokens=8), session=f"s{i}")
+            run_checked(eng)
+    s = eng.prefix_stats()
+    assert s["evictions"] > 0            # the tiny pool did churn
+    assert s["cached_decode_blocks"] > 0 or s["decode_hits"] > 0
+    # all sessions finished: only trie references remain; dropping them
+    # drains the pool completely — no leaked refcounts anywhere
+    eng.clear_prefix_cache()
+    assert eng.alloc.num_free == eng.num_blocks - 1
+    assert eng.alloc.num_live == 0
+    assert (eng._tables == -1).all()
+
+
+def test_watermark_parent_survives_eviction_and_cache_clear(served, rng):
+    """Regression: under first-writer-wins, a live slot's registration
+    watermark can point at ANOTHER chain's indexed block that the slot holds
+    no reference to (its own table carries a duplicate). Once the first
+    writer finishes, that parent is a ref-1 evictable leaf — but evicting it
+    while the follower still decodes would let the allocator recycle the id
+    under the follower's future child inserts. Two identical prompts with
+    different output budgets set up exactly that; eviction must refuse the
+    live watermark parent, and clear_prefix_cache mid-flight must reset the
+    watermark so registration re-walks from the slot's own table."""
+    cfg, params = served
+    prompt = rng.integers(0, 256, 9).astype(np.int32)
+    eng = PagedEngine(params, cfg, max_batch=2, max_len=64, block_size=8,
+                      decode_sharing=True)
+    # admitted together (no prefix hit yet): each prefills its own copy; the
+    # follower's registrations then hit first-writer-wins on the leader's
+    eng.submit(Request(uid=0, prompt=prompt.copy(), max_new_tokens=8))
+    eng.submit(Request(uid=1, prompt=prompt.copy(), max_new_tokens=20))
+    saw_foreign_parent = cleared = False
+    while eng._queue or eng._live.any():
+        eng._admit()
+        eng._step_packed()
+        live = np.flatnonzero(eng._live)
+        if len(live) == 1:                   # leader finished, follower live
+            slot = int(live[0])
+            parent = int(eng._reg_parent[slot])
+            row = eng._tables[slot]
+            if parent >= 0 and parent not in set(map(int, row[row >= 0])):
+                saw_foreign_parent = True
+                while eng._evict_one():      # drain all evictable blocks
+                    pass
+                # the foreign parent is still indexed — not recycled
+                assert parent in set(map(int, eng.trie.blocks()))
+                if not cleared:
+                    # clearing the cache must also reset the watermark...
+                    eng.clear_prefix_cache()
+                    cleared = True
+                    assert int(eng._reg_parent[slot]) == -1
+                    assert int(eng._reg_level[slot]) == 0
+        # ...and every trie entry stays reachable at all times
+        for (par, _), blk in eng.trie._index.items():
+            assert par == -1 or par in eng.trie._block_key
+    assert saw_foreign_parent and cleared
+    eng.clear_prefix_cache()
+    assert eng.alloc.num_free == eng.num_blocks - 1
+
+
+@pytest.mark.slow
+def test_multi_turn_followup_skip_acceptance(served, rng):
+    """Acceptance (slow job): in a chat-style session workload with
+    decode-block sharing on, at least 30% of follow-up-turn prefill tokens
+    are skipped (the benchmark gates tok/s on the same regime)."""
+    cfg, params = served
+    eng = PagedEngine(params, cfg, max_batch=4, max_len=256, block_size=16,
+                      decode_sharing=True)
+    for i in range(3):
+        for turn in range(4):
+            eng.submit(Request(
+                uid=10 * i + turn,
+                prompt=rng.integers(0, 256, 25).astype(np.int32),
+                max_new_tokens=8), session=f"s{i}")
+            eng.run()
+    s = eng.prefix_stats()
+    assert s["followup_skip_rate"] >= 0.30, s
+    assert s["decode_hits"] > 0, s
 
 
 @pytest.mark.parametrize("sharing", [False, True])
