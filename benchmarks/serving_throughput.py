@@ -32,6 +32,13 @@ message. Records tok/s, decode-block hit counts, and follow-up-turn
 skip rates; the on/off tok/s ratio is the acceptance gate for the
 decode-sharing win (>= 1.5x).
 
+An INT8 KV workload (the mixed workload again, fp32 pool vs int8 pool with
+per-block per-kv-head scales at identical geometry) runs paged+packed under
+kv_quant off vs on and records tok/s, pool bytes, the padded-byte ratio
+(acceptance gate: int8 <= 0.35x fp32 — payload shrinks 4x, scales add a
+few KB) and the greedy exact-match rate of the int8 outputs against the
+fp32 outputs (the drift the per-block requant path actually costs).
+
 Cache bytes are reported as cache_bytes_logical AND cache_bytes_padded:
 with the decode kernel active the arena is lane-padded (head_dim -> 128),
 so the raw allocation is up to 4x the logical cache — reporting both keeps
@@ -241,7 +248,8 @@ def _prefix_delta(eng, p0):
     return d
 
 
-def _serve(make_engine, warmup, reqs, warmup_passes: int = 1):
+def _serve(make_engine, warmup, reqs, warmup_passes: int = 1,
+           keep_outputs: bool = False):
     """Warm and time the SAME engine instance: the jitted closures live on
     the instance, so a throwaway warm-up engine would discard its compile
     cache and the timed run would re-trace every shape.
@@ -277,12 +285,17 @@ def _serve(make_engine, warmup, reqs, warmup_passes: int = 1):
     prefix = None
     if p0 is not None:
         prefix = _prefix_delta(eng, p0)
-    return dict(tokens=sum(len(r.out_tokens) for r in done), seconds=dt,
-                **_cache_byte_stats(eng), occupancy=occ,
-                padding_efficiency=pad_eff,
-                pad_lanes_skipped=(getattr(eng, "pad_lanes_skipped", 0) - ps0
-                                   if lt else None),
-                prefix=prefix)
+    row = dict(tokens=sum(len(r.out_tokens) for r in done), seconds=dt,
+               **_cache_byte_stats(eng), occupancy=occ,
+               padding_efficiency=pad_eff,
+               pad_lanes_skipped=(getattr(eng, "pad_lanes_skipped", 0) - ps0
+                                  if lt else None),
+               prefix=prefix)
+    if keep_outputs:
+        # per-request greedy outputs, for cross-engine exact-match rates
+        row["outputs"] = {r.uid: [int(t) for t in r.out_tokens]
+                          for r in done}
+    return row
 
 
 def run(fast: bool = True, engines: list | None = None,
@@ -401,6 +414,48 @@ def run(fast: bool = True, engines: list | None = None,
             mt_out.append(dict(variant="on" if sharing else "off",
                                tok_per_s=tps, **row))
 
+    # int8-quantized paged KV: fp32 pool vs int8 pool + per-block scales at
+    # IDENTICAL geometry on the mixed workload. The byte ratio is the
+    # acceptance gate (int8 padded pool <= 0.35x fp32: payload is a quarter,
+    # scales add 2*L*N*Hkv floats); exact_match records how many greedy
+    # tokens the requant drift actually flips vs the fp32 engine.
+    kvq_out = []
+    if engines is None or any(e.startswith("paged") for e in names):
+        qreqs = _workload(np.random.default_rng(17), n)
+        qwarm = _workload(np.random.default_rng(17), n)
+        print("\n# kv int8 (paged+packed, mixed workload): kv_quant, tokens, "
+              "s, tok/s, kv_MB(logical/padded), bytes_vs_fp32, exact_match")
+        fp_row = fp_outputs = None
+        for quant in ("none", "int8"):
+            qcfg = cfg.replace(kv_quant=quant)
+            row = _serve(
+                lambda: PagedEngine(params, qcfg, block_size=BLOCK_SIZE,
+                                    max_batch=MAX_BATCH, max_len=MAX_LEN,
+                                    packed=True),
+                qwarm, qreqs, keep_outputs=True)
+            outputs = row.pop("outputs")
+            tps = row["tokens"] / row["seconds"]
+            if quant == "none":
+                fp_row, fp_outputs = row, outputs
+                ratio, match = 1.0, 1.0
+            else:
+                ratio = (row["cache_bytes_padded"]
+                         / fp_row["cache_bytes_padded"])
+                same = total = 0
+                for uid, toks in fp_outputs.items():
+                    q = outputs[uid]
+                    total += max(len(toks), len(q))
+                    same += sum(a == b for a, b in zip(toks, q))
+                match = same / max(total, 1)
+                assert ratio <= 0.35, f"int8 pool ratio {ratio:.3f} > 0.35"
+            print("kv_int8,%s,%d,%.2f,%.1f,%.2f/%.2f,%.3fx,%.3f" % (
+                quant, row["tokens"], row["seconds"], tps,
+                row["cache_bytes_logical"] / 2**20,
+                row["cache_bytes_padded"] / 2**20, ratio, match))
+            kvq_out.append(dict(kv_quant=quant, tok_per_s=tps,
+                                kv_bytes_vs_fp32=ratio,
+                                greedy_exact_match=match, **row))
+
     if json_path:
         with open(json_path, "w") as f:
             json.dump(dict(benchmark="serving_throughput",
@@ -411,7 +466,7 @@ def run(fast: bool = True, engines: list | None = None,
                            multi_turn_turns=MT_TURNS, engines=out,
                            prefill_heavy=packed_out,
                            prefix_sharing=prefix_out,
-                           multi_turn=mt_out),
+                           multi_turn=mt_out, kv_int8=kvq_out),
                       f, indent=2)
         print(f"# wrote {json_path}")
     return out

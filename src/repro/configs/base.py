@@ -91,6 +91,17 @@ class ModelConfig:
     # KV of prior turns' replies instead of re-prefilling them. Implies the
     # prefix-sharing machinery (the engine enables it automatically).
     decode_sharing: bool = False
+    # KV-cache element dtype for every engine and bare init_cache/prefill
+    # caller — single-sourced here so the slot arenas, the paged pool, and
+    # direct model.prefill callers can never silently disagree on KV bytes.
+    cache_dtype: str = "float32"     # float32 | bfloat16 | float16
+    # paged-pool KV quantization (BAPS-style): "int8" stores the K/V pools as
+    # int8 with per-block, per-kv-head symmetric scales; rows are folded in
+    # position order with a grow-only running amax + device-side requant, so
+    # a block's bytes are a pure function of (tokens, positions) — scheduling
+    # layout, prefix sharing, and session re-feeds stay bit-identical. Only
+    # meaningful with cache_layout == "paged"; slot-arena engines reject it.
+    kv_quant: str = "none"           # none | int8
 
     def __post_init__(self):
         if self.num_heads and not self.head_dim:
@@ -106,6 +117,13 @@ class ModelConfig:
         if bs < 8 or (bs & (bs - 1)):
             raise ValueError(
                 f"block_size must be a power of two >= 8, got {bs}")
+        if self.cache_dtype not in ("float32", "bfloat16", "float16"):
+            raise ValueError(
+                f"cache_dtype must be 'float32' | 'bfloat16' | 'float16', "
+                f"got {self.cache_dtype!r}")
+        if self.kv_quant not in ("none", "int8"):
+            raise ValueError(
+                f"kv_quant must be 'none' | 'int8', got {self.kv_quant!r}")
 
     @property
     def padded_vocab(self) -> int:

@@ -64,12 +64,17 @@ _NEG_BIG = -(2 ** 30)
 
 def _decode_tile(scale_ref, theta_ref, q_ref, k_ref, v_ref, o_ref,
                  m_scr, z_scr, acc_scr, *, kv, nk, col0, block_live,
-                 group: int, mode: str, static_max: bool, sm_denom: float):
+                 group: int, mode: str, static_max: bool, sm_denom: float,
+                 k_scale=None, v_scale=None):
     """One (phase, KV-tile) step of the single-query HCCS sweep, shared by the
     dense slot-arena kernel and the paged block-table kernel. The callers
     differ only in how the current tile was located (contiguous offset vs
     block-table gather) — `nk` is the slot frontier, `col0` the tile's first
-    *logical* KV position, `block_live` whether the tile holds any live KV."""
+    *logical* KV position, `block_live` whether the tile holds any live KV.
+    `k_scale`/`v_scale` (kv_quant="int8" pools only) are this tile's
+    per-(block, kv-head) dequant scalars: the int8 K/V tiles are dequantized
+    elementwise right after the load — the identical values the XLA gather
+    path produces, so kernel/XLA bit-parity survives quantization."""
     ph = pl.program_id(1)                     # phase (always 0 if static_max)
     ki = pl.program_id(2)                     # KV tile
     last_ph = 0 if static_max else 1
@@ -95,6 +100,8 @@ def _decode_tile(scale_ref, theta_ref, q_ref, k_ref, v_ref, o_ref,
     def quantized_logits():
         q = q_ref[0].astype(jnp.float32)                       # (g, d)
         k = k_ref[0, 0].astype(jnp.float32)                    # (bk, d)
+        if k_scale is not None:
+            k = k * k_scale                    # int8 block pool -> float
         logits = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                      preferred_element_type=jnp.float32)
         # divide (not multiply-by-reciprocal): the XLA STE paths divide by
@@ -124,6 +131,8 @@ def _decode_tile(scale_ref, theta_ref, q_ref, k_ref, v_ref, o_ref,
         s = jnp.where(valid, s, 0).astype(jnp.float32)
         z_scr[:, 0:1] += jnp.sum(s, axis=-1, keepdims=True)
         v = v_ref[0, 0].astype(jnp.float32)                    # (bk, d)
+        if v_scale is not None:
+            v = v * v_scale                    # int8 block pool -> float
         acc_scr[...] += jax.lax.dot_general(
             s, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
 
@@ -151,10 +160,11 @@ def _decode_kernel(scale_ref, theta_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
                  sm_denom=sm_denom)
 
 
-def _paged_kernel(tbl_ref, len_ref, scale_ref, theta_ref, q_ref, k_ref, v_ref,
-                  o_ref, m_scr, z_scr, acc_scr, *, num_kv: int, group: int,
-                  block_size: int, block_k: int, mode: str, static_max: bool,
-                  sm_denom: float):
+def _paged_kernel(tbl_ref, len_ref, scale_ref, theta_ref, ks_ref, vs_ref,
+                  q_ref, k_ref, v_ref, o_ref, m_scr, z_scr, acc_scr, *,
+                  num_kv: int, group: int, block_size: int, block_k: int,
+                  mode: str, static_max: bool, sm_denom: float,
+                  quantized: bool):
     i = pl.program_id(0)                      # slot * num_kv + kv head
     ki = pl.program_id(2)                     # sub-tile of a table entry
     slot = i // num_kv
@@ -164,6 +174,12 @@ def _paged_kernel(tbl_ref, len_ref, scale_ref, theta_ref, q_ref, k_ref, v_ref,
     entry = tbl_ref[slot, ti]                 # pool block id, -1 = dead
     nk = len_ref[slot]
     col0 = ti * block_size + jax.lax.rem(ki, per) * block_k
+    k_s = v_s = None
+    if quantized:
+        # per-(block, kv-head) dequant scalars for this tile; dead entries
+        # clamp to block 0 — the tile is never read (block_live is False)
+        e = jnp.maximum(entry, 0)
+        k_s, v_s = ks_ref[e, kv], vs_ref[e, kv]
     # dead-block skip: a sentinel table entry is the paged analogue of the
     # dense kernel's past-the-frontier block (same pl.when skip path); the
     # frontier check also covers trailing sub-tiles of a partially-filled
@@ -172,13 +188,14 @@ def _paged_kernel(tbl_ref, len_ref, scale_ref, theta_ref, q_ref, k_ref, v_ref,
                  m_scr, z_scr, acc_scr, kv=kv, nk=nk, col0=col0,
                  block_live=(entry >= 0) & (col0 < nk),
                  group=group, mode=mode, static_max=static_max,
-                 sm_denom=sm_denom)
+                 sm_denom=sm_denom, k_scale=k_s, v_scale=v_s)
 
 
-def _packed_kernel(sid_ref, tbl_ref, len_ref, scale_ref, theta_ref, q_ref,
-                   k_ref, v_ref, o_ref, m_scr, z_scr, acc_scr, *, num_kv: int,
-                   group: int, block_size: int, block_k: int, mode: str,
-                   static_max: bool, sm_denom: float):
+def _packed_kernel(sid_ref, tbl_ref, len_ref, scale_ref, theta_ref, ks_ref,
+                   vs_ref, q_ref, k_ref, v_ref, o_ref, m_scr, z_scr, acc_scr,
+                   *, num_kv: int, group: int, block_size: int, block_k: int,
+                   mode: str, static_max: bool, sm_denom: float,
+                   quantized: bool):
     i = pl.program_id(0)                      # token * num_kv + kv head
     ki = pl.program_id(2)                     # sub-tile of a table entry
     tok = i // num_kv
@@ -189,13 +206,17 @@ def _packed_kernel(sid_ref, tbl_ref, len_ref, scale_ref, theta_ref, q_ref,
     entry = tbl_ref[jnp.maximum(slot, 0), ti]
     nk = len_ref[tok]                         # per-TOKEN causal frontier
     col0 = ti * block_size + jax.lax.rem(ki, per) * block_k
+    k_s = v_s = None
+    if quantized:
+        e = jnp.maximum(entry, 0)
+        k_s, v_s = ks_ref[e, kv], vs_ref[e, kv]
     # a pad lane (slot < 0) is a whole-row dead block: every tile skipped,
     # the epilogue still writes zeros (acc/z are zeroed unconditionally)
     _decode_tile(scale_ref, theta_ref, q_ref, k_ref, v_ref, o_ref,
                  m_scr, z_scr, acc_scr, kv=kv, nk=nk, col0=col0,
                  block_live=(slot >= 0) & (entry >= 0) & (col0 < nk),
                  group=group, mode=mode, static_max=static_max,
-                 sm_denom=sm_denom)
+                 sm_denom=sm_denom, k_scale=k_s, v_scale=v_s)
 
 
 def _lane_pad_q(q, hkv: int, d_pad: int):
@@ -296,8 +317,9 @@ def hccs_paged_decode(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                       block_table: jax.Array, lengths: jax.Array,
                       scale: jax.Array, theta: jax.Array, *,
                       mode: str = "wide", static_max: bool = False,
-                      block_k: int = 128,
-                      interpret: bool = True) -> jax.Array:
+                      block_k: int = 128, interpret: bool = True,
+                      k_scales: jax.Array | None = None,
+                      v_scales: jax.Array | None = None) -> jax.Array:
     """Single-query HCCS attention against a PAGED KV pool (serve/paged.py).
 
     Where `hccs_decode` reads slot `b`'s KV from a contiguous (Tmax, d) ring,
@@ -311,6 +333,9 @@ def hccs_paged_decode(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     int32 pool block ids, -1 = unallocated (sentinel rows are skipped with the
     same pl.when path as the dense kernel's dead blocks); lengths: (B,) valid
     logical-KV counts; scale: (H,) f32; theta: (H, 3) int32.
+    With kv_quant="int8" pools, `k_scales`/`v_scales` (N, Hkv) f32 carry the
+    per-block, per-kv-head dequant scales (scalar-prefetched alongside the
+    table); each KV tile is dequantized in-register after the load.
     Returns (B, H, d) in q.dtype. Rows with lengths == 0 return zeros.
     """
     b, h, d = q.shape
@@ -327,6 +352,9 @@ def hccs_paged_decode(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     nblk = block_table.shape[1]
     num_phases = 1 if static_max else 2
     grid = (b * hkv, num_phases, nblk * per)
+    quantized = k_scales is not None
+    if not quantized:                         # placeholder prefetch operands:
+        k_scales = v_scales = jnp.zeros((1, 1), jnp.float32)  # never read
 
     def kv_spec():
         # the block-table gather: sentinel entries are clamped to pool block
@@ -334,32 +362,36 @@ def hccs_paged_decode(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
         # tile (block_live is False), so the clamp is semantically inert
         return pl.BlockSpec(
             (1, 1, bk, d_pad),
-            lambda i, ph, ki, tbl, ln, sc, th, KV=hkv, PER=per: (
+            lambda i, ph, ki, tbl, ln, sc, th, ks, vs, KV=hkv, PER=per: (
                 jnp.maximum(tbl[i // KV, ki // PER], 0),
                 jax.lax.rem(i, KV), jax.lax.rem(ki, PER), 0))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=4,                # table, lengths, scale, theta
+        num_scalar_prefetch=6,      # table, lengths, scale, theta, ks, vs
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, g, d_pad),
-                         lambda i, ph, ki, tbl, ln, sc, th: (i, 0, 0)),
+                         lambda i, ph, ki, tbl, ln, sc, th, ks, vs:
+                         (i, 0, 0)),
             kv_spec(),
             kv_spec(),
         ],
         out_specs=pl.BlockSpec((1, g, d_pad),
-                               lambda i, ph, ki, tbl, ln, sc, th: (i, 0, 0)),
+                               lambda i, ph, ki, tbl, ln, sc, th, ks, vs:
+                               (i, 0, 0)),
         scratch_shapes=_decode_scratch(g, d_pad),
     )
     out = pl.pallas_call(
         functools.partial(_paged_kernel, num_kv=hkv, group=g, block_size=bs,
                           block_k=bk, mode=mode, static_max=static_max,
-                          sm_denom=sm_denom),
+                          sm_denom=sm_denom, quantized=quantized),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b * hkv, g, d_pad), q.dtype),
         interpret=interpret,
     )(block_table.astype(jnp.int32), lengths.astype(jnp.int32),
-      scale.astype(jnp.float32), theta.astype(jnp.int32), qp, kp, vp)
+      scale.astype(jnp.float32), theta.astype(jnp.int32),
+      k_scales.astype(jnp.float32), v_scales.astype(jnp.float32),
+      qp, kp, vp)
     return out[:, :, :d].reshape(b, h, d)
 
 
@@ -370,7 +402,9 @@ def hccs_packed_prefill(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                         lengths: jax.Array, scale: jax.Array,
                         theta: jax.Array, *, mode: str = "wide",
                         static_max: bool = False, block_k: int = 128,
-                        interpret: bool = True) -> jax.Array:
+                        interpret: bool = True,
+                        k_scales: jax.Array | None = None,
+                        v_scales: jax.Array | None = None) -> jax.Array:
     """Token-centric HCCS attention over a PAGED pool: one query per TOKEN.
 
     The packed chunked-prefill step (serve/paged.py packed mode) flattens a
@@ -386,7 +420,9 @@ def hccs_packed_prefill(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     block_table: (B, nblk) int32 pool ids, -1 = unallocated; slot_ids: (T,)
     int32 owning slot per token, -1 = pad lane (returns zeros); lengths: (T,)
     per-token valid-KV counts *including* the token's own K/V; scale: (H,)
-    f32; theta: (H, 3) int32. Returns (T, H, d) in q.dtype.
+    f32; theta: (H, 3) int32. `k_scales`/`v_scales` (N, Hkv) f32: per-block
+    dequant scales for kv_quant="int8" pools (see hccs_paged_decode).
+    Returns (T, H, d) in q.dtype.
     """
     t, h, d = q.shape
     n, hkv, bs, dp = k_pool.shape
@@ -402,6 +438,9 @@ def hccs_packed_prefill(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     nblk = block_table.shape[1]
     num_phases = 1 if static_max else 2
     grid = (t * hkv, num_phases, nblk * per)
+    quantized = k_scales is not None
+    if not quantized:                         # placeholder prefetch operands:
+        k_scales = v_scales = jnp.zeros((1, 1), jnp.float32)  # never read
 
     def kv_spec():
         # the slot-indirect block-table gather: pad lanes clamp to slot 0 and
@@ -409,33 +448,35 @@ def hccs_packed_prefill(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
         # kernel body never reads those tiles (block_live is False)
         return pl.BlockSpec(
             (1, 1, bk, d_pad),
-            lambda i, ph, ki, sid, tbl, ln, sc, th, KV=hkv, PER=per: (
+            lambda i, ph, ki, sid, tbl, ln, sc, th, ks, vs, KV=hkv, PER=per: (
                 jnp.maximum(
                     tbl[jnp.maximum(sid[i // KV], 0), ki // PER], 0),
                 jax.lax.rem(i, KV), jax.lax.rem(ki, PER), 0))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=5,               # sid, table, lengths, scale, theta
+        num_scalar_prefetch=7,     # sid, table, lengths, scale, theta, ks, vs
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, g, d_pad),
-                         lambda i, ph, ki, sid, tbl, ln, sc, th: (i, 0, 0)),
+                         lambda i, ph, ki, sid, tbl, ln, sc, th, ks, vs:
+                         (i, 0, 0)),
             kv_spec(),
             kv_spec(),
         ],
         out_specs=pl.BlockSpec((1, g, d_pad),
-                               lambda i, ph, ki, sid, tbl, ln, sc, th:
+                               lambda i, ph, ki, sid, tbl, ln, sc, th, ks, vs:
                                (i, 0, 0)),
         scratch_shapes=_decode_scratch(g, d_pad),
     )
     out = pl.pallas_call(
         functools.partial(_packed_kernel, num_kv=hkv, group=g, block_size=bs,
                           block_k=bk, mode=mode, static_max=static_max,
-                          sm_denom=sm_denom),
+                          sm_denom=sm_denom, quantized=quantized),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((t * hkv, g, d_pad), q.dtype),
         interpret=interpret,
     )(slot_ids.astype(jnp.int32), block_table.astype(jnp.int32),
       lengths.astype(jnp.int32), scale.astype(jnp.float32),
-      theta.astype(jnp.int32), qp, kp, vp)
+      theta.astype(jnp.int32), k_scales.astype(jnp.float32),
+      v_scales.astype(jnp.float32), qp, kp, vp)
     return out[:, :, :d].reshape(t, h, d)

@@ -50,19 +50,24 @@ def hccs_decode(q, k, v, lengths, scale, theta, mode: str = "wide",
 
 def hccs_paged_decode(q, k_pool, v_pool, block_table, lengths, scale, theta,
                       mode: str = "wide", static_max: bool = False,
-                      block_k: int = 128) -> jax.Array:
-    """Block-table-gather single-query HCCS decode (see kernels/decode.py)."""
+                      block_k: int = 128, k_scales=None,
+                      v_scales=None) -> jax.Array:
+    """Block-table-gather single-query HCCS decode (see kernels/decode.py).
+    k_scales/v_scales (N, Hkv) f32 dequantize int8 (kv_quant) pools in-tile."""
     return _hccs_paged_decode(q, k_pool, v_pool, block_table, lengths, scale,
                               theta, mode=mode, static_max=static_max,
-                              block_k=block_k, interpret=_interp())
+                              block_k=block_k, k_scales=k_scales,
+                              v_scales=v_scales, interpret=_interp())
 
 
 def hccs_packed_prefill(q, k_pool, v_pool, block_table, slot_ids, lengths,
                         scale, theta, mode: str = "wide",
-                        static_max: bool = False,
-                        block_k: int = 128) -> jax.Array:
-    """Token-centric packed-step HCCS attention (see kernels/decode.py)."""
+                        static_max: bool = False, block_k: int = 128,
+                        k_scales=None, v_scales=None) -> jax.Array:
+    """Token-centric packed-step HCCS attention (see kernels/decode.py).
+    k_scales/v_scales (N, Hkv) f32 dequantize int8 (kv_quant) pools in-tile."""
     return _hccs_packed_prefill(q, k_pool, v_pool, block_table, slot_ids,
                                 lengths, scale, theta, mode=mode,
                                 static_max=static_max, block_k=block_k,
+                                k_scales=k_scales, v_scales=v_scales,
                                 interpret=_interp())

@@ -93,8 +93,9 @@ def hccs_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
 def hccs_paged_decode_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                           block_table: jax.Array, lengths: jax.Array,
                           scale: jax.Array, theta: jax.Array,
-                          mode: str = "wide",
-                          static_max: bool = False) -> jax.Array:
+                          mode: str = "wide", static_max: bool = False,
+                          k_scales: jax.Array | None = None,
+                          v_scales: jax.Array | None = None) -> jax.Array:
     """Oracle for the paged (block-table gather) HCCS decode kernel.
 
     k_pool/v_pool: (N, Hkv, block_size, d) global block pools;
@@ -102,13 +103,19 @@ def hccs_paged_decode_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     entries (only entries at or beyond a slot's length frontier may be -1 —
     the allocator invariant). Gathers each slot's blocks into a contiguous
     view and defers to hccs_decode_ref; sentinel entries gather pool block 0
-    and are masked by `lengths`.
+    and are masked by `lengths`. `k_scales`/`v_scales` (N, Hkv) f32 dequantize
+    int8 (kv_quant) pools per block/kv-head before the gather — elementwise,
+    matching the kernel's in-register tile dequant exactly.
     """
     b = q.shape[0]
     n, hkv, bs, d = k_pool.shape
     tbl = jnp.maximum(block_table, 0)
     kg = k_pool[tbl]                            # (B, nblk, Hkv, bs, d)
     vg = v_pool[tbl]
+    if k_scales is not None:
+        kg = kg.astype(jnp.float32) * k_scales[tbl][..., None, None]
+    if v_scales is not None:
+        vg = vg.astype(jnp.float32) * v_scales[tbl][..., None, None]
     kg = kg.transpose(0, 2, 1, 3, 4).reshape(b, hkv, -1, d)
     vg = vg.transpose(0, 2, 1, 3, 4).reshape(b, hkv, -1, d)
     return hccs_decode_ref(q, kg, vg, lengths, scale, theta, mode=mode,
@@ -119,8 +126,9 @@ def hccs_packed_prefill_ref(q: jax.Array, k_pool: jax.Array,
                             v_pool: jax.Array, block_table: jax.Array,
                             slot_ids: jax.Array, lengths: jax.Array,
                             scale: jax.Array, theta: jax.Array,
-                            mode: str = "wide",
-                            static_max: bool = False) -> jax.Array:
+                            mode: str = "wide", static_max: bool = False,
+                            k_scales: jax.Array | None = None,
+                            v_scales: jax.Array | None = None) -> jax.Array:
     """Oracle for the token-centric packed prefill kernel.
 
     q: (T, H, d) one query per packed token; slot_ids: (T,) owning slot per
@@ -132,7 +140,8 @@ def hccs_packed_prefill_ref(q: jax.Array, k_pool: jax.Array,
     tbl = block_table[jnp.maximum(slot_ids, 0)]          # (T, nblk)
     lens = jnp.where(slot_ids >= 0, lengths, 0)          # pad lanes: zeros
     return hccs_paged_decode_ref(q, k_pool, v_pool, tbl, lens, scale, theta,
-                                 mode=mode, static_max=static_max)
+                                 mode=mode, static_max=static_max,
+                                 k_scales=k_scales, v_scales=v_scales)
 
 
 def hccs_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,

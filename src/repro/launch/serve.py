@@ -54,6 +54,10 @@ def main():
                          "are tokens, zero padded decode-riding lanes); "
                          "'lockstep' keeps the (B, block_size)/(B, 1) "
                          "baseline shapes")
+    ap.add_argument("--kv-quant", default="none", choices=["none", "int8"],
+                    help="store paged KV blocks as int8 with per-block "
+                         "per-kv-head scales (quantize at write, dequantize "
+                         "in-kernel at read; paged scheduler only)")
     ap.add_argument("--token-budget", type=int, default=0,
                     help="packed-step token lanes per chunk step "
                          "(0 = max_batch * block_size, one lockstep chunk "
@@ -72,6 +76,9 @@ def main():
                                       or args.token_budget):
         raise SystemExit("--step-layout/--token-budget configure the paged "
                          "engine's packed token step; use --scheduler paged")
+    if args.kv_quant != "none" and args.scheduler != "paged":
+        raise SystemExit("--kv-quant quantizes the paged block pool; use "
+                         "--scheduler paged")
 
     import jax
     import numpy as np
@@ -95,7 +102,8 @@ def main():
     if args.scheduler == "paged":
         cfg = cfg.replace(cache_layout="paged",
                           prefix_sharing=args.prefix_sharing,
-                          decode_sharing=args.decode_sharing)
+                          decode_sharing=args.decode_sharing,
+                          kv_quant=args.kv_quant)
         eng = PagedEngine(params, cfg, max_batch=args.max_batch,
                           max_len=max_len,
                           block_size=args.block_size or None,

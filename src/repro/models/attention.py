@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from repro.core.hccs import HCCSParams, hccs_mode_inv, hccs_qat
 from repro.models.layers import apply_mrope, apply_rope
 from repro.parallel.sharding import constrain
+from repro.quant.int8 import round_to_int
 
 NEG_INF = -1e30
 
@@ -129,12 +130,15 @@ def _slot_scatter(cache_kv, new_kv, lengths):
 
 
 # transient per-step keys the paged engine attaches to the cache; they steer
-# the step and are not part of the carried cache state. The last four only
-# ride on packed token steps: `slot_ids` selects the token-centric branch,
-# `q_pos_grid`/`grid_pos`/`kv_len_slot` steer the XLA path's per-slot
-# attention grid (see _packed_attention)
+# the step and are not part of the carried cache state. `slot_ids`,
+# `q_pos_grid`, `grid_pos` and `kv_len_slot` only ride on packed token
+# steps: `slot_ids` selects the token-centric branch, the other three steer
+# the XLA path's per-slot attention grid (see _packed_attention).
+# `fresh_blocks` only rides on kv_quant="int8" steps: block ids allocated
+# since the last step, whose stale per-block scales must be reset to zero
+# before this step's quantized writes (padded with the trash block 0).
 _PAGED_TRANSIENT = ("block_table", "write_pos", "kv_len", "slot_ids",
-                    "q_pos_grid", "grid_pos", "kv_len_slot")
+                    "q_pos_grid", "grid_pos", "kv_len_slot", "fresh_blocks")
 
 
 def _paged_scatter(pool, new_kv, write_pos):
@@ -152,15 +156,81 @@ def _paged_scatter(pool, new_kv, write_pos):
         upd.astype(pool.dtype))
 
 
-def _paged_gather(pool, block_table, hd):
+# amax floor shared with quant.int8.per_channel_scale: a block whose rows
+# are all (near-)zero still gets a positive scale, so the requant ratio and
+# the dequant multiply never divide by zero
+KV_QUANT_EPS = 1e-6
+# scale rule uses an explicit f32 reciprocal MULTIPLY, not amax / 127: XLA
+# compiles constant divisions to reciprocal multiplies anyway (1 ULP apart
+# from true division), so writing the multiply makes the arithmetic identical
+# eager/jit/numpy-model — the fold's bit-exactness contract depends on it
+KV_QUANT_INV_QMAX = jnp.float32(1.0 / 127.0)
+
+
+def paged_quant_scatter(pool, scales, new_kv, write_pos):
+    """Quantizing write into an int8 paged pool with per-block scales.
+
+    pool: (N, Hkv, block_size, hd_c) int8; scales: (N, Hkv) float32 — one
+    symmetric scale per (block, kv-head); new_kv: (B, Hkv, t, hd) float;
+    write_pos: (B, t) flat positions exactly as in _paged_scatter.
+
+    Rows are folded IN POSITION ORDER, one at a time (lax.fori_loop):
+
+        s_new   = max(s_old, max(amax(row), eps) / 127)    # grow-only amax
+        payload = requant(payload, s_old -> s_new)         # device-side
+        payload[row] = quantize(row, s_new)
+
+    The per-ROW fold (rather than quantizing a step's rows against the
+    step-final scale in one shot) is what keeps a block's bytes a pure
+    function of the row values and their order: lockstep and packed steps
+    partition the same rows into different step boundaries, but the fold
+    they apply is the identical composition either way — so packed/lockstep,
+    prefix-/decode-sharing and session re-feed parity all stay bit-exact
+    under quantization. The requant multiply is the identity when the scale
+    did not grow (ratio == 1.0 exactly), and zeroes stale bytes on a freshly
+    allocated block (scale reset to 0 by the engine => ratio == 0.0).
+    Quantization rounds half-away-from-zero (quant/int8.py's documented
+    hardware mode). Returns (pool, scales)."""
+    n, hkv, bs, hd_c = pool.shape
+    pos = write_pos.reshape(-1)
+    upd = new_kv.transpose(0, 2, 1, 3).reshape(-1, hkv, new_kv.shape[-1])
+    upd = upd.astype(jnp.float32)
+    hd = upd.shape[-1]
+
+    def write_row(i, carry):
+        pool, scales = carry
+        blk, row = pos[i] // bs, pos[i] % bs
+        x = upd[i]                                         # (Hkv, hd)
+        s_old = scales[blk]                                # (Hkv,)
+        amax = jnp.abs(x).max(-1)
+        s_new = jnp.maximum(s_old, jnp.maximum(amax, KV_QUANT_EPS)
+                            * KV_QUANT_INV_QMAX)
+        ratio = s_old / s_new                              # s_new >= eps/127
+        payload = pool[blk].astype(jnp.float32) * ratio[:, None, None]
+        payload = jnp.clip(round_to_int(payload), -128, 127)
+        q = jnp.clip(round_to_int(x / s_new[:, None]), -128, 127)
+        payload = payload.at[:, row, :hd].set(q)
+        return (pool.at[blk].set(payload.astype(pool.dtype)),
+                scales.at[blk].set(s_new))
+
+    return jax.lax.fori_loop(0, pos.shape[0], write_row, (pool, scales))
+
+
+def _paged_gather(pool, block_table, hd, scales=None):
     """Contiguous (B, Hkv, nblk*block_size, hd) view of each slot's blocks —
     the XLA attention path over a paged cache (the Pallas kernel instead
     gathers block-by-block in its BlockSpec index_map, see kernels/decode.py).
     Sentinel (-1) entries gather the trash block; they only occur at or past
-    the slot's frontier, so the kv_len mask hides them."""
+    the slot's frontier, so the kv_len mask hides them. With `scales`
+    (N, Hkv; kv_quant="int8") the int8 payload is dequantized per block
+    elementwise BEFORE attention — the same values the fused kernel's tile
+    dequant produces, keeping XLA/kernel bit-parity."""
     b, nblk = block_table.shape
     n, hkv, bs, hd_c = pool.shape
-    g = pool[jnp.maximum(block_table, 0)]          # (B, nblk, Hkv, bs, hd_c)
+    tbl = jnp.maximum(block_table, 0)
+    g = pool[tbl]                                  # (B, nblk, Hkv, bs, hd_c)
+    if scales is not None:
+        g = g.astype(jnp.float32) * scales[tbl][..., None, None]
     return g.transpose(0, 2, 1, 3, 4).reshape(b, hkv, nblk * bs, hd_c)[..., :hd]
 
 
@@ -356,7 +426,8 @@ def _segment_max(q, k, valid, cfg, hccs):
     return jnp.where(valid, logits, -1e9).max(-1)
 
 
-def _packed_attention(q, k_pool, v_pool, cache, cfg, hccs, hd):
+def _packed_attention(q, k_pool, v_pool, cache, cfg, hccs, hd,
+                      k_scales=None, v_scales=None):
     """Token-centric attention for the packed paged step.
 
     q: (1, H, T, hd) — the T lanes are ragged tokens from different slots;
@@ -393,7 +464,8 @@ def _packed_attention(q, k_pool, v_pool, cache, cfg, hccs, hd):
         o = hccs_packed_prefill(qt.astype(jnp.float32), k_pool, v_pool,
                                 cache["block_table"], sid, cache["kv_len"],
                                 hccs["scale"], theta, mode=cfg.hccs_mode,
-                                static_max=(cfg.decode_kernel == "static_max"))
+                                static_max=(cfg.decode_kernel == "static_max"),
+                                k_scales=k_scales, v_scales=v_scales)
         return o.astype(q.dtype).reshape(1, t, h * hd)
     q_pos_grid = cache["q_pos_grid"]                      # (B, Wb)
     gp = cache["grid_pos"]                                # (T,) spill = B*Wb
@@ -401,8 +473,9 @@ def _packed_attention(q, k_pool, v_pool, cache, cfg, hccs, hd):
     bs_, wb = q_pos_grid.shape
     qg = jnp.zeros((bs_ * wb + 1, h, qt.shape[-1]), qt.dtype).at[gp].set(qt)
     qg = qg[:bs_ * wb].reshape(bs_, wb, h, -1).transpose(0, 2, 1, 3)
-    kg = _paged_gather(k_pool, cache["block_table"], hd)  # (B, Hkv, L, hd)
-    vg = _paged_gather(v_pool, cache["block_table"], hd)
+    kg = _paged_gather(k_pool, cache["block_table"], hd,
+                       scales=k_scales)                   # (B, Hkv, L, hd)
+    vg = _paged_gather(v_pool, cache["block_table"], hd, scales=v_scales)
     tk = kg.shape[2]
     use_blockwise = (cfg.attention_impl == "blockwise" or
                      (cfg.attention_impl == "auto" and wb > 1 and
@@ -504,11 +577,30 @@ def apply_attention(p, x, cfg, hccs=None, positions=None, cache=None,
         # paged arena: K/V live in a global block pool addressed through
         # per-slot block tables; the write targets (incl. trash routing for
         # tokens past each slot's valid count) were resolved on the host
-        kc = _paged_scatter(cache["k"], k, cache["write_pos"])
-        vc = _paged_scatter(cache["v"], v, cache["write_pos"])
+        quant = "k_scale" in cache
+        if quant:
+            # kv_quant="int8": reset scales of blocks allocated since the
+            # last step (their pool bytes and scales are stale from a prior
+            # owner), then run the quantizing per-row fold. COW copies are
+            # NOT in fresh_blocks — they arrive with payload+scales copied.
+            ks, vs = cache["k_scale"], cache["v_scale"]
+            fresh = cache.get("fresh_blocks")
+            if fresh is not None:
+                ks = ks.at[fresh].set(0.0)
+                vs = vs.at[fresh].set(0.0)
+            kc, ks = paged_quant_scatter(cache["k"], ks, k,
+                                         cache["write_pos"])
+            vc, vs = paged_quant_scatter(cache["v"], vs, v,
+                                         cache["write_pos"])
+        else:
+            ks = vs = None
+            kc = _paged_scatter(cache["k"], k, cache["write_pos"])
+            vc = _paged_scatter(cache["v"], v, cache["write_pos"])
         new_cache = {kk: vv for kk, vv in cache.items()
                      if kk not in _PAGED_TRANSIENT}
         new_cache.update(k=kc, v=vc, length=cache["length"] + t)
+        if quant:
+            new_cache.update(k_scale=ks, v_scale=vs)
         # per-slot valid-KV counts for this step (length + per-slot t_valid;
         # chunked prefill makes t_valid ragged, so `length + t` is wrong here)
         k_len = cache["kv_len"]
@@ -518,7 +610,8 @@ def apply_attention(p, x, cfg, hccs=None, positions=None, cache=None,
             # position positions[0, i], with causal frontier kv_len[i] —
             # rows are tokens, so a ragged mixed prefill/decode batch runs
             # with zero padded query lanes (see serve/paged.py packed mode)
-            out = _packed_attention(q, kc, vc, cache, cfg, hccs, hd)
+            out = _packed_attention(q, kc, vc, cache, cfg, hccs, hd,
+                                    k_scales=ks, v_scales=vs)
             return _project_out(out, p, b, t), new_cache
         if (t == 1 and cfg.decode_kernel != "none"
                 and not decode_kernel_blockers(cfg) and hccs is not None):
@@ -528,11 +621,12 @@ def apply_attention(p, x, cfg, hccs=None, positions=None, cache=None,
             o = hccs_paged_decode(q[:, :, 0, :].astype(jnp.float32), kc, vc,
                                   cache["block_table"], k_len, hccs["scale"],
                                   theta, mode=cfg.hccs_mode,
-                                  static_max=(cfg.decode_kernel == "static_max"))
+                                  static_max=(cfg.decode_kernel == "static_max"),
+                                  k_scales=ks, v_scales=vs)
             out = o.astype(q.dtype).reshape(b, 1, h * hd)
             return _project_out(out, p, b, 1), new_cache
-        k = _paged_gather(kc, cache["block_table"], hd)
-        v = _paged_gather(vc, cache["block_table"], hd)
+        k = _paged_gather(kc, cache["block_table"], hd, scales=ks)
+        v = _paged_gather(vc, cache["block_table"], hd, scales=vs)
     elif cache is not None:
         if per_slot:
             # continuous batching: every slot writes at its own frontier

@@ -39,13 +39,18 @@ def init_block(rng, cfg):
     return p
 
 
-def init_layer_cache(cfg, batch, max_len, cache_dtype=jnp.bfloat16):
+def init_layer_cache(cfg, batch, max_len, cache_dtype=None):
     """Zero cache for ONE layer (the model stacks L of these).
+
+    cache_dtype=None resolves to cfg.cache_dtype (the single-sourced default
+    shared with every engine — see model.init_cache).
 
     When the fused decode kernel is active, K/V are allocated lane-padded
     (head_dim -> 128-lane tile, seq rounded to the kernel block) so the
     kernel's zero-copy pass-through branch runs every decode step instead of
     a per-step full-cache pad-and-copy (see attention.kv_store_geometry)."""
+    if cache_dtype is None:
+        cache_dtype = jnp.dtype(cfg.cache_dtype)
     c: dict = {}
     if cfg.family in ("dense", "moe", "audio", "vlm", "hybrid"):
         hkv = cfg.num_kv_heads

@@ -104,7 +104,8 @@ def forward(weights, hccs, batch, cfg, cache=None, decode: bool = False):
         paged_extras = {kk: cache[kk]
                         for kk in ("block_table", "write_pos", "kv_len",
                                    "slot_ids", "q_pos_grid", "grid_pos",
-                                   "kv_len_slot") if kk in cache}
+                                   "kv_len_slot", "fresh_blocks")
+                        if kk in cache}
 
     hccs = jax.tree.map(jax.lax.stop_gradient, hccs)  # theta frozen (paper QAT)
     call = _block_caller(cfg, decode)
@@ -187,11 +188,17 @@ def cls_loss(weights, hccs, batch, cfg):
     return loss, {"cls_loss": loss, "acc": acc, "aux_loss": aux}
 
 
-def init_cache(cfg, batch_size: int, max_len: int, cache_dtype=jnp.bfloat16,
+def init_cache(cfg, batch_size: int, max_len: int, cache_dtype=None,
                per_slot_lengths: bool = False):
     """per_slot_lengths=True makes `length` a (batch,) vector — the slot-arena
     layout for continuous batching, where every slot decodes at its own
-    frontier (attention then masks/writes per slot)."""
+    frontier (attention then masks/writes per slot).
+
+    cache_dtype=None (the default) resolves to cfg.cache_dtype — the single
+    source every engine and bare prefill caller shares, so KV dtype/bytes can
+    never silently disagree between a direct init_cache call and an engine."""
+    if cache_dtype is None:
+        cache_dtype = jnp.dtype(cfg.cache_dtype)
     one = blocks.init_layer_cache(cfg, batch_size, max_len, cache_dtype)
     layers = jax.tree.map(
         lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape), one)
@@ -207,9 +214,9 @@ def init_cache(cfg, batch_size: int, max_len: int, cache_dtype=jnp.bfloat16,
     return c
 
 
-def prefill(weights, hccs, batch, cfg, max_len: int, cache_dtype=jnp.bfloat16):
+def prefill(weights, hccs, batch, cfg, max_len: int, cache_dtype=None):
     """Run the prompt through the model, filling the cache. Returns
-    (last-token logits, cache)."""
+    (last-token logits, cache). cache_dtype=None -> cfg.cache_dtype."""
     b, t = (batch["tokens"].shape if "tokens" in batch
             else batch["embeddings"].shape[:2])
     cache = init_cache(cfg, b, max_len, cache_dtype)

@@ -4,6 +4,18 @@ Symmetric per-tensor / per-channel quantizers with STE, plus the activation
 observer used to pick per-head logit scales before HCCS calibration.
 (The HCCS-specific pieces live in core/qat.py; this module is the generic
 substrate shared by weight quantization in the examples.)
+
+Rounding mode — an explicit, documented choice. The paper's int8 MAC
+datapath rounds half-AWAY-from-zero (the cheap adder-based rounder:
+`trunc(x + sign(x) * 0.5)`), while `jnp.round` implements IEEE
+round-half-to-EVEN. The two disagree exactly on ties (±0.5, ±1.5, ...), so
+a quantizer that silently uses `jnp.round` produces bytes the hardware
+would not. Every quantizer here takes `rounding=` with the hardware mode
+("half_away") as the default; "nearest_even" remains available for
+bit-matching XLA/accelerator reference paths. The paged int8 KV-cache write
+path (models/attention.py) uses the same default so serving bytes match
+QAT semantics. Tie behavior is pinned by a regression test
+(tests/test_kv_quant.py::TestRoundingMode).
 """
 from __future__ import annotations
 
@@ -11,19 +23,40 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+ROUNDING_MODES = ("half_away", "nearest_even")
 
-def quantize(x: jax.Array, scale: jax.Array) -> jax.Array:
+
+def round_to_int(x: jax.Array, rounding: str = "half_away") -> jax.Array:
+    """Round float to integer-valued float under an explicit tie rule.
+
+    half_away    — ties away from zero (0.5 -> 1, -0.5 -> -1): the paper's
+                   int8 MAC rounder.
+    nearest_even — IEEE banker's rounding (jnp.round): ties to the even
+                   neighbor (0.5 -> 0, 1.5 -> 2).
+    """
+    if rounding == "half_away":
+        return jnp.sign(x) * jnp.floor(jnp.abs(x) + 0.5)
+    if rounding == "nearest_even":
+        return jnp.round(x)
+    raise ValueError(
+        f"rounding must be one of {ROUNDING_MODES}, got {rounding!r}")
+
+
+def quantize(x: jax.Array, scale: jax.Array,
+             rounding: str = "half_away") -> jax.Array:
     """Real int8 quantization (no STE): returns int8 values."""
-    return jnp.clip(jnp.round(x / scale), -128, 127).astype(jnp.int8)
+    return jnp.clip(round_to_int(x / scale, rounding),
+                    -128, 127).astype(jnp.int8)
 
 
 def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
     return q.astype(jnp.float32) * scale
 
 
-def fake_quant(x: jax.Array, scale: jax.Array) -> jax.Array:
+def fake_quant(x: jax.Array, scale: jax.Array,
+               rounding: str = "half_away") -> jax.Array:
     """STE fake-quant: float in, float out, int8 grid forward."""
-    q = jnp.clip(jnp.round(x / scale), -128.0, 127.0)
+    q = jnp.clip(round_to_int(x / scale, rounding), -128.0, 127.0)
     y = q * scale
     return x + jax.lax.stop_gradient(y - x)
 

@@ -51,12 +51,18 @@ from repro.serve.engine import (Request, sample_tokens, validate_prompt,
 class ContinuousEngine:
     def __init__(self, params, cfg, *, max_batch: int = 8,
                  max_len: int = 512, eos_id: int | None = None,
-                 cache_dtype=jnp.float32, min_bucket: int = 16):
+                 cache_dtype=None, min_bucket: int = 16):
         if cfg.hot_buffer != 0:
             raise ValueError(
                 "continuous batching uses the slot arena, not hot buffers "
                 f"(cfg.hot_buffer={cfg.hot_buffer}); use the wave engine or "
                 "set hot_buffer=0")
+        if cfg.kv_quant != "none":
+            raise ValueError(
+                f"kv_quant={cfg.kv_quant!r} quantizes the paged block pool; "
+                "the slot arena is fp-only (use cache_layout='paged')")
+        if cache_dtype is None:
+            cache_dtype = jnp.dtype(cfg.cache_dtype)
         self.w = params["weights"]
         self.hccs = params["hccs"]
         self.cfg = cfg

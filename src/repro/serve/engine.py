@@ -46,9 +46,10 @@ def warn_decode_kernel_fallback(cfg):
 
 def kv_cache_bytes(cache) -> int:
     """Persistently-allocated KV bytes of an engine cache (the slot arena or
-    the paged block pool): k/v leaves only, excluding SSM state."""
+    the paged block pool): k/v payload leaves plus per-block scale arrays
+    (kv_quant="int8" pools), excluding SSM state."""
     total = 0
-    for name in ("k", "v", "hot_k", "hot_v"):
+    for name in ("k", "v", "hot_k", "hot_v", "k_scale", "v_scale"):
         leaf = cache["layers"].get(name)
         if leaf is not None:
             total += leaf.size * leaf.dtype.itemsize
@@ -65,7 +66,14 @@ def kv_cache_byte_stats(cache, cfg, max_len: int | None = None) -> dict:
     logical cache. `logical` counts only the true head_dim lanes and (for
     slot arenas, when max_len is given) the first max_len rows; `padded` is
     the real allocation. Benchmarks report both so kernel and non-kernel
-    rows stay comparable."""
+    rows stay comparable.
+
+    The payload math is dtype-driven (leaf.dtype.itemsize), so int8 paged
+    pools (cfg.kv_quant="int8") report 1-byte rows under the SAME
+    lane-padding rules as fp pools; their per-block scale arrays (k_scale/
+    v_scale, (L, N, Hkv) f32 — metadata with no lane padding) are counted in
+    full on both sides, so the occupancy telemetry reflects the true
+    quantized footprint rather than pretending scales are free."""
     padded = kv_cache_bytes(cache)
     logical = 0
     for name in ("k", "v", "hot_k", "hot_v"):
@@ -79,6 +87,10 @@ def kv_cache_byte_stats(cache, cfg, max_len: int | None = None) -> dict:
             # rows axis is block_size, which kv_store_geometry never pads
         logical += (leaf.size // (rows_c * hd_c) * rows
                     * min(hd_c, cfg.head_dim) * leaf.dtype.itemsize)
+    for name in ("k_scale", "v_scale"):      # quantization metadata: logical
+        leaf = cache["layers"].get(name)     # == padded (never lane-padded)
+        if leaf is not None:
+            logical += leaf.size * leaf.dtype.itemsize
     return dict(cache_bytes_logical=logical, cache_bytes_padded=padded)
 
 
@@ -117,7 +129,13 @@ def sample_tokens(key, logits, temps: np.ndarray):
 class ServeEngine:
     def __init__(self, params, cfg, *, max_batch: int = 8,
                  max_len: int = 512, eos_id: int | None = None,
-                 cache_dtype=jnp.float32):
+                 cache_dtype=None):
+        if cfg.kv_quant != "none":
+            raise ValueError(
+                f"kv_quant={cfg.kv_quant!r} quantizes the paged block pool; "
+                "the wave engine's slot arena is fp-only (use PagedEngine)")
+        if cache_dtype is None:
+            cache_dtype = jnp.dtype(cfg.cache_dtype)
         self.w = params["weights"]
         self.hccs = params["hccs"]
         self.cfg = cfg

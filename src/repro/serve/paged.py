@@ -19,6 +19,25 @@ returns a block to the free list when its last reference drops:
     └───────────────────────────────┘                 (blk 3, chunk 1) ─▶ 7
     pool k/v: (num_blocks, Hkv, block_size, hd); logical position p of slot b
     lives at pool block table[b, p // block_size], row p % block_size.
+    With cfg.kv_quant="int8" the pools are int8 and each layer adds
+    k_scale/v_scale (num_blocks, Hkv) f32 — one symmetric per-(block,
+    kv-head) dequant scale alongside the payload:
+
+    │ blk 3  ████  int8 payload    │   k_scale[3] = [s_h0, s_h1, ...]
+    │               row = q*scale  │   v_scale[3] = [s_h0, s_h1, ...]
+
+    Writes run a per-row FOLD (models/attention.py paged_quant_scatter):
+    each landing row grows the block scale monotonically to cover its amax
+    and requantizes the existing payload by the old/new ratio, so the block
+    bytes are a pure function of (row values, write order) — independent of
+    how steps partition the rows. That is what keeps packed vs lockstep,
+    sharing on/off, and session re-feeds BIT-IDENTICAL under quantization;
+    only int8-vs-fp drift needs a tolerance gate (tests/test_kv_quant.py).
+    COW copies carry payload AND scales (same bytes, same dequant); trie
+    registration needs no extra freeze step — shared blocks are immutable
+    because writers only ever touch refcount-1 blocks, which pins payload
+    and scale together. Freed-then-reallocated blocks are listed as FRESH
+    for one step so their stale scales reset to zero before the fold.
     Above: slots 0 and 1 share the 2-block prompt prefix in blks 3 and 7
     (ref 3 = two slots + the index); slot 1 needed to write into the last
     shared block, so it was copied first (blk 1 -> blk 5, COW) — a holder
@@ -450,33 +469,59 @@ def packed_write_positions(t_valid, off, tables, lengths, block_size: int,
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _copy_block_kv(layers, src, dst):
     """Copy-on-write: duplicate pool block `src` into `dst` across all layers
-    for both k and v. One traced shape per pool geometry (src/dst are traced
-    scalars); donation lets XLA rewrite the pool in place."""
-    k, v = layers["k"], layers["v"]
-    return dict(layers, k=k.at[:, dst].set(k[:, src]),
-                v=v.at[:, dst].set(v[:, src]))
+    for both k and v — and, on kv_quant="int8" pools, the per-block scales
+    (a COW copy must reproduce the block bit-for-bit: same int8 payload,
+    same dequant scale). One traced shape per pool geometry (src/dst are
+    traced scalars); donation lets XLA rewrite the pool in place."""
+    out = dict(layers)
+    for name in ("k", "v", "k_scale", "v_scale"):
+        leaf = layers.get(name)
+        if leaf is not None:
+            out[name] = leaf.at[:, dst].set(leaf[:, src])
+    return out
 
 
 def init_paged_cache(cfg, num_blocks: int, block_size: int, max_batch: int,
-                     cache_dtype=jnp.float32):
+                     cache_dtype=None):
     """Model cache in the paged layout: per-layer (N, Hkv, bs, hd) pools plus
     the (B,) per-slot length frontier. head_dim is lane-padded exactly when
     the dense arena would be (kv_store_geometry), so the paged/dense byte
     comparison is apples-to-apples and the paged kernel's zero-copy branch
-    runs whenever the dense kernel's would."""
+    runs whenever the dense kernel's would.
+
+    cache_dtype=None resolves to cfg.cache_dtype (the single-sourced default
+    shared with init_cache and every engine). With cfg.kv_quant="int8" the
+    pools are int8 regardless of cache_dtype and each layer additionally
+    carries `k_scale`/`v_scale` (num_blocks, Hkv) float32 — one symmetric
+    dequant scale per (block, kv-head), zero meaning "never written":
+
+        k/v:        (L, N, Hkv, bs, hd_c)  int8 payload
+        k_scale/v_scale: (L, N, Hkv)       f32, row value = q * scale
+
+    Scales are state, not steering: they ride the carried cache through the
+    step (attention's per-row fold grows them monotonically as rows land)
+    and are COW-copied with their block's payload (_copy_block_kv)."""
+    if cache_dtype is None:
+        cache_dtype = jnp.dtype(cfg.cache_dtype)
     hkv = cfg.num_kv_heads
     hd_c = kv_store_geometry(cfg, block_size)[0]
     L = cfg.num_layers
     shape = (L, num_blocks, hkv, block_size, hd_c)
-    return {"layers": {"k": jnp.zeros(shape, cache_dtype),
-                       "v": jnp.zeros(shape, cache_dtype)},
+    quant = cfg.kv_quant == "int8"
+    pool_dtype = jnp.int8 if quant else cache_dtype
+    layers = {"k": jnp.zeros(shape, pool_dtype),
+              "v": jnp.zeros(shape, pool_dtype)}
+    if quant:
+        layers["k_scale"] = jnp.zeros((L, num_blocks, hkv), jnp.float32)
+        layers["v_scale"] = jnp.zeros((L, num_blocks, hkv), jnp.float32)
+    return {"layers": layers,
             "length": jnp.zeros((max_batch,), jnp.int32)}
 
 
 class PagedEngine:
     def __init__(self, params, cfg, *, max_batch: int = 8,
                  max_len: int = 512, eos_id: int | None = None,
-                 cache_dtype=jnp.float32, block_size: int | None = None,
+                 cache_dtype=None, block_size: int | None = None,
                  num_blocks: int | None = None,
                  prefix_sharing: bool | None = None,
                  decode_sharing: bool | None = None,
@@ -491,6 +536,8 @@ class PagedEngine:
                 f"paged KV needs attention-only blocks; {cfg.family} carries "
                 "per-slot SSM state that a block pool cannot page")
         warn_decode_kernel_fallback(cfg)
+        if cache_dtype is None:
+            cache_dtype = jnp.dtype(cfg.cache_dtype)
         self.w = params["weights"]
         self.hccs = params["hccs"]
         self.cfg = cfg
@@ -498,6 +545,9 @@ class PagedEngine:
         self.max_len = max_len
         self.eos_id = eos_id
         self.cache_dtype = cache_dtype
+        # kv_quant="int8": pools are int8 with per-block scales; the engine's
+        # only extra duty is the fresh-block list (see _take_fresh)
+        self.quantized = cfg.kv_quant == "int8"
         bs = int(block_size if block_size is not None else cfg.block_size)
         # same contract ModelConfig.block_size enforces: a power of two >= 8
         # tiles any kernel block_k <= 128 evenly (constructor args like the
@@ -542,6 +592,20 @@ class PagedEngine:
                 f"token_budget {budget} cannot schedule every live slot "
                 f"(max_batch {max_batch})")
         self.token_budget = budget
+        # kv_quant fresh-block list: blocks allocated by _grow_tables since
+        # the last step. A freed-then-reallocated block still holds the prior
+        # owner's per-block scale; the step must reset it to zero BEFORE the
+        # quantizing fold runs, or the stale scale would fold into the new
+        # owner's rows. COW destinations are deliberately NOT fresh — they
+        # arrive with payload AND scales copied (_copy_block_kv), and zeroing
+        # them would destroy the copied rows' dequant factor. The list rides
+        # into the step as a static-size int32 array padded with the trash
+        # block (re-zeroing trash's scale every step is harmless — its rows
+        # are never read unmasked). Cap: a step writing <= budget tokens over
+        # <= max_batch slots crosses at most budget/bs + 2*max_batch new
+        # blocks (ceil + boundary straddle per slot).
+        self._fresh: list[int] = []
+        self._fresh_cap = budget // bs + 2 * max_batch
         # chunk-width ladder: a packed step runs at the smallest traced width
         # that covers its work, so prompt-tail and rider-dominated steps
         # don't pad all the way to the budget. At most 4 traced shapes —
@@ -971,7 +1035,10 @@ class PagedEngine:
 
     def _grow_tables(self, t_valid: np.ndarray):
         """Alloc-on-frontier-crossing: extend each slot's table to cover
-        lengths + t_valid before the step writes there."""
+        lengths + t_valid before the step writes there. With kv_quant, every
+        block allocated here is recorded as FRESH: its pool scale may be
+        stale from a freed prior owner and is reset to zero inside the next
+        step, before the quantizing fold writes into it."""
         for slot in np.flatnonzero(t_valid > 0):
             needed = -(-int(self._lengths[slot] + t_valid[slot])
                        // self.block_size)
@@ -979,7 +1046,21 @@ class PagedEngine:
             held = int((row >= 0).sum())
             for j in range(held, needed):
                 row[j] = self._alloc_block()
+                if self.quantized:
+                    self._fresh.append(int(row[j]))
                 self._resv[slot] = max(self._resv[slot] - 1, 0)
+
+    def _take_fresh(self) -> np.ndarray:
+        """Drain the fresh-block list into the static-size step array (padded
+        with the trash block, whose scale is safely re-zeroed every step)."""
+        if len(self._fresh) > self._fresh_cap:
+            raise AssertionError(
+                f"fresh-block list {len(self._fresh)} exceeds static cap "
+                f"{self._fresh_cap} — the per-step allocation bound is wrong")
+        out = np.full(self._fresh_cap, TRASH_BLOCK, np.int32)
+        out[:len(self._fresh)] = self._fresh
+        self._fresh.clear()
+        return out
 
     def _write_positions(self, t_valid: np.ndarray, width: int) -> np.ndarray:
         """Flat pool scatter targets (B, width): token i of slot b lands at
@@ -1029,6 +1110,8 @@ class PagedEngine:
                   "write_pos": jnp.asarray(self._write_positions(t_valid,
                                                                  width)),
                   "kv_len": jnp.asarray(self._lengths + t_valid)}
+        if self.quantized:
+            extras["fresh_blocks"] = jnp.asarray(self._take_fresh())
         logits, self._cache = self._step_fn(self.w, self.hccs,
                                             jnp.asarray(toks), cache, extras,
                                             jnp.asarray(t_valid))
@@ -1095,6 +1178,8 @@ class PagedEngine:
                   "write_pos": jnp.asarray(wp[None]),
                   "kv_len": jnp.asarray(kv_len),
                   "slot_ids": jnp.asarray(sid)}
+        if self.quantized:
+            extras["fresh_blocks"] = jnp.asarray(self._take_fresh())
         if self._use_grid:
             # XLA attention-grid steering: cell (slot, i) of the (B, Wb)
             # grid is the slot's i-th token this step; grid_pos maps packed

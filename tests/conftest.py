@@ -60,6 +60,11 @@ def pytest_addoption(parser):
                           "batches) instead of the lockstep "
                           "(B, block_size)/(B, 1) layout; only meaningful "
                           "with --cache-layout paged (CI runs a packed leg)")
+    parser.addoption("--kv-quant", default="none", choices=("none", "int8"),
+                     help="run the engine-level suites with int8-quantized "
+                          "paged KV blocks (per-block per-kv-head scales); "
+                          "only meaningful with --cache-layout paged "
+                          "(CI runs packed + lockstep int8 legs)")
 
 
 def pytest_collection_modifyitems(config, items):
@@ -108,16 +113,28 @@ def decode_sharing(request):
 
 
 @pytest.fixture
-def make_engine(cache_layout, prefix_sharing, decode_sharing, packed_step):
+def kv_quant(request):
+    """The --kv-quant option: paged KV pool quantization (none | int8)."""
+    return request.config.getoption("--kv-quant")
+
+
+@pytest.fixture
+def make_engine(cache_layout, prefix_sharing, decode_sharing, packed_step,
+                kv_quant):
     """Factory building the continuous-batching engine for the selected
     cache layout: ContinuousEngine (slot arena) or PagedEngine (block pool,
     optionally with --prefix-sharing prompt-prefix reuse, --decode-sharing
-    generated-block reuse, and/or the --packed-step token-centric step
-    layout). Both schedule mixed-length traffic step-by-step, so
-    engine-level tests are layout-agnostic through this fixture."""
+    generated-block reuse, the --packed-step token-centric step layout,
+    and/or --kv-quant int8 block quantization). Both schedule mixed-length
+    traffic step-by-step, so engine-level tests are layout-agnostic through
+    this fixture. kv_quant rides on cfg (the single source the engine and
+    cache init read), so it only applies to the paged layout — the slot
+    arena is fp-only and its engines reject a quantized cfg."""
     def make(params, cfg, **kw):
         if cache_layout == "paged":
             from repro.serve import PagedEngine
+            if kv_quant != "none" and cfg.kv_quant != kv_quant:
+                cfg = cfg.replace(kv_quant=kv_quant)
             kw.setdefault("block_size", 16)
             kw.setdefault("prefix_sharing", prefix_sharing)
             kw.setdefault("decode_sharing", decode_sharing)
