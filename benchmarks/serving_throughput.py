@@ -39,6 +39,15 @@ kv_quant off vs on and records tok/s, pool bytes, the padded-byte ratio
 few KB) and the greedy exact-match rate of the int8 outputs against the
 fp32 outputs (the drift the per-block requant path actually costs).
 
+A LATENCY-SLO workload (open-loop): seeded Poisson arrivals at
+--arrival-rate req/s drive the paged engine (packed steps, prefix sharing
+on) through the step-at-a-time API via telemetry.drive_open_loop — arrivals
+never wait for the system, so admission queueing lands in TTFT. Records
+TTFT/TPOT/E2E/queue-wait p50/p95/p99, queue-depth peak/mean, and the
+step-phase coverage, as the `latency_slo` section of BENCH_serving.json;
+benchmarks/check_regression.py gates fresh runs against those committed
+numbers.
+
 Cache bytes are reported as cache_bytes_logical AND cache_bytes_padded:
 with the decode kernel active the arena is lane-padded (head_dim -> 128),
 so the raw allocation is up to 4x the logical cache — reporting both keeps
@@ -65,7 +74,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import model as M
 from repro.serve import (ContinuousEngine, PagedEngine, Request, ServeEngine,
-                         kv_cache_byte_stats)
+                         Telemetry, drive_open_loop, kv_cache_byte_stats)
 
 VOCAB = 512
 MAX_BATCH = 8
@@ -143,17 +152,17 @@ def _multi_turn_traffic(rng):
 
 def _serve_turns(eng, traffic, tag):
     """Drive one round of every session per turn through the session API
-    (all sessions' turn-k requests batch together); returns generated
-    tokens."""
-    tokens = 0
+    (all sessions' turn-k requests batch together); returns the finished
+    requests."""
+    done = []
     for turn in range(MT_TURNS):
         for s, msgs in enumerate(traffic):
             eng.submit(Request(uid=turn * len(traffic) + s,
                                prompt=msgs[turn].copy(),
                                max_new_tokens=MT_REPLY),
                        session=f"{tag}{s}")
-        tokens += sum(len(r.out_tokens) for r in eng.run())
-    return tokens
+        done.extend(eng.run())
+    return done
 
 
 def _serve_multi_turn(make_engine, warm_traffic, traffic, passes: int = 3):
@@ -174,15 +183,10 @@ def _serve_multi_turn(make_engine, warm_traffic, traffic, passes: int = 3):
     for p in range(passes):
         if eng.prefix_sharing:
             eng.clear_prefix_cache()
-        p0 = eng.prefix_stats() if eng.prefix_sharing else None
-        t0 = time.perf_counter()
-        tokens = _serve_turns(eng, traffic, f"chat{p}-")
-        dt = time.perf_counter() - t0
+        row, _ = _timed(eng, lambda: _serve_turns(eng, traffic, f"chat{p}-"))
         for s in range(MT_SESSIONS):
             eng.end_session(f"chat{p}-{s}")
-        row = dict(tokens=tokens, seconds=dt,
-                   prefix=None if p0 is None else _prefix_delta(eng, p0))
-        if best is None or dt < best["seconds"]:
+        if best is None or row["seconds"] < best["seconds"]:
             best = row
     return best
 
@@ -248,6 +252,40 @@ def _prefix_delta(eng, p0):
     return d
 
 
+def _timed(eng, serve_fn):
+    """Time ONE serving segment on an already-warm engine and report the
+    row schema every workload section shares: counter DELTAS past the
+    warm-up (mean occupancy, padding efficiency, prefix-sharing rates —
+    the engine counters are cumulative), tokens/seconds, cache bytes, and
+    the engine's unified telemetry snapshot (latency/phases are None unless
+    the engine was built with telemetry on). serve_fn drives the engine and
+    returns the finished requests; returns (row, finished)."""
+    s0 = getattr(eng, "occupancy_sum", 0.0)
+    n0 = getattr(eng, "occupancy_steps", 0)
+    lv0 = getattr(eng, "lanes_valid", 0)
+    lt0 = getattr(eng, "lanes_total", 0)
+    ps0 = getattr(eng, "pad_lanes_skipped", 0)
+    p0 = eng.prefix_stats() if getattr(eng, "prefix_sharing", False) else None
+    t0 = time.perf_counter()
+    done = serve_fn()
+    dt = time.perf_counter() - t0
+    # mean live fraction over the TIMED steps only (delta past the warm-up)
+    n = getattr(eng, "occupancy_steps", 0) - n0
+    occ = (getattr(eng, "occupancy_sum", 0.0) - s0) / n if n else None
+    # per-step padding efficiency (valid token-lanes / padded token-lanes)
+    # over the timed steps; None for engines without lane telemetry
+    lt = getattr(eng, "lanes_total", 0) - lt0
+    pad_eff = ((getattr(eng, "lanes_valid", 0) - lv0) / lt) if lt else None
+    row = dict(tokens=sum(len(r.out_tokens) for r in done), seconds=dt,
+               **_cache_byte_stats(eng), occupancy=occ,
+               padding_efficiency=pad_eff,
+               pad_lanes_skipped=(getattr(eng, "pad_lanes_skipped", 0) - ps0
+                                  if lt else None),
+               prefix=None if p0 is None else _prefix_delta(eng, p0),
+               snapshot=eng.snapshot())
+    return row, done
+
+
 def _serve(make_engine, warmup, reqs, warmup_passes: int = 1,
            keep_outputs: bool = False):
     """Warm and time the SAME engine instance: the jitted closures live on
@@ -263,34 +301,10 @@ def _serve(make_engine, warmup, reqs, warmup_passes: int = 1,
         for r in copy.deepcopy(warmup):
             eng.submit(r)
         eng.run()
-    s0 = getattr(eng, "occupancy_sum", 0.0)
-    n0 = getattr(eng, "occupancy_steps", 0)
-    lv0 = getattr(eng, "lanes_valid", 0)
-    lt0 = getattr(eng, "lanes_total", 0)
-    ps0 = getattr(eng, "pad_lanes_skipped", 0)
-    p0 = eng.prefix_stats() if getattr(eng, "prefix_sharing", False) else None
     work = copy.deepcopy(reqs)
     for r in work:
         eng.submit(r)
-    t0 = time.perf_counter()
-    done = eng.run()
-    dt = time.perf_counter() - t0
-    # mean live fraction over the TIMED steps only (delta past the warm-up)
-    n = getattr(eng, "occupancy_steps", 0) - n0
-    occ = (getattr(eng, "occupancy_sum", 0.0) - s0) / n if n else None
-    # per-step padding efficiency (valid token-lanes / padded token-lanes)
-    # over the timed steps; None for engines without lane telemetry
-    lt = getattr(eng, "lanes_total", 0) - lt0
-    pad_eff = ((getattr(eng, "lanes_valid", 0) - lv0) / lt) if lt else None
-    prefix = None
-    if p0 is not None:
-        prefix = _prefix_delta(eng, p0)
-    row = dict(tokens=sum(len(r.out_tokens) for r in done), seconds=dt,
-               **_cache_byte_stats(eng), occupancy=occ,
-               padding_efficiency=pad_eff,
-               pad_lanes_skipped=(getattr(eng, "pad_lanes_skipped", 0) - ps0
-                                  if lt else None),
-               prefix=prefix)
+    row, done = _timed(eng, eng.run)
     if keep_outputs:
         # per-request greedy outputs, for cross-engine exact-match rates
         row["outputs"] = {r.uid: [int(t) for t in r.out_tokens]
@@ -299,7 +313,7 @@ def _serve(make_engine, warmup, reqs, warmup_passes: int = 1,
 
 
 def run(fast: bool = True, engines: list | None = None,
-        json_path: str = DEFAULT_JSON):
+        json_path: str = DEFAULT_JSON, arrival_rate: float = 8.0):
     cfg = _cfg()
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
@@ -456,6 +470,50 @@ def run(fast: bool = True, engines: list | None = None,
                                 kv_bytes_vs_fp32=ratio,
                                 greedy_exact_match=match, **row))
 
+    # open-loop latency SLO: seeded Poisson arrivals drive the paged engine
+    # (packed steps, prefix sharing on) through the step-at-a-time API.
+    # Arrivals do NOT wait for the system, so admission queueing lands in
+    # TTFT — the percentiles here measure what the batch-drain throughput
+    # rows structurally cannot: latency under load.
+    slo_out = None
+    if engines is None or any(e.startswith("paged") for e in names):
+        tel = Telemetry(enabled=True)
+        sreqs = _prefix_workload(np.random.default_rng(23), n)
+        swarm = _prefix_workload(np.random.default_rng(23), n)
+        eng = PagedEngine(params, cfg, block_size=BLOCK_SIZE,
+                          max_batch=MAX_BATCH, max_len=MAX_LEN,
+                          prefix_sharing=True, packed=True, telemetry=tel)
+        # two warm-up drains: cold-prefix-cache then all-hit chunk shapes
+        # (same reasoning as the prefix-sharing section's warmup_passes=2)
+        for _ in range(2):
+            for r in copy.deepcopy(swarm):
+                eng.submit(r)
+            eng.run()
+        tel.reset()
+        arrivals = np.cumsum(np.random.default_rng(29).exponential(
+            1.0 / arrival_rate, n))
+        row, done = _timed(
+            eng, lambda: drive_open_loop(eng, copy.deepcopy(sreqs),
+                                         arrivals))
+        snap = row["snapshot"]
+        lat, phases = snap["latency"], snap["phases"]
+        tps = row["tokens"] / row["seconds"]
+        slo_out = dict(arrival_rate=arrival_rate, requests=len(done),
+                       tok_per_s=tps, ttft=lat["ttft"], tpot=lat["tpot"],
+                       e2e=lat["e2e"], queue_wait=lat["queue_wait"],
+                       queue_depth_peak=lat["queue_depth_peak"],
+                       queue_depth_mean=lat["queue_depth_mean"],
+                       phase_coverage=phases["coverage"], **row)
+        print("\n# latency SLO (paged+packed+sharing, open-loop Poisson "
+              "%g req/s): metric, p50_ms, p95_ms, p99_ms" % arrival_rate)
+        for m in ("ttft", "tpot", "e2e", "queue_wait"):
+            d = lat[m]
+            print("latency_slo,%s,%.1f,%.1f,%.1f" % (
+                m, 1e3 * d["p50"], 1e3 * d["p95"], 1e3 * d["p99"]))
+        print("latency_slo,tok_per_s,%.1f  queue_depth_peak,%d  "
+              "phase_coverage,%.2f" % (tps, lat["queue_depth_peak"],
+                                       phases["coverage"] or 0))
+
     if json_path:
         with open(json_path, "w") as f:
             json.dump(dict(benchmark="serving_throughput",
@@ -466,7 +524,8 @@ def run(fast: bool = True, engines: list | None = None,
                            multi_turn_turns=MT_TURNS, engines=out,
                            prefill_heavy=packed_out,
                            prefix_sharing=prefix_out,
-                           multi_turn=mt_out, kv_int8=kvq_out),
+                           multi_turn=mt_out, kv_int8=kvq_out,
+                           latency_slo=slo_out),
                       f, indent=2)
         print(f"# wrote {json_path}")
     return out
@@ -484,8 +543,14 @@ def main():
                     help="output path for the machine-readable results")
     ap.add_argument("--full", action="store_true",
                     help="4x larger workload")
+    ap.add_argument("--arrival-rate", type=float, default=8.0, metavar="R",
+                    help="open-loop Poisson arrival rate (req/s) for the "
+                         "latency-SLO section (default 8)")
     args = ap.parse_args()
-    run(fast=not args.full, engines=args.engine, json_path=args.json)
+    if args.arrival_rate <= 0:
+        ap.error(f"--arrival-rate must be > 0, got {args.arrival_rate}")
+    run(fast=not args.full, engines=args.engine, json_path=args.json,
+        arrival_rate=args.arrival_rate)
 
 
 if __name__ == "__main__":

@@ -9,6 +9,17 @@ the prior turns' KV — prompt AND generated — via decode-block sharing):
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --reduced \
         --scheduler paged --decode-sharing --turns 4
+
+Telemetry (serve/telemetry.py): `--telemetry` records request lifecycles
+(TTFT/TPOT/E2E percentiles) and a per-step phase breakdown and prints the
+unified snapshot; `--trace-out trace.jsonl` additionally writes the step
+phases as Chrome-trace JSONL (open in Perfetto / chrome://tracing);
+`--arrival-rate R` replaces the batch-drain demo with an OPEN-LOOP load
+test — requests arrive on a seeded Poisson process at R req/s and latency
+percentiles are measured under genuine queueing:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --reduced \
+        --scheduler paged --arrival-rate 16 --trace-out trace.jsonl
 """
 from __future__ import annotations
 
@@ -62,6 +73,20 @@ def main():
                     help="packed-step token lanes per chunk step "
                          "(0 = max_batch * block_size, one lockstep chunk "
                          "step's lane count)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="record request lifecycles (TTFT/TPOT/E2E "
+                         "percentiles) and per-step phase timings, and print "
+                         "the unified telemetry snapshot after serving")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the step-phase timeline as Chrome-trace "
+                         "JSONL to PATH (load in Perfetto or "
+                         "chrome://tracing); implies --telemetry")
+    ap.add_argument("--arrival-rate", type=float, default=0.0, metavar="R",
+                    help="serve OPEN-LOOP: requests arrive on a seeded "
+                         "Poisson process at R req/s instead of being "
+                         "batch-drained, so latency percentiles include real "
+                         "queueing (continuous/paged scheduler, single-turn "
+                         "only); implies --telemetry")
     args = ap.parse_args()
     if (args.prefix_sharing or args.decode_sharing) \
             and args.scheduler != "paged":
@@ -79,6 +104,18 @@ def main():
     if args.kv_quant != "none" and args.scheduler != "paged":
         raise SystemExit("--kv-quant quantizes the paged block pool; use "
                          "--scheduler paged")
+    if args.arrival_rate < 0:
+        raise SystemExit(f"--arrival-rate must be >= 0, got "
+                         f"{args.arrival_rate}")
+    if args.arrival_rate and args.scheduler == "wave":
+        raise SystemExit("--arrival-rate drives the step-at-a-time engines; "
+                         "the wave scheduler serves whole waves (use "
+                         "--scheduler continuous or paged)")
+    if args.arrival_rate and args.turns > 1:
+        raise SystemExit("--arrival-rate is a single-turn open-loop load "
+                         "test; drop --turns")
+    telemetry_on = bool(args.telemetry or args.trace_out
+                        or args.arrival_rate)
 
     import jax
     import numpy as np
@@ -86,7 +123,8 @@ def main():
     from repro.configs import get_config, reduced_config
     from repro.models import model as M
     from repro.serve import (ContinuousEngine, PagedEngine, Request,
-                             ServeEngine)
+                             ServeEngine, Telemetry, drive_open_loop,
+                             format_snapshot)
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     if args.decode_kernel != "none":
@@ -99,6 +137,7 @@ def main():
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     # a session's history grows every turn: the cache must hold all of them
     max_len = args.turns * (args.prompt_len + args.new_tokens) + 1
+    tel = Telemetry(enabled=telemetry_on)
     if args.scheduler == "paged":
         cfg = cfg.replace(cache_layout="paged",
                           prefix_sharing=args.prefix_sharing,
@@ -109,12 +148,13 @@ def main():
                           block_size=args.block_size or None,
                           num_blocks=args.num_blocks or None,
                           packed=(args.step_layout != "lockstep"),
-                          token_budget=args.token_budget or None)
+                          token_budget=args.token_budget or None,
+                          telemetry=tel)
     else:
         engine_cls = (ContinuousEngine if args.scheduler == "continuous"
                       else ServeEngine)
         eng = engine_cls(params, cfg, max_batch=args.max_batch,
-                         max_len=max_len)
+                         max_len=max_len, telemetry=tel)
     rng = np.random.default_rng(0)
     # with --prefix-sharing the single-turn demo traffic shares a system-
     # prompt-style prefix (~3/4 of the prompt, rounded DOWN to the block
@@ -150,6 +190,31 @@ def main():
         total_new = sum(len(r.out_tokens) for r in done)
         print(f"served {args.requests} sessions x {args.turns} turns, "
               f"{total_new} tokens in {dt:.2f}s ({total_new / dt:.1f} tok/s)")
+    elif args.arrival_rate:
+        # open-loop load test: arrivals come from a seeded Poisson process
+        # and do NOT wait for the system, so queueing shows up in TTFT.
+        # Warm the jit caches with one drained request first — otherwise
+        # compile time masquerades as the head of the latency distribution.
+        warm = rng.integers(0, cfg.vocab_size,
+                            args.prompt_len).astype(np.int32)
+        eng.submit(Request(uid=-1, prompt=warm, max_new_tokens=2))
+        eng.run()
+        tel.reset()
+        reqs = []
+        for i in range(args.requests):
+            tail = rng.integers(0, cfg.vocab_size,
+                                args.prompt_len - shared_len).astype(np.int32)
+            reqs.append(Request(uid=i, prompt=np.concatenate([shared, tail]),
+                                max_new_tokens=args.new_tokens))
+        arrivals = np.cumsum(rng.exponential(1.0 / args.arrival_rate,
+                                             args.requests))
+        t0 = time.perf_counter()
+        done = drive_open_loop(eng, reqs, arrivals)
+        dt = time.perf_counter() - t0
+        total_new = sum(len(r.out_tokens) for r in done)
+        print(f"served {len(done)} requests open-loop at "
+              f"{args.arrival_rate:g} req/s, {total_new} tokens in {dt:.2f}s "
+              f"({total_new / dt:.1f} tok/s)")
     else:
         for i in range(args.requests):
             tail = rng.integers(0, cfg.vocab_size,
@@ -197,6 +262,12 @@ def main():
                   f"follow-up-turn prefill tokens "
                   f"({s['followup_tokens_skipped']}/"
                   f"{s['followup_prefill_tokens']}) served from cached KV")
+    if telemetry_on:
+        print(format_snapshot(eng.snapshot()))
+    if args.trace_out:
+        n = tel.profiler.write_chrome_trace(args.trace_out)
+        print(f"wrote {n} trace events to {args.trace_out} "
+              f"(load in Perfetto / chrome://tracing)")
 
 
 if __name__ == "__main__":

@@ -2,6 +2,9 @@
 # continuous.py — slot arena: continuous batching with per-slot lengths
 # paged.py      — block pool + block tables: paged KV with chunked prefill
 #                 (packed token steps by default; lockstep via packed=False)
+# telemetry.py  — request-lifecycle tracing (TTFT/TPOT/E2E percentiles),
+#                 step-phase profiler (Chrome-trace export), unified
+#                 schema-versioned snapshot, open-loop arrival driver
 from repro.serve.continuous import ContinuousEngine
 from repro.serve.engine import (Request, ServeEngine, kv_cache_byte_stats,
                                 kv_cache_bytes, sample_tokens)
@@ -9,3 +12,7 @@ from repro.serve.paged import (BlockAllocator, BlockPoolExhausted,
                                PagedEngine, PrefixTrie, pack_slot_ids,
                                packed_write_positions, prefix_chunk,
                                schedule_step_tokens)
+from repro.serve.telemetry import (MetricsRegistry, RequestTrace,
+                                   StepProfiler, Telemetry, drive_open_loop,
+                                   format_snapshot, make_snapshot,
+                                   percentile)

@@ -44,14 +44,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import model as M
-from repro.serve.engine import (Request, sample_tokens, validate_prompt,
+from repro.serve.engine import (Request, kv_cache_byte_stats, sample_tokens,
+                                validate_prompt,
                                 warn_decode_kernel_fallback)
+from repro.serve.telemetry import as_telemetry, make_snapshot
 
 
 class ContinuousEngine:
     def __init__(self, params, cfg, *, max_batch: int = 8,
                  max_len: int = 512, eos_id: int | None = None,
-                 cache_dtype=None, min_bucket: int = 16):
+                 cache_dtype=None, min_bucket: int = 16, telemetry=None):
         if cfg.hot_buffer != 0:
             raise ValueError(
                 "continuous batching uses the slot arena, not hot buffers "
@@ -73,6 +75,9 @@ class ContinuousEngine:
         self.min_bucket = min_bucket
         self._queue: list[Request] = []
         self._key = jax.random.PRNGKey(0)
+        # request-lifecycle tracing + step-phase profiling (telemetry.py);
+        # disabled by default — every hook below is a no-op flag check then
+        self.telemetry = as_telemetry(telemetry)
         # occupancy telemetry: running sum/count of the live fraction per
         # decode step (O(1) state — a long-lived engine never accumulates)
         self.occupancy_sum = 0.0
@@ -129,6 +134,8 @@ class ContinuousEngine:
 
     def submit(self, req: Request):
         validate_prompt(req.prompt, self.max_len)
+        if self.telemetry.enabled:
+            self.telemetry.metrics.on_submit(req.uid, len(req.prompt))
         self._queue.append(req)
 
     def _bucket(self, plen: int) -> int:
@@ -142,6 +149,8 @@ class ContinuousEngine:
     def _finish(self, slot: int) -> Request:
         req = self._slots[slot]
         req.done = True
+        if self.telemetry.enabled:
+            self.telemetry.metrics.on_finish(req.uid, len(req.out_tokens))
         self._slots[slot] = None
         self._live[slot] = False
         self._temps[slot] = 0.0
@@ -154,6 +163,8 @@ class ContinuousEngine:
         while self._queue and not self._live.all():
             slot = int(np.argmin(self._live))          # first free slot
             req = self._queue.pop(0)
+            if self.telemetry.enabled:
+                self.telemetry.metrics.on_admit(req.uid)
             plen = len(req.prompt)
             bucket = self._bucket(plen)
             toks = np.zeros((1, bucket), np.int32)
@@ -170,6 +181,8 @@ class ContinuousEngine:
                                            np.asarray([req.temperature]))
             tok = int(tok[0])
             req.out_tokens.append(tok)
+            if self.telemetry.enabled:
+                self.telemetry.metrics.on_first_token(req.uid)
             self._last[slot] = tok
             if (len(req.out_tokens) >= req.max_new_tokens or
                     (self.eos_id is not None and tok == self.eos_id)):
@@ -178,19 +191,27 @@ class ContinuousEngine:
 
     def _step(self) -> list[Request]:
         """One batched decode step over the arena; returns newly finished."""
+        prof = self.telemetry.profiler
         live = self._live.copy()
         self.occupancy_sum += float(live.mean())
         self.occupancy_steps += 1
-        self._cache = dict(self._cache, length=jnp.asarray(self._lengths))
-        tokens = jnp.asarray(self._last[:, None])
-        logits, self._cache = self._decode(self.w, self.hccs, tokens,
-                                           self._cache)
+        with prof.phase("device"):
+            self._cache = dict(self._cache,
+                               length=jnp.asarray(self._lengths))
+            tokens = jnp.asarray(self._last[:, None])
+            logits, self._cache = self._decode(self.w, self.hccs, tokens,
+                                               self._cache)
+            if prof.enabled:
+                # fence async dispatch so device time lands in THIS phase
+                # instead of smearing into the host phases that follow
+                jax.block_until_ready(logits)
         # the jitted step advances every slot's frontier; dead slots' writes
         # are garbage parked one past their final token — freeze them here so
         # they overwrite the same masked cell instead of marching on
         self._lengths = np.where(live, self._lengths + 1, self._lengths)
-        self._key, nxt = sample_tokens(self._key, logits,
-                                       np.where(live, self._temps, 0.0))
+        with prof.phase("sample"):
+            self._key, nxt = sample_tokens(self._key, logits,
+                                           np.where(live, self._temps, 0.0))
         finished = []
         for i in np.flatnonzero(live):
             req = self._slots[i]
@@ -205,12 +226,42 @@ class ContinuousEngine:
 
     # --------------------------------------------------------------- run --
 
+    @property
+    def busy(self) -> bool:
+        """True while the engine has queued or in-flight requests (the
+        open-loop driver's loop condition — see telemetry.drive_open_loop)."""
+        return bool(self._queue) or bool(self._live.any())
+
+    def step(self) -> list[Request]:
+        """Admit from the queue (the admission prefill is the `admit` phase)
+        and run ONE batched decode step; returns newly finished requests.
+        The step-at-a-time API arrival-driven serving loops build on; a
+        no-op when the engine is idle."""
+        prof = self.telemetry.profiler
+        with prof.step():
+            with prof.phase("admit"):
+                finished = self._admit()
+            if self.telemetry.enabled:
+                self.telemetry.metrics.sample_queue_depth()
+            if self._live.any():
+                finished.extend(self._step())
+            return finished
+
     def run(self) -> list[Request]:
         """Serve the whole queue; returns finished requests (uid order
         follows completion, not submission)."""
         finished: list[Request] = []
-        while self._queue or self._live.any():
-            finished.extend(self._admit())
-            if self._live.any():
-                finished.extend(self._step())
+        while self.busy:
+            finished.extend(self.step())
         return finished
+
+    def snapshot(self) -> dict:
+        """The unified schema-versioned telemetry snapshot; the slot arena
+        has no prefix/padding counters, so those sections are None. See
+        telemetry.make_snapshot for the schema contract."""
+        return make_snapshot(
+            "continuous", self.telemetry,
+            kv_cache=kv_cache_byte_stats(self._cache, self.cfg,
+                                         self.max_len),
+            occupancy=(self.occupancy_sum / self.occupancy_steps
+                       if self.occupancy_steps else None))

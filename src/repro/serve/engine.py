@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import model as M
+from repro.serve.telemetry import as_telemetry, make_snapshot
 
 
 def warn_decode_kernel_fallback(cfg):
@@ -129,7 +130,7 @@ def sample_tokens(key, logits, temps: np.ndarray):
 class ServeEngine:
     def __init__(self, params, cfg, *, max_batch: int = 8,
                  max_len: int = 512, eos_id: int | None = None,
-                 cache_dtype=None):
+                 cache_dtype=None, telemetry=None):
         if cfg.kv_quant != "none":
             raise ValueError(
                 f"kv_quant={cfg.kv_quant!r} quantizes the paged block pool; "
@@ -145,6 +146,9 @@ class ServeEngine:
         self.cache_dtype = cache_dtype
         self._queue: list[Request] = []
         self._key = jax.random.PRNGKey(0)
+        # request-lifecycle tracing + step-phase profiling (telemetry.py);
+        # disabled by default — every hook below is a no-op flag check then
+        self.telemetry = as_telemetry(telemetry)
         warn_decode_kernel_fallback(cfg)
         cfg_ = cfg
 
@@ -156,6 +160,8 @@ class ServeEngine:
 
     def submit(self, req: Request):
         validate_prompt(req.prompt, self.max_len)
+        if self.telemetry.enabled:
+            self.telemetry.metrics.on_submit(req.uid, len(req.prompt))
         self._queue.append(req)
 
     def _sample(self, logits, temps: np.ndarray):
@@ -176,13 +182,27 @@ class ServeEngine:
         return wave
 
     def _run_wave(self, wave: list[Request]):
+        tel = self.telemetry
+        prof = tel.profiler
         b = len(wave)
-        toks = jnp.asarray(np.stack([r.prompt for r in wave]), jnp.int32)
         temps = np.asarray([r.temperature for r in wave])
-        logits, cache = M.prefill(self.w, self.hccs, {"tokens": toks},
-                                  self.cfg, max_len=self.max_len,
-                                  cache_dtype=self.cache_dtype)
-        nxt = self._sample(logits, temps)
+        with prof.step("prefill"):
+            if tel.enabled:
+                # wave admission IS wave start: members leave the queue here
+                for r in wave:
+                    tel.metrics.on_admit(r.uid)
+                tel.metrics.sample_queue_depth()
+            with prof.phase("device"):
+                toks = jnp.asarray(np.stack([r.prompt for r in wave]),
+                                   jnp.int32)
+                logits, cache = M.prefill(self.w, self.hccs,
+                                          {"tokens": toks}, self.cfg,
+                                          max_len=self.max_len,
+                                          cache_dtype=self.cache_dtype)
+                if prof.enabled:
+                    jax.block_until_ready(logits)
+            with prof.phase("sample"):
+                nxt = self._sample(logits, temps)
         live = np.ones(b, bool)
         # the prefill-sampled token counts against the budget and may be EOS,
         # exactly as in the continuous engine's admission — scheduling must
@@ -190,20 +210,33 @@ class ServeEngine:
         for i, r in enumerate(wave):
             tok = int(nxt[i])
             r.out_tokens.append(tok)
+            if tel.enabled:
+                tel.metrics.on_first_token(r.uid)
             if (len(r.out_tokens) >= r.max_new_tokens or
                     (self.eos_id is not None and tok == self.eos_id)):
                 r.done = True
                 live[i] = False
+                if tel.enabled:
+                    tel.metrics.on_finish(r.uid, len(r.out_tokens))
         max_steps = max(r.max_new_tokens for r in wave) - 1
         for _ in range(max(max_steps, 0)):
             if not live.any():
                 break
-            last = jnp.asarray(nxt[:, None].astype(np.int32))
-            logits, cache = self._decode(self.w, self.hccs, last, cache)
-            # finished rows sample greedily (free): keeps the categorical
-            # branch + PRNG split from running for discarded outputs, same
-            # as the continuous engine's dead-slot handling
-            nxt = self._sample(logits, np.where(live, temps, 0.0))
+            with prof.step("decode"):
+                with prof.phase("device"):
+                    last = jnp.asarray(nxt[:, None].astype(np.int32))
+                    logits, cache = self._decode(self.w, self.hccs, last,
+                                                 cache)
+                    if prof.enabled:
+                        # fence async dispatch so device time lands in THIS
+                        # phase instead of smearing into the host phases
+                        jax.block_until_ready(logits)
+                with prof.phase("sample"):
+                    # finished rows sample greedily (free): keeps the
+                    # categorical branch + PRNG split from running for
+                    # discarded outputs, same as the continuous engine's
+                    # dead-slot handling
+                    nxt = self._sample(logits, np.where(live, temps, 0.0))
             for i, r in enumerate(wave):
                 if not live[i]:
                     continue
@@ -213,10 +246,15 @@ class ServeEngine:
                         (self.eos_id is not None and tok == self.eos_id)):
                     r.done = True
                     live[i] = False
+                    if tel.enabled:
+                        tel.metrics.on_finish(r.uid, len(r.out_tokens))
             if not live.any() or int(cache["length"]) >= self.max_len - 1:
                 break
         for r in wave:
             r.done = True
+            if tel.enabled:
+                # budget/cache-full exits that never hit an in-loop finish
+                tel.metrics.on_finish(r.uid, len(r.out_tokens))
 
     def run(self) -> list[Request]:
         """Serve the whole queue; returns finished requests."""
@@ -228,3 +266,14 @@ class ServeEngine:
             self._run_wave(wave)
             finished.extend(wave)
         return finished
+
+    def snapshot(self) -> dict:
+        """The unified schema-versioned telemetry snapshot. The wave engine
+        allocates a fresh slot cache per wave rather than holding one, so
+        kv_cache reports that per-wave reservation; prefix/padding counters
+        don't exist here and are None. See telemetry.make_snapshot."""
+        cache = M.init_cache(self.cfg, self.max_batch, self.max_len,
+                             self.cache_dtype)
+        return make_snapshot(
+            "wave", self.telemetry,
+            kv_cache=kv_cache_byte_stats(cache, self.cfg, self.max_len))

@@ -152,8 +152,10 @@ import numpy as np
 
 from repro.models import model as M
 from repro.models.attention import decode_kernel_blockers, kv_store_geometry
-from repro.serve.engine import (Request, sample_tokens, validate_prompt,
+from repro.serve.engine import (Request, kv_cache_byte_stats, sample_tokens,
+                                validate_prompt,
                                 warn_decode_kernel_fallback)
+from repro.serve.telemetry import as_telemetry, make_snapshot
 
 TRASH_BLOCK = 0
 
@@ -526,7 +528,8 @@ class PagedEngine:
                  prefix_sharing: bool | None = None,
                  decode_sharing: bool | None = None,
                  packed: bool | None = None,
-                 token_budget: int | None = None):
+                 token_budget: int | None = None,
+                 telemetry=None):
         if cfg.hot_buffer != 0:
             raise ValueError(
                 "paged batching uses the block pool, not hot buffers "
@@ -571,6 +574,9 @@ class PagedEngine:
         self.alloc = BlockAllocator(self.num_blocks)
         self._queue: list[Request] = []
         self._key = jax.random.PRNGKey(0)
+        # request-lifecycle tracing + step-phase profiling (telemetry.py);
+        # disabled by default — every hook below is a no-op flag check then
+        self.telemetry = as_telemetry(telemetry)
         # occupancy telemetry: running sum/count, O(1) state
         self.occupancy_sum = 0.0
         self.occupancy_steps = 0
@@ -771,6 +777,8 @@ class PagedEngine:
                 f"{self.num_blocks - 1} usable")
         # all validation passed: commit the concat + session bookkeeping
         req.prompt = prompt
+        if self.telemetry.enabled:
+            self.telemetry.metrics.on_submit(req.uid, len(prompt))
         if session is not None:
             self._session_busy.add(session)
             self._req_session[id(req)] = session
@@ -823,6 +831,8 @@ class PagedEngine:
                 break                        # wait for EOS to free blocks
             self._queue.pop(0)
             slot = int(np.argmin(self._live))
+            if self.telemetry.enabled:
+                self.telemetry.metrics.on_admit(req.uid)
             origins = [self.trie.origin(key) for key, _ in matched]
             for j, (key, blk) in enumerate(matched):
                 self._tables[slot, j] = self.alloc.fork(blk)
@@ -1009,6 +1019,8 @@ class PagedEngine:
     def _finish(self, slot: int) -> Request:
         req = self._slots[slot]
         req.done = True
+        if self.telemetry.enabled:
+            self.telemetry.metrics.on_finish(req.uid, len(req.out_tokens))
         session = self._req_session.pop(id(req), None)
         if session is not None:
             # the session's next turn prepends this full history (and, with
@@ -1085,36 +1097,45 @@ class PagedEngine:
     def _step(self, width: int) -> list[Request]:
         """One lockstep batched step: chunk (width == block_size, some slot
         is mid-prompt) or pure decode (width == 1). Returns newly finished."""
+        prof = self.telemetry.profiler
         live = self._live.copy()
         self.occupancy_sum += float(live.mean())
         self.occupancy_steps += 1
-        t_valid = np.zeros(self.max_batch, np.int32)
-        toks = np.zeros((self.max_batch, width), np.int32)
-        for slot in np.flatnonzero(live):
-            req = self._slots[slot]
-            pos = int(self._prompt_pos[slot])
-            if pos < len(req.prompt):        # chunked prefill
-                tv = min(width, len(req.prompt) - pos)
-                toks[slot, :tv] = req.prompt[pos:pos + tv]
-                t_valid[slot] = tv
-            else:                            # decode rides along, t_valid 1
-                toks[slot, 0] = self._last[slot]
-                t_valid[slot] = 1
-        self.lanes_valid += int(t_valid.sum())
-        self.lanes_total += self.max_batch * width
-        self._grow_tables(t_valid)
-        if self.prefix_sharing:
-            self._cow_shared(t_valid)
-        cache = dict(self._cache, length=jnp.asarray(self._lengths))
-        extras = {"block_table": jnp.asarray(self._tables),
-                  "write_pos": jnp.asarray(self._write_positions(t_valid,
-                                                                 width)),
-                  "kv_len": jnp.asarray(self._lengths + t_valid)}
-        if self.quantized:
-            extras["fresh_blocks"] = jnp.asarray(self._take_fresh())
-        logits, self._cache = self._step_fn(self.w, self.hccs,
-                                            jnp.asarray(toks), cache, extras,
-                                            jnp.asarray(t_valid))
+        with prof.phase("schedule"):
+            t_valid = np.zeros(self.max_batch, np.int32)
+            toks = np.zeros((self.max_batch, width), np.int32)
+            for slot in np.flatnonzero(live):
+                req = self._slots[slot]
+                pos = int(self._prompt_pos[slot])
+                if pos < len(req.prompt):    # chunked prefill
+                    tv = min(width, len(req.prompt) - pos)
+                    toks[slot, :tv] = req.prompt[pos:pos + tv]
+                    t_valid[slot] = tv
+                else:                        # decode rides along, t_valid 1
+                    toks[slot, 0] = self._last[slot]
+                    t_valid[slot] = 1
+            self.lanes_valid += int(t_valid.sum())
+            self.lanes_total += self.max_batch * width
+        with prof.phase("alloc_cow"):
+            self._grow_tables(t_valid)
+            if self.prefix_sharing:
+                self._cow_shared(t_valid)
+        with prof.phase("schedule"):
+            cache = dict(self._cache, length=jnp.asarray(self._lengths))
+            extras = {"block_table": jnp.asarray(self._tables),
+                      "write_pos": jnp.asarray(
+                          self._write_positions(t_valid, width)),
+                      "kv_len": jnp.asarray(self._lengths + t_valid)}
+            if self.quantized:
+                extras["fresh_blocks"] = jnp.asarray(self._take_fresh())
+        with prof.phase("device"):
+            logits, self._cache = self._step_fn(self.w, self.hccs,
+                                                jnp.asarray(toks), cache,
+                                                extras, jnp.asarray(t_valid))
+            if prof.enabled:
+                # fence async dispatch so device time lands in THIS phase
+                # instead of smearing into the host phases that follow
+                jax.block_until_ready(logits)
         return self._sample_and_finish(live, t_valid, logits)
 
     def _step_packed(self) -> list[Request]:
@@ -1124,97 +1145,110 @@ class PagedEngine:
         causal frontiers. width is the smallest rung of the chunk-width
         ladder covering the step's pending work (capped at token_budget);
         pure decode lands on the max_batch rung. Returns newly finished."""
+        prof = self.telemetry.profiler
         live = self._live.copy()
         self.occupancy_sum += float(live.mean())
         self.occupancy_steps += 1
-        remaining = np.zeros(self.max_batch, np.int64)
-        for slot in np.flatnonzero(live):
-            remaining[slot] = (len(self._slots[slot].prompt)
-                               - int(self._prompt_pos[slot]))
-        needed = int(np.where(
-            live, np.minimum(np.maximum(remaining, 1), self._chunk_cap),
-            0).sum())
-        needed = min(needed, self.token_budget)
-        width = next(w for w in self._widths if w >= needed)
-        t_valid = schedule_step_tokens(live, remaining, width,
-                                       self._chunk_cap)
-        sid, off = pack_slot_ids(t_valid, width)
-        toks = np.zeros(width, np.int32)
-        positions = np.zeros(width, np.int32)
-        for slot in np.flatnonzero(t_valid > 0):
-            tv = int(t_valid[slot])
-            o = int(off[slot])
-            if remaining[slot] > 0:          # prefill chunk (budget-sized)
-                pos = int(self._prompt_pos[slot])
-                toks[o:o + tv] = self._slots[slot].prompt[pos:pos + tv]
-            else:                            # decode: one lane
-                toks[o] = self._last[slot]
-            positions[o:o + tv] = int(self._lengths[slot]) + np.arange(tv)
-        self.lanes_valid += int(t_valid.sum())
-        self.lanes_total += width
-        # lanes the lockstep layout would burn for the SAME scheduled work:
-        # it caps each slot at block_size tokens per chunk step, so this
-        # step's largest per-slot chunk takes ceil(max tv / bs) lockstep
-        # steps of max_batch * block_size lanes each. Those extra lockstep
-        # steps would ALSO advance every decode rider by one token each —
-        # progress this packed step has not made — so credit the riders one
-        # future packed decode lane per extra step (decode-only steps
-        # themselves save nothing).
-        if (remaining > 0).any():
-            n_lockstep = -(-int(t_valid.max()) // self.block_size)
-            riders = int((live & (remaining == 0)).sum())
-            lockstep = n_lockstep * self.max_batch * self.block_size
-            self.pad_lanes_skipped += max(
-                lockstep - width - (n_lockstep - 1) * riders, 0)
-        self._grow_tables(t_valid)
-        if self.prefix_sharing:
-            self._cow_shared(t_valid)
-        wp = packed_write_positions(t_valid, off, self._tables, self._lengths,
-                                    self.block_size, width)
-        kv_len = np.where(sid >= 0, positions + 1, 0).astype(np.int32)
-        lane_idx = np.maximum(off + t_valid - 1, 0).astype(np.int32)
-        cache = dict(self._cache, length=jnp.asarray(self._lengths))
-        extras = {"block_table": jnp.asarray(self._tables),
-                  "write_pos": jnp.asarray(wp[None]),
-                  "kv_len": jnp.asarray(kv_len),
-                  "slot_ids": jnp.asarray(sid)}
-        if self.quantized:
-            extras["fresh_blocks"] = jnp.asarray(self._take_fresh())
-        if self._use_grid:
-            # XLA attention-grid steering: cell (slot, i) of the (B, Wb)
-            # grid is the slot's i-th token this step; grid_pos maps packed
-            # lanes to flat cells (pad lanes -> the spill row B*Wb)
-            max_tv = max(int(t_valid.max()), 1)
-            wb = next(w for w in self._grid_widths if w >= max_tv)
-            q_pos_grid = (self._lengths[:, None]
-                          + np.arange(wb, dtype=np.int32)[None, :])
-            grid_pos = np.full(width, self.max_batch * wb, np.int32)
-            valid_lane = sid >= 0
-            grid_pos[valid_lane] = (sid[valid_lane] * wb
-                                    + (np.flatnonzero(valid_lane)
-                                       - off[sid[valid_lane]]))
-            extras.update(
-                q_pos_grid=jnp.asarray(q_pos_grid.astype(np.int32)),
-                grid_pos=jnp.asarray(grid_pos),
-                kv_len_slot=jnp.asarray((self._lengths
-                                         + t_valid).astype(np.int32)))
-        logits, self._cache = self._packed_fn(
-            self.w, self.hccs, jnp.asarray(toks[None]),
-            jnp.asarray(positions[None]), cache, extras,
-            jnp.asarray(lane_idx))
+        with prof.phase("schedule"):
+            remaining = np.zeros(self.max_batch, np.int64)
+            for slot in np.flatnonzero(live):
+                remaining[slot] = (len(self._slots[slot].prompt)
+                                   - int(self._prompt_pos[slot]))
+            needed = int(np.where(
+                live, np.minimum(np.maximum(remaining, 1), self._chunk_cap),
+                0).sum())
+            needed = min(needed, self.token_budget)
+            width = next(w for w in self._widths if w >= needed)
+            t_valid = schedule_step_tokens(live, remaining, width,
+                                           self._chunk_cap)
+            sid, off = pack_slot_ids(t_valid, width)
+            toks = np.zeros(width, np.int32)
+            positions = np.zeros(width, np.int32)
+            for slot in np.flatnonzero(t_valid > 0):
+                tv = int(t_valid[slot])
+                o = int(off[slot])
+                if remaining[slot] > 0:      # prefill chunk (budget-sized)
+                    pos = int(self._prompt_pos[slot])
+                    toks[o:o + tv] = self._slots[slot].prompt[pos:pos + tv]
+                else:                        # decode: one lane
+                    toks[o] = self._last[slot]
+                positions[o:o + tv] = (int(self._lengths[slot])
+                                       + np.arange(tv))
+            self.lanes_valid += int(t_valid.sum())
+            self.lanes_total += width
+            # lanes the lockstep layout would burn for the SAME scheduled
+            # work: it caps each slot at block_size tokens per chunk step, so
+            # this step's largest per-slot chunk takes ceil(max tv / bs)
+            # lockstep steps of max_batch * block_size lanes each. Those
+            # extra lockstep steps would ALSO advance every decode rider by
+            # one token each — progress this packed step has not made — so
+            # credit the riders one future packed decode lane per extra step
+            # (decode-only steps themselves save nothing).
+            if (remaining > 0).any():
+                n_lockstep = -(-int(t_valid.max()) // self.block_size)
+                riders = int((live & (remaining == 0)).sum())
+                lockstep = n_lockstep * self.max_batch * self.block_size
+                self.pad_lanes_skipped += max(
+                    lockstep - width - (n_lockstep - 1) * riders, 0)
+        with prof.phase("alloc_cow"):
+            self._grow_tables(t_valid)
+            if self.prefix_sharing:
+                self._cow_shared(t_valid)
+        with prof.phase("schedule"):
+            wp = packed_write_positions(t_valid, off, self._tables,
+                                        self._lengths, self.block_size, width)
+            kv_len = np.where(sid >= 0, positions + 1, 0).astype(np.int32)
+            lane_idx = np.maximum(off + t_valid - 1, 0).astype(np.int32)
+            cache = dict(self._cache, length=jnp.asarray(self._lengths))
+            extras = {"block_table": jnp.asarray(self._tables),
+                      "write_pos": jnp.asarray(wp[None]),
+                      "kv_len": jnp.asarray(kv_len),
+                      "slot_ids": jnp.asarray(sid)}
+            if self.quantized:
+                extras["fresh_blocks"] = jnp.asarray(self._take_fresh())
+            if self._use_grid:
+                # XLA attention-grid steering: cell (slot, i) of the (B, Wb)
+                # grid is the slot's i-th token this step; grid_pos maps
+                # packed lanes to flat cells (pad lanes -> the spill row
+                # B*Wb)
+                max_tv = max(int(t_valid.max()), 1)
+                wb = next(w for w in self._grid_widths if w >= max_tv)
+                q_pos_grid = (self._lengths[:, None]
+                              + np.arange(wb, dtype=np.int32)[None, :])
+                grid_pos = np.full(width, self.max_batch * wb, np.int32)
+                valid_lane = sid >= 0
+                grid_pos[valid_lane] = (sid[valid_lane] * wb
+                                        + (np.flatnonzero(valid_lane)
+                                           - off[sid[valid_lane]]))
+                extras.update(
+                    q_pos_grid=jnp.asarray(q_pos_grid.astype(np.int32)),
+                    grid_pos=jnp.asarray(grid_pos),
+                    kv_len_slot=jnp.asarray((self._lengths
+                                             + t_valid).astype(np.int32)))
+        with prof.phase("device"):
+            logits, self._cache = self._packed_fn(
+                self.w, self.hccs, jnp.asarray(toks[None]),
+                jnp.asarray(positions[None]), cache, extras,
+                jnp.asarray(lane_idx))
+            if prof.enabled:
+                # fence async dispatch so device time lands in THIS phase
+                # instead of smearing into the host phases that follow
+                jax.block_until_ready(logits)
         return self._sample_and_finish(live, t_valid, logits)
 
     def _sample_and_finish(self, live, t_valid, logits) -> list[Request]:
         """Shared step tail (lockstep and packed layouts): sample each slot
         that produced a next token, advance frontiers, register prefixes,
         finish slots at budget/EOS/cache-full."""
+        prof = self.telemetry.profiler
         # a slot samples this step iff it produced a next token: decoding, or
         # its prompt completed within this chunk
-        samples = live & (self._prompt_pos + t_valid
-                          >= np.asarray([len(r.prompt) if r else 1 << 30
-                                         for r in self._slots]))
-        self._key, nxt = sample_tokens(self._key, logits,
-                                       np.where(samples, self._temps, 0.0))
+        with prof.phase("sample"):
+            samples = live & (self._prompt_pos + t_valid
+                              >= np.asarray([len(r.prompt) if r else 1 << 30
+                                             for r in self._slots]))
+            self._key, nxt = sample_tokens(
+                self._key, logits, np.where(samples, self._temps, 0.0))
         finished = []
         for slot in np.flatnonzero(live):
             req = self._slots[slot]
@@ -1229,11 +1263,14 @@ class PagedEngine:
                 # frontier) on a terminating step still leaves its full-block
                 # KV cached; with decode sharing this runs every step, so
                 # generated blocks enter the trie the step they fill
-                self._register_blocks(slot, req)
+                with prof.phase("register"):
+                    self._register_blocks(slot, req)
             if not samples[slot]:
                 continue                     # still mid-prompt
             tok = int(nxt[slot])
             req.out_tokens.append(tok)
+            if self.telemetry.enabled and len(req.out_tokens) == 1:
+                self.telemetry.metrics.on_first_token(req.uid)
             self._last[slot] = tok
             # the cache-full guard only applies to decode-written KV — the
             # prefill-completion sample mirrors the continuous engine's
@@ -1247,19 +1284,51 @@ class PagedEngine:
 
     # --------------------------------------------------------------- run --
 
+    @property
+    def busy(self) -> bool:
+        """True while the engine has queued or in-flight requests (the
+        open-loop driver's loop condition — see telemetry.drive_open_loop)."""
+        return bool(self._queue) or bool(self._live.any())
+
+    def step(self) -> list[Request]:
+        """Admit from the queue and run ONE engine step; returns newly
+        finished requests. The step-at-a-time API arrival-driven serving
+        loops build on (run() is just step() until drained); a no-op when
+        the engine is idle."""
+        prof = self.telemetry.profiler
+        with prof.step():
+            with prof.phase("admit"):
+                self._admit()
+            if self.telemetry.enabled:
+                self.telemetry.metrics.sample_queue_depth()
+            if not self._live.any():
+                assert not self._queue, "admission stalled with free pool"
+                return []
+            if self.packed:
+                return self._step_packed()
+            prefilling = any(
+                self._live[s]
+                and self._prompt_pos[s] < len(self._slots[s].prompt)
+                for s in range(self.max_batch) if self._slots[s] is not None)
+            return self._step(self.block_size if prefilling else 1)
+
     def run(self) -> list[Request]:
         """Serve the whole queue; returns finished requests (uid order
         follows completion, not submission)."""
         finished: list[Request] = []
-        while self._queue or self._live.any():
-            self._admit()
-            assert self._live.any(), "admission stalled with free pool"
-            if self.packed:
-                finished.extend(self._step_packed())
-                continue
-            prefilling = any(
-                self._live[s] and self._prompt_pos[s] < len(self._slots[s].prompt)
-                for s in range(self.max_batch) if self._slots[s] is not None)
-            finished.extend(
-                self._step(self.block_size if prefilling else 1))
+        while self.busy:
+            finished.extend(self.step())
         return finished
+
+    def snapshot(self) -> dict:
+        """The unified schema-versioned telemetry snapshot (lifecycle
+        latency + step phases when telemetry is enabled, merged with the
+        engine's cumulative prefix/padding/cache-byte/occupancy counters).
+        See telemetry.make_snapshot for the schema contract."""
+        return make_snapshot(
+            "paged", self.telemetry,
+            kv_cache=kv_cache_byte_stats(self._cache, self.cfg, None),
+            occupancy=(self.occupancy_sum / self.occupancy_steps
+                       if self.occupancy_steps else None),
+            prefix=self.prefix_stats(),
+            padding=self.padding_stats())

@@ -1,0 +1,441 @@
+"""Serving telemetry: request-lifecycle tracing, latency percentiles, and a
+step-phase profiler shared by all three engines.
+
+Three layers, composable and individually cheap:
+
+* **RequestTrace / MetricsRegistry** — one trace per request recording the
+  lifecycle timestamps ``submit -> admit -> first_token -> finish``. The
+  registry derives the serving SLO metrics from finished traces:
+
+      TTFT  = first_token - submit        (time to first token; includes
+                                           queue wait, so open-loop arrival
+                                           benchmarks measure it honestly)
+      TPOT  = (finish - first_token)      (time per output token AFTER the
+              / (n_tokens - 1)             first; single-token requests are
+                                           excluded)
+      E2E   = finish - submit
+      queue_wait = admit - submit         (admission-wait histogram)
+
+  reported as p50/p95/p99/mean over finished requests (percentile math is
+  numpy-equivalent linear interpolation, pinned by tests/test_telemetry.py).
+
+* **StepProfiler** — wraps each engine step and attributes wall time to the
+  named PHASES of the step body. The phase taxonomy (paged engine; the other
+  engines use the applicable subset):
+
+      admit      queue -> slot admission: prefix match, reservation gate,
+                 table fork (continuous: includes the admission prefill)
+      schedule   host-side step scheduling + token packing (t_valid, slot
+                 ids, steering arrays)
+      alloc_cow  block-pool bookkeeping: alloc-on-frontier-crossing growth
+                 plus copy-on-write copies of shared blocks
+      device     the jitted model step. The profiler fences this phase with
+                 ``jax.block_until_ready`` so JAX async dispatch cannot
+                 smear device time into later host phases — ONLY when
+                 profiling is enabled, so unprofiled runs keep async
+                 dispatch overlap.
+      sample     logits -> next-token sampling (argmax/categorical + host
+                 transfer)
+      register   prefix-trie registration of newly filled blocks
+
+  Phases are FLAT within a step (no nesting), re-enterable (a phase opened
+  twice in one step accumulates), and exportable two ways: ``summary()``
+  (per-phase totals, share-of-step, and ``coverage`` = attributed/step wall
+  time — the acceptance gate keeps this >= 0.9) and a Chrome-trace JSONL
+  (``write_chrome_trace``; one complete event per line, loadable in
+  Perfetto / chrome://tracing). A sample trace, one event per line:
+
+      {"name": "step", "cat": "step", "ph": "X", "ts": 120, "dur": 5200,
+       "pid": 0, "tid": 0, "args": {"step": 0}}
+      {"name": "admit", "cat": "phase", "ph": "X", "ts": 130, "dur": 310, ...}
+      {"name": "schedule", "cat": "phase", "ph": "X", "ts": 450, "dur": 180, ...}
+      {"name": "device", "cat": "phase", "ph": "X", "ts": 700, "dur": 4100, ...}
+      {"name": "sample", "cat": "phase", "ph": "X", "ts": 4810, "dur": 350, ...}
+
+* **Telemetry** — the per-engine facade bundling one registry + one
+  profiler behind a single ``enabled`` flag. Engines hold a Telemetry
+  instance unconditionally; when disabled every hook is a no-op flag check
+  (``phase()`` returns a shared null context manager, lifecycle hooks
+  return immediately), so telemetry-off serving pays one attribute test per
+  hook and nothing else — greedy outputs are asserted token-identical with
+  telemetry on vs off for all three engines.
+
+``make_snapshot`` merges the lifecycle/phase metrics with the engines'
+existing counters (``prefix_stats``/``padding_stats``/
+``kv_cache_byte_stats``/occupancy) into ONE schema-versioned dict — the
+thing ``launch/serve.py`` prints and ``benchmarks/serving_throughput.py``
+writes — so every consumer reads the same shape regardless of engine.
+
+``drive_open_loop`` is the arrival-driven serving loop used by the Poisson
+latency benchmark and ``launch/serve.py --arrival-rate``: requests are
+submitted at pre-drawn arrival offsets (open loop — arrivals do not wait
+for the system, so queueing shows up in TTFT instead of being hidden by
+batch-drain submission).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import math
+import time
+
+import numpy as np
+
+SNAPSHOT_SCHEMA_VERSION = 1
+
+# admission-wait histogram bucket edges (milliseconds, log-spaced); the last
+# bucket is open-ended
+QUEUE_WAIT_EDGES_MS = (1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0,
+                       500.0, 1000.0, 2000.0, 5000.0)
+
+_NULL = contextlib.nullcontext()
+
+
+def percentile(values, q: float):
+    """q-th percentile (0..100) with linear interpolation — the same
+    definition as numpy's default method, reimplemented so the registry has
+    no numpy-version coupling; pinned against np.percentile in tests."""
+    xs = sorted(values)
+    if not xs:
+        return None
+    pos = (len(xs) - 1) * q / 100.0
+    lo = math.floor(pos)
+    hi = math.ceil(pos)
+    return xs[lo] + (xs[hi] - xs[lo]) * (pos - lo)
+
+
+def _dist(values) -> dict:
+    """p50/p95/p99/mean/count summary of a latency sample (seconds)."""
+    vals = [v for v in values if v is not None]
+    return dict(
+        count=len(vals),
+        mean=float(np.mean(vals)) if vals else None,
+        p50=percentile(vals, 50), p95=percentile(vals, 95),
+        p99=percentile(vals, 99))
+
+
+@dataclasses.dataclass
+class RequestTrace:
+    """Lifecycle timestamps of one request (seconds on the registry clock).
+
+    Invariants (asserted in tests/test_telemetry.py):
+    submit_ts <= admit_ts <= first_token_ts <= finish_ts for a finished
+    trace, and every derived latency is non-negative."""
+    uid: int
+    prompt_len: int
+    submit_ts: float
+    admit_ts: float | None = None
+    first_token_ts: float | None = None
+    finish_ts: float | None = None
+    n_tokens: int = 0
+
+    @property
+    def queue_wait(self):
+        if self.admit_ts is None:
+            return None
+        return self.admit_ts - self.submit_ts
+
+    @property
+    def ttft(self):
+        if self.first_token_ts is None:
+            return None
+        return self.first_token_ts - self.submit_ts
+
+    @property
+    def tpot(self):
+        """Per-token decode latency after the first token; None for
+        single-token requests (no decode interval to measure)."""
+        if self.finish_ts is None or self.first_token_ts is None \
+                or self.n_tokens < 2:
+            return None
+        return (self.finish_ts - self.first_token_ts) / (self.n_tokens - 1)
+
+    @property
+    def e2e(self):
+        if self.finish_ts is None:
+            return None
+        return self.finish_ts - self.submit_ts
+
+
+class MetricsRegistry:
+    """Collects RequestTraces and derives the latency summary.
+
+    Keyed by request uid; re-submitting a uid starts a fresh trace (the old
+    one stays in the finished list if it completed). The engine hooks are
+    called with the engine's own notion of the lifecycle:
+    on_submit at queue entry, on_admit at slot assignment, on_first_token
+    when out_tokens goes 0 -> 1, on_finish when the request completes."""
+
+    def __init__(self, clock=time.perf_counter):
+        self.clock = clock
+        self.traces: dict[int, RequestTrace] = {}
+        self.finished: list[RequestTrace] = []
+        self.queue_depth = 0          # currently submitted, not yet admitted
+        self.queue_depth_peak = 0
+        self._depth_sum = 0           # sampled per step for the mean
+        self._depth_samples = 0
+
+    def on_submit(self, uid: int, prompt_len: int):
+        self.traces[uid] = RequestTrace(uid, int(prompt_len), self.clock())
+        self.queue_depth += 1
+        self.queue_depth_peak = max(self.queue_depth_peak, self.queue_depth)
+
+    def on_admit(self, uid: int):
+        t = self.traces.get(uid)
+        if t is not None and t.admit_ts is None:
+            t.admit_ts = self.clock()
+            self.queue_depth -= 1
+
+    def on_first_token(self, uid: int):
+        t = self.traces.get(uid)
+        if t is not None and t.first_token_ts is None:
+            t.first_token_ts = self.clock()
+
+    def on_finish(self, uid: int, n_tokens: int):
+        t = self.traces.get(uid)
+        if t is None or t.finish_ts is not None:
+            return
+        t.finish_ts = self.clock()
+        t.n_tokens = int(n_tokens)
+        self.finished.append(t)
+
+    def sample_queue_depth(self):
+        """Per-step queue-depth sample (drives the mean in the summary)."""
+        self._depth_sum += self.queue_depth
+        self._depth_samples += 1
+
+    def latency_summary(self) -> dict:
+        """TTFT/TPOT/E2E p50/p95/p99 + queue telemetry over finished
+        requests. The schema (key set) is pinned by
+        tests/test_telemetry.py::test_snapshot_schema_stability."""
+        done = self.finished
+        waits = [t.queue_wait for t in done if t.queue_wait is not None]
+        edges = QUEUE_WAIT_EDGES_MS
+        counts = [0] * (len(edges) + 1)
+        for w in waits:
+            ms = w * 1e3
+            counts[np.searchsorted(edges, ms, side="right")] += 1
+        return dict(
+            requests=len(done),
+            ttft=_dist(t.ttft for t in done),
+            tpot=_dist(t.tpot for t in done),
+            e2e=_dist(t.e2e for t in done),
+            queue_wait=_dist(waits),
+            queue_wait_hist=dict(edges_ms=list(edges), counts=counts),
+            queue_depth_peak=self.queue_depth_peak,
+            queue_depth_mean=(self._depth_sum / self._depth_samples
+                              if self._depth_samples else None))
+
+
+class _Span:
+    """Reusable timing context for StepProfiler (one per live nesting level;
+    allocated per __enter__ so re-entrant phases in one step are safe)."""
+
+    def __init__(self, prof, name: str, is_step: bool):
+        self.prof = prof
+        self.name = name
+        self.is_step = is_step
+
+    def __enter__(self):
+        prof = self.prof
+        if self.is_step:
+            prof._step_depth += 1
+            self.idx = prof.step_count
+        self.t0 = prof.clock()
+        return self
+
+    def __exit__(self, *exc):
+        prof = self.prof
+        t1 = prof.clock()
+        dur = t1 - self.t0
+        ev = dict(name=self.name, cat="step" if self.is_step else "phase",
+                  ph="X", ts=round((self.t0 - prof.epoch) * 1e6, 1),
+                  dur=round(dur * 1e6, 1), pid=0, tid=0)
+        if self.is_step:
+            prof._step_depth -= 1
+            prof.step_total += dur
+            prof.step_count += 1
+            ev["args"] = {"step": self.idx}
+        else:
+            prof.phase_seconds[self.name] = (
+                prof.phase_seconds.get(self.name, 0.0) + dur)
+            prof.phase_counts[self.name] = (
+                prof.phase_counts.get(self.name, 0) + 1)
+            if prof._step_depth > 0:
+                prof.in_step_seconds += dur
+        prof.events.append(ev)
+        return False
+
+
+class StepProfiler:
+    """Wall-time attribution of engine steps to named phases.
+
+    ``step(name)`` wraps one engine step; ``phase(name)`` wraps a region of
+    its body (flat — phases never nest inside each other; a phase may be
+    opened several times per step and accumulates). ``coverage`` is the
+    fraction of step wall time attributed to phases — the observability
+    acceptance gate keeps it >= 0.9, so a new chunk of per-step host work
+    can't silently hide outside the breakdown. When disabled both return a
+    shared null context: one attribute check, zero allocation."""
+
+    def __init__(self, enabled: bool = True, clock=time.perf_counter):
+        self.enabled = enabled
+        self.clock = clock
+        self.reset()
+
+    def reset(self):
+        self.epoch = self.clock()
+        self.events: list[dict] = []
+        self.phase_seconds: dict[str, float] = {}
+        self.phase_counts: dict[str, int] = {}
+        self.in_step_seconds = 0.0
+        self.step_total = 0.0
+        self.step_count = 0
+        self._step_depth = 0
+
+    def step(self, name: str = "step"):
+        if not self.enabled:
+            return _NULL
+        return _Span(self, name, is_step=True)
+
+    def phase(self, name: str):
+        if not self.enabled:
+            return _NULL
+        return _Span(self, name, is_step=False)
+
+    @property
+    def coverage(self):
+        """Fraction of step wall time attributed to in-step phases."""
+        if not self.step_total:
+            return None
+        return self.in_step_seconds / self.step_total
+
+    def summary(self) -> dict:
+        return dict(
+            steps=self.step_count,
+            step_seconds=self.step_total,
+            coverage=self.coverage,
+            phases={name: dict(count=self.phase_counts[name],
+                               seconds=secs,
+                               share_of_step=(secs / self.step_total
+                                              if self.step_total else None))
+                    for name, secs in sorted(self.phase_seconds.items())})
+
+    def write_chrome_trace(self, path: str) -> int:
+        """Chrome-trace JSONL: one complete ('ph': 'X') event per line, ts /
+        dur in microseconds since the profiler epoch. Loadable in Perfetto
+        and chrome://tracing (both accept newline-delimited event objects);
+        line-parseable by anything else. Returns the event count."""
+        with open(path, "w") as f:
+            for ev in sorted(self.events, key=lambda e: e["ts"]):
+                f.write(json.dumps(ev) + "\n")
+        return len(self.events)
+
+
+class Telemetry:
+    """Per-engine facade: one MetricsRegistry + one StepProfiler behind a
+    single `enabled` flag. Engines construct a disabled instance by default,
+    so every hook site stays a plain attribute check when telemetry is off
+    (no Optional plumbing, no behavioral branches)."""
+
+    def __init__(self, enabled: bool = True, clock=time.perf_counter):
+        self.enabled = enabled
+        self.clock = clock
+        self.metrics = MetricsRegistry(clock)
+        self.profiler = StepProfiler(enabled, clock)
+
+    def reset(self):
+        """Drop accumulated traces and profile data (e.g. after a warm-up
+        segment, so a timed segment reports only its own requests)."""
+        self.metrics = MetricsRegistry(self.clock)
+        self.profiler.reset()
+
+
+def as_telemetry(telemetry) -> Telemetry:
+    """Normalize an engine's `telemetry=` constructor argument: a Telemetry
+    instance passes through, truthy builds an enabled one, falsy/None builds
+    the disabled default."""
+    if isinstance(telemetry, Telemetry):
+        return telemetry
+    return Telemetry(enabled=bool(telemetry))
+
+
+def make_snapshot(engine: str, telemetry: Telemetry, *, kv_cache=None,
+                  occupancy=None, prefix=None, padding=None) -> dict:
+    """The unified, schema-versioned telemetry snapshot every engine's
+    ``snapshot()`` returns, ``launch/serve.py`` prints, and the serving
+    benchmark writes. Counter sections an engine doesn't have (and the
+    latency/phase sections when telemetry is disabled) are None rather than
+    absent, so the key set is STABLE across engines and settings — pinned
+    by tests/test_telemetry.py::test_snapshot_schema_stability."""
+    enabled = telemetry.enabled
+    return dict(
+        schema_version=SNAPSHOT_SCHEMA_VERSION,
+        engine=engine,
+        latency=telemetry.metrics.latency_summary() if enabled else None,
+        phases=telemetry.profiler.summary() if enabled else None,
+        kv_cache=kv_cache,
+        occupancy=occupancy,
+        prefix=prefix,
+        padding=padding)
+
+
+def format_snapshot(snap: dict) -> str:
+    """Human-readable rendering of a snapshot's latency + phase sections
+    (the counter sections have their own printouts in launch/serve.py)."""
+    lines = [f"telemetry snapshot (schema v{snap['schema_version']}, "
+             f"engine={snap['engine']})"]
+    lat = snap.get("latency")
+    if lat:
+        for name in ("ttft", "tpot", "e2e", "queue_wait"):
+            d = lat[name]
+            if not d["count"]:
+                continue
+            lines.append(
+                "  %-10s p50 %7.2f ms  p95 %7.2f ms  p99 %7.2f ms  "
+                "(n=%d)" % (name, d["p50"] * 1e3, d["p95"] * 1e3,
+                            d["p99"] * 1e3, d["count"]))
+        lines.append(f"  queue depth: peak {lat['queue_depth_peak']}")
+    prof = snap.get("phases")
+    if prof and prof["steps"]:
+        lines.append(
+            "  %d steps, %.3f s total, %.0f%% attributed to phases:"
+            % (prof["steps"], prof["step_seconds"],
+               100 * (prof["coverage"] or 0)))
+        for name, p in sorted(prof["phases"].items(),
+                              key=lambda kv: -kv[1]["seconds"]):
+            share = p["share_of_step"]
+            lines.append("    %-10s %8.3f s  %5.1f%%  (n=%d)" % (
+                name, p["seconds"],
+                100 * share if share is not None else 0.0, p["count"]))
+    return "\n".join(lines)
+
+
+def drive_open_loop(eng, reqs, arrivals, *, clock=time.perf_counter,
+                    sleep=time.sleep):
+    """Open-loop serving: submit reqs[i] once `arrivals[i]` seconds have
+    elapsed (arrival offsets must be sorted ascending) and step the engine
+    whenever it has work; idle gaps sleep until the next arrival. Arrivals
+    do NOT wait for the system — the load generator of every latency-SLO
+    benchmark — so admission queueing lands in TTFT where it belongs.
+    The engine needs the step-at-a-time API (`step()` + `busy`): paged or
+    continuous. Returns finished requests."""
+    arrivals = np.asarray(arrivals, float)
+    if len(arrivals) != len(reqs):
+        raise ValueError(f"{len(reqs)} requests but {len(arrivals)} arrivals")
+    if (np.diff(arrivals) < 0).any():
+        raise ValueError("arrival offsets must be sorted ascending")
+    done = []
+    i = 0
+    t0 = clock()
+    while i < len(reqs) or eng.busy:
+        now = clock() - t0
+        while i < len(reqs) and arrivals[i] <= now:
+            eng.submit(reqs[i])
+            i += 1
+        if eng.busy:
+            done.extend(eng.step())
+        elif i < len(reqs):
+            sleep(max(arrivals[i] - (clock() - t0), 0.0))
+    return done

@@ -1,0 +1,301 @@
+"""Serving telemetry: percentile math vs numpy, request-lifecycle ordering
+invariants, Chrome-trace JSONL validity, telemetry on/off greedy parity on
+all three engines, snapshot schema stability, phase coverage, and the
+open-loop arrival driver."""
+import copy
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import model as M
+from repro.serve import (ContinuousEngine, MetricsRegistry, PagedEngine,
+                         Request, ServeEngine, StepProfiler, Telemetry,
+                         drive_open_loop, format_snapshot, percentile)
+
+# the unified snapshot contract (telemetry.make_snapshot): every engine,
+# every telemetry setting, exactly these keys
+SNAPSHOT_KEYS = {"schema_version", "engine", "latency", "phases", "kv_cache",
+                 "occupancy", "prefix", "padding"}
+LATENCY_KEYS = {"requests", "ttft", "tpot", "e2e", "queue_wait",
+                "queue_wait_hist", "queue_depth_peak", "queue_depth_mean"}
+DIST_KEYS = {"count", "mean", "p50", "p95", "p99"}
+PHASES_KEYS = {"steps", "step_seconds", "coverage", "phases"}
+
+
+@pytest.fixture
+def served(tiny_cfg):
+    cfg = tiny_cfg(attention_prob="hccs", hccs_mode="i16_div")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _requests(rng, n, lens=(5, 9, 13), max_new=6):
+    return [Request(uid=i,
+                    prompt=rng.integers(0, 256, int(rng.choice(lens))).astype(
+                        np.int32),
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def _engines(params, cfg, telemetry):
+    paged_cfg = cfg.replace(cache_layout="paged", prefix_sharing=True)
+    return {
+        "wave": ServeEngine(params, cfg, max_batch=4, max_len=64,
+                            telemetry=telemetry),
+        "continuous": ContinuousEngine(params, cfg, max_batch=4, max_len=64,
+                                       telemetry=telemetry),
+        "paged": PagedEngine(params, paged_cfg, max_batch=4, max_len=64,
+                             block_size=8, packed=True, telemetry=telemetry),
+    }
+
+
+# ------------------------------------------------------------ percentile --
+
+
+def test_percentile_matches_numpy(rng):
+    for n in (1, 2, 3, 7, 50, 101):
+        xs = rng.normal(size=n).tolist()
+        for q in (0, 1, 25, 50, 75, 95, 99, 100):
+            assert percentile(xs, q) == pytest.approx(
+                float(np.percentile(xs, q)), abs=1e-12)
+
+
+def test_percentile_empty_is_none():
+    assert percentile([], 50) is None
+
+
+# ------------------------------------------------- lifecycle invariants --
+
+
+class FakeClock:
+    """Deterministic monotonic clock for registry/profiler unit tests."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        self.t += 0.25
+        return self.t
+
+
+def test_registry_lifecycle_and_summary():
+    reg = MetricsRegistry(clock=FakeClock())
+    for uid in range(3):
+        reg.on_submit(uid, prompt_len=10 + uid)
+    assert reg.queue_depth == 3 and reg.queue_depth_peak == 3
+    for uid in range(3):
+        reg.on_admit(uid)
+        reg.on_first_token(uid)
+        reg.on_finish(uid, n_tokens=4)
+    assert reg.queue_depth == 0
+    s = reg.latency_summary()
+    assert s["requests"] == 3
+    assert set(s) == LATENCY_KEYS
+    for m in ("ttft", "tpot", "e2e", "queue_wait"):
+        assert set(s[m]) == DIST_KEYS
+        assert s[m]["count"] == 3
+        assert s[m]["p50"] >= 0 and s[m]["p99"] >= s[m]["p50"]
+    h = s["queue_wait_hist"]
+    assert sum(h["counts"]) == 3
+    assert len(h["counts"]) == len(h["edges_ms"]) + 1
+
+
+def test_registry_hooks_are_idempotent_and_order_safe():
+    reg = MetricsRegistry(clock=FakeClock())
+    reg.on_submit(0, 5)
+    reg.on_admit(0)
+    t_admit = reg.traces[0].admit_ts
+    reg.on_admit(0)                       # duplicate admit: no double count
+    assert reg.traces[0].admit_ts == t_admit and reg.queue_depth == 0
+    reg.on_first_token(0)
+    reg.on_finish(0, 3)
+    reg.on_finish(0, 99)                  # duplicate finish: first wins
+    assert len(reg.finished) == 1 and reg.finished[0].n_tokens == 3
+    reg.on_admit(42)                      # unknown uid: ignored, no crash
+    reg.on_finish(42, 1)
+    assert len(reg.finished) == 1
+
+
+def test_single_token_request_has_no_tpot():
+    reg = MetricsRegistry(clock=FakeClock())
+    reg.on_submit(0, 5)
+    reg.on_admit(0)
+    reg.on_first_token(0)
+    reg.on_finish(0, n_tokens=1)
+    t = reg.finished[0]
+    assert t.tpot is None
+    assert reg.latency_summary()["tpot"]["count"] == 0
+
+
+@pytest.mark.parametrize("name", ["wave", "continuous", "paged"])
+def test_engine_trace_ordering_invariants(served, rng, name):
+    """submit <= admit <= first_token <= finish on every finished trace, and
+    every derived latency is non-negative, driven by a REAL engine."""
+    cfg, params = served
+    tel = Telemetry(enabled=True)
+    eng = _engines(params, cfg, None)[name]       # build others w/o tel
+    eng = _engines(params, cfg, tel)[name]
+    reqs = _requests(rng, 6)
+    reqs[1].max_new_tokens = 1                    # finishes at first token
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == len(reqs)
+    traces = tel.metrics.finished
+    assert sorted(t.uid for t in traces) == sorted(r.uid for r in reqs)
+    for t in traces:
+        assert t.submit_ts <= t.admit_ts <= t.first_token_ts <= t.finish_ts
+        assert t.queue_wait >= 0 and t.ttft >= 0 and t.e2e >= 0
+        assert t.e2e >= t.ttft
+        assert t.tpot is None or t.tpot >= 0
+        assert t.n_tokens == len(
+            next(r for r in done if r.uid == t.uid).out_tokens)
+
+
+# ----------------------------------------------------------- chrome trace --
+
+
+def test_chrome_trace_jsonl_validity(served, rng, tmp_path):
+    """Every line is a complete JSON event with the Chrome-trace keys;
+    phase events fall inside [min step ts, max step end]; step events carry
+    their step index."""
+    cfg, params = served
+    tel = Telemetry(enabled=True)
+    eng = _engines(params, cfg, tel)["paged"]
+    for r in _requests(rng, 4):
+        eng.submit(r)
+    eng.run()
+    path = tmp_path / "trace.jsonl"
+    n = tel.profiler.write_chrome_trace(str(path))
+    lines = path.read_text().splitlines()
+    assert n == len(lines) > 0
+    events = [json.loads(ln) for ln in lines]
+    for ev in events:
+        assert {"name", "cat", "ph", "ts", "dur", "pid", "tid"} <= set(ev)
+        assert ev["ph"] == "X" and ev["cat"] in ("step", "phase")
+        assert ev["ts"] >= 0 and ev["dur"] >= 0
+    assert [ev["ts"] for ev in events] == sorted(ev["ts"] for ev in events)
+    steps = [ev for ev in events if ev["cat"] == "step"]
+    phases = [ev for ev in events if ev["cat"] == "phase"]
+    assert steps and phases
+    assert [ev["args"]["step"] for ev in steps] == list(range(len(steps)))
+    lo = min(ev["ts"] for ev in steps)
+    hi = max(ev["ts"] + ev["dur"] for ev in steps)
+    # tolerate the timestamp rounding (0.1 us) at the boundaries
+    assert all(lo - 1 <= ev["ts"] and ev["ts"] + ev["dur"] <= hi + 1
+               for ev in phases)
+    assert {ev["name"] for ev in phases} >= {"admit", "device", "sample"}
+
+
+def test_disabled_profiler_records_nothing():
+    prof = StepProfiler(enabled=False)
+    with prof.step():
+        with prof.phase("device"):
+            pass
+    assert prof.events == [] and prof.step_count == 0
+    assert prof.coverage is None
+
+
+# ------------------------------------------------------- parity & schema --
+
+
+def test_greedy_parity_telemetry_on_vs_off(served, rng):
+    """Telemetry must be purely observational: token-identical greedy
+    outputs with it on vs off, for all three engines."""
+    cfg, params = served
+    reqs = _requests(rng, 6)
+    outs = {}
+    for enabled in (False, True):
+        engines = _engines(params, cfg, Telemetry(enabled=enabled))
+        outs[enabled] = {}
+        for name, eng in engines.items():
+            work = copy.deepcopy(reqs)
+            for r in work:
+                eng.submit(r)
+            outs[enabled][name] = {r.uid: r.out_tokens for r in eng.run()}
+    assert outs[True] == outs[False]
+
+
+@pytest.mark.parametrize("enabled", [False, True])
+def test_snapshot_schema_stability(served, rng, enabled):
+    """The snapshot key set is STABLE across engines and telemetry
+    settings: sections an engine lacks are None, never absent."""
+    cfg, params = served
+    engines = _engines(params, cfg, Telemetry(enabled=enabled))
+    for r in _requests(rng, 4):
+        engines["paged"].submit(r)
+    engines["paged"].run()
+    for name, eng in engines.items():
+        snap = eng.snapshot()
+        assert set(snap) == SNAPSHOT_KEYS
+        assert snap["schema_version"] == 1
+        assert snap["engine"] == name
+        assert set(snap["kv_cache"]) == {"cache_bytes_logical",
+                                         "cache_bytes_padded"}
+        if enabled:
+            assert set(snap["latency"]) == LATENCY_KEYS
+            assert set(snap["phases"]) == PHASES_KEYS
+        else:
+            assert snap["latency"] is None and snap["phases"] is None
+        if name == "paged":
+            assert snap["prefix"] is not None and snap["padding"] is not None
+        else:
+            assert snap["prefix"] is None and snap["padding"] is None
+        assert json.dumps(snap)           # JSON-serializable as-is
+        assert format_snapshot(snap).startswith("telemetry snapshot")
+
+
+@pytest.mark.parametrize("name", ["wave", "continuous", "paged"])
+def test_phase_coverage_gate(served, rng, name):
+    """>= 90% of measured step wall time must be attributed to named phases
+    — the acceptance gate that keeps new per-step host work from hiding
+    outside the breakdown."""
+    cfg, params = served
+    tel = Telemetry(enabled=True)
+    eng = _engines(params, cfg, tel)[name]
+    for r in _requests(rng, 6):
+        eng.submit(r)
+    eng.run()
+    snap = eng.snapshot()
+    assert snap["phases"]["steps"] > 0
+    assert snap["phases"]["coverage"] >= 0.9
+
+
+# -------------------------------------------------------------- open loop --
+
+
+def test_drive_open_loop_validates_inputs(served):
+    cfg, params = served
+    eng = _engines(params, cfg, None)["continuous"]
+    reqs = _requests(np.random.default_rng(0), 3)
+    with pytest.raises(ValueError, match="arrivals"):
+        drive_open_loop(eng, reqs, [0.0, 0.1])
+    with pytest.raises(ValueError, match="sorted"):
+        drive_open_loop(eng, reqs, [0.2, 0.1, 0.3])
+
+
+@pytest.mark.parametrize("name", ["continuous", "paged"])
+def test_drive_open_loop_serves_everything(served, rng, name):
+    """Arrival-driven serving finishes every request, matches batch-drain
+    greedy outputs (arrival timing must not change what is generated), and
+    records positive queue waits in the traces."""
+    cfg, params = served
+    reqs = _requests(rng, 6)
+    ref_eng = _engines(params, cfg, None)[name]
+    ref_work = copy.deepcopy(reqs)
+    for r in ref_work:
+        ref_eng.submit(r)
+    ref = {r.uid: r.out_tokens for r in ref_eng.run()}
+
+    tel = Telemetry(enabled=True)
+    eng = _engines(params, cfg, tel)[name]
+    arrivals = np.cumsum(rng.exponential(0.005, len(reqs)))
+    done = drive_open_loop(eng, copy.deepcopy(reqs), arrivals)
+    assert {r.uid: r.out_tokens for r in done} == ref
+    assert not eng.busy
+    s = tel.metrics.latency_summary()
+    assert s["requests"] == len(reqs)
+    assert s["ttft"]["count"] == len(reqs)
+    assert s["queue_wait"]["p50"] >= 0
