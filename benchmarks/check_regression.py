@@ -111,6 +111,18 @@ def metric_specs(ref: dict) -> list:
         ("multi_turn[on].prefix.followup_skip_rate",
          ("multi_turn", ("variant", "on"), "prefix", "followup_skip_rate"),
          HIGHER, TOL_STRUCTURAL),
+        # the speculative-decoding acceptance ratio: same one-box on/off
+        # form as multi_turn.vs_off, same noise headroom
+        ("speculative[on].vs_off",
+         ("speculative", ("variant", "on"), "vs_off"),
+         HIGHER, 0.25),
+        # draft acceptance rate is deterministic given the seeded workload
+        ("speculative[on].acceptance_rate",
+         ("speculative", ("variant", "on"), "acceptance_rate"),
+         HIGHER, TOL_STRUCTURAL),
+        ("speculative[on].tok_per_s",
+         ("speculative", ("variant", "on"), "tok_per_s"),
+         HIGHER, TOL_THROUGHPUT),
         ("kv_int8[int8].kv_bytes_vs_fp32",
          ("kv_int8", ("kv_quant", "int8"), "kv_bytes_vs_fp32"),
          LOWER, TOL_STRUCTURAL),

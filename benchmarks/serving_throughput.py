@@ -32,6 +32,21 @@ message. Records tok/s, decode-block hit counts, and follow-up-turn
 skip rates; the on/off tok/s ratio is the acceptance gate for the
 decode-sharing win (>= 1.5x).
 
+A SPECULATIVE-DECODING workload (multi-turn sessions on a DECODE-HEAVY
+geometry — short user messages, long replies — because drafting can only
+win back decode steps, and the long greedy replies are the self-repeating
+regime the draft sources can predict) runs the paged+packed engine with
+trie-driven speculative decoding off vs on: on drafts up to K tokens per
+decode step from the trie (n-gram prompt-lookup fallback when the trie
+path runs dry) and verifies them all in ONE packed step. The off/on pair
+is timed in INTERLEAVED passes (off, on, off, on, ...; best pass per
+side) because box-speed drift between two sequential runs is the same
+order as the effect. Records tok/s, the on/off ratio (the acceptance gate
+for the speculative win, >= 1.5x), drafted/accepted/rejected counts and
+the acceptance rate — and asserts the greedy outputs token-identical
+across off/on with block sharing both on and off (speculation must never
+change what greedy decoding emits).
+
 An INT8 KV workload (the mixed workload again, fp32 pool vs int8 pool with
 per-block per-kv-head scales at identical geometry) runs paged+packed under
 kv_quant off vs on and records tok/s, pool bytes, the padded-byte ratio
@@ -89,6 +104,10 @@ MT_TURNS = 6
 MT_USER_LEN = 40
 MT_REPLY = 12
 MT_MAX_LEN = 384                     # holds a full 6-turn history per slot
+SPEC_TURNS = 3                       # speculative section: decode-heavy chat —
+SPEC_USER_LEN = 16                   # short messages, long replies (drafting
+SPEC_REPLY = 64                      # only wins back DECODE steps, and long
+SPEC_MAX_LEN = 384                   # greedy replies are the loopy regime)
 DEFAULT_JSON = "BENCH_serving.json"
 
 
@@ -142,24 +161,24 @@ def _prefill_heavy_workload(rng, n):
     return reqs
 
 
-def _multi_turn_traffic(rng):
-    """Chat sessions: per session, MT_TURNS fresh user messages. Every turn
+def _multi_turn_traffic(rng, turns=MT_TURNS, user_len=MT_USER_LEN):
+    """Chat sessions: per session, `turns` fresh user messages. Every turn
     rides on the engine-stored history, so turn k's effective prompt is the
     whole conversation so far plus this message."""
-    return [[rng.integers(0, VOCAB, MT_USER_LEN).astype(np.int32)
-             for _ in range(MT_TURNS)] for _ in range(MT_SESSIONS)]
+    return [[rng.integers(0, VOCAB, user_len).astype(np.int32)
+             for _ in range(turns)] for _ in range(MT_SESSIONS)]
 
 
-def _serve_turns(eng, traffic, tag):
+def _serve_turns(eng, traffic, tag, reply=MT_REPLY):
     """Drive one round of every session per turn through the session API
     (all sessions' turn-k requests batch together); returns the finished
     requests."""
     done = []
-    for turn in range(MT_TURNS):
+    for turn in range(len(traffic[0])):
         for s, msgs in enumerate(traffic):
             eng.submit(Request(uid=turn * len(traffic) + s,
                                prompt=msgs[turn].copy(),
-                               max_new_tokens=MT_REPLY),
+                               max_new_tokens=reply),
                        session=f"{tag}{s}")
         done.extend(eng.run())
     return done
@@ -177,14 +196,15 @@ def _serve_multi_turn(make_engine, warm_traffic, traffic, passes: int = 3):
     deterministic work."""
     eng = make_engine()
     _serve_turns(eng, warm_traffic, "warm")
-    for s in range(MT_SESSIONS):
+    for s in range(len(warm_traffic)):
         eng.end_session(f"warm{s}")
     best = None
     for p in range(passes):
         if eng.prefix_sharing:
             eng.clear_prefix_cache()
-        row, _ = _timed(eng, lambda: _serve_turns(eng, traffic, f"chat{p}-"))
-        for s in range(MT_SESSIONS):
+        row, done = _timed(eng,
+                           lambda: _serve_turns(eng, traffic, f"chat{p}-"))
+        for s in range(len(traffic)):
             eng.end_session(f"chat{p}-{s}")
         if best is None or row["seconds"] < best["seconds"]:
             best = row
@@ -243,12 +263,16 @@ def _prefix_delta(eng, p0):
                    "prefill_tokens", "prefill_tokens_skipped",
                    "prompt_tokens_skipped", "decode_tokens_skipped",
                    "followup_prefill_tokens", "followup_tokens_skipped",
-                   "cow_copies", "evictions", "pad_lanes_skipped")}
+                   "cow_copies", "evictions", "pad_lanes_skipped",
+                   "spec_steps", "spec_rollbacks", "tokens_drafted",
+                   "tokens_accepted", "tokens_rejected")}
     d["hit_rate"] = d["hits"] / max(d["lookups"], 1)
     d["skip_rate"] = (d["prefill_tokens_skipped"]
                       / max(d["prefill_tokens"], 1))
     d["followup_skip_rate"] = (d["followup_tokens_skipped"]
                                / max(d["followup_prefill_tokens"], 1))
+    d["acceptance_rate"] = (d["tokens_accepted"] / d["tokens_drafted"]
+                            if d["tokens_drafted"] else None)
     return d
 
 
@@ -428,7 +452,81 @@ def run(fast: bool = True, engines: list | None = None,
             mt_out.append(dict(variant="on" if sharing else "off",
                                tok_per_s=tps, **row))
 
-    # int8-quantized paged KV: fp32 pool vs int8 pool + per-block scales at
+    # trie-driven speculative decoding: multi-turn sessions on the decode-
+    # heavy geometry (drafting only wins back DECODE steps — the default
+    # multi-turn geometry's 12-token replies never leave prefill-dominated
+    # territory), paged+packed engine with block sharing on, speculative off
+    # vs on. The pair is timed in INTERLEAVED passes (off, on, off, on; best
+    # pass per side) so box-speed drift between runs cancels out of the
+    # vs_off ratio — the acceptance gate for the speculative win. The greedy
+    # outputs are asserted token-identical across off/on — with sharing BOTH
+    # on and off (the off pair is untimed: it exists to prove the n-gram
+    # fallback path alone also never changes what greedy decoding emits).
+    spec_out = []
+    if engines is None or any(e.startswith("paged") for e in names):
+        straffic = _multi_turn_traffic(np.random.default_rng(31),
+                                       turns=SPEC_TURNS,
+                                       user_len=SPEC_USER_LEN)
+        swarm = _multi_turn_traffic(np.random.default_rng(37),
+                                    turns=SPEC_TURNS,
+                                    user_len=SPEC_USER_LEN)
+        nblk = MAX_BATCH * (SPEC_MAX_LEN // BLOCK_SIZE) + 1
+        print("\n# speculative decoding (paged+packed+sharing, %d sessions "
+              "x %d turns, %d-token replies): variant, tokens, s, tok/s, "
+              "vs_off, drafted, accepted, acceptance"
+              % (MT_SESSIONS, SPEC_TURNS, SPEC_REPLY))
+        for sharing in (True, False):
+            engs, best, outs = {}, {}, {}
+            for spec in (False, True):
+                eng = PagedEngine(params, cfg, block_size=BLOCK_SIZE,
+                                  max_batch=MAX_BATCH, max_len=SPEC_MAX_LEN,
+                                  num_blocks=nblk, prefix_sharing=sharing,
+                                  decode_sharing=sharing, packed=True,
+                                  speculative=spec)
+                _serve_turns(eng, swarm, f"w{int(spec)}-", reply=SPEC_REPLY)
+                for s in range(len(swarm)):
+                    eng.end_session(f"w{int(spec)}-{s}")
+                engs[spec] = eng
+            for p in range(3 if sharing else 1):
+                for spec in (False, True):
+                    eng = engs[spec]
+                    if eng.prefix_sharing:
+                        eng.clear_prefix_cache()
+                    tag = f"chat{p}{int(spec)}-"
+                    row, done = _timed(
+                        eng, lambda: _serve_turns(eng, straffic, tag,
+                                                  reply=SPEC_REPLY))
+                    for s in range(len(straffic)):
+                        eng.end_session(f"{tag}{s}")
+                    # passes run identical deterministic work, so the first
+                    # pass's greedy outputs stand for the run
+                    outs.setdefault(spec, {r.uid: [int(t) for t in
+                                                   r.out_tokens]
+                                           for r in done})
+                    if (best.get(spec) is None
+                            or row["seconds"] < best[spec]["seconds"]):
+                        best[spec] = row
+            assert outs[False] == outs[True], (
+                "speculative decoding changed greedy outputs "
+                f"(sharing {'on' if sharing else 'off'})")
+            if not sharing:
+                continue    # untimed parity-only pair
+            for spec in (False, True):
+                row = best[spec]
+                tps = row["tokens"] / row["seconds"]
+                row["vs_off"] = (tps / spec_out[0]["tok_per_s"]
+                                 if spec_out else 1.0)
+                p = row["prefix"]
+                rate = None if p is None else p["acceptance_rate"]
+                print("speculative,%s,%d,%.2f,%.1f,%.2fx,%s,%s,%s" % (
+                    "on" if spec else "off", row["tokens"], row["seconds"],
+                    tps, row["vs_off"],
+                    "-" if p is None else p["tokens_drafted"],
+                    "-" if p is None else p["tokens_accepted"],
+                    "-" if rate is None else "%.2f" % rate))
+                spec_out.append(dict(variant="on" if spec else "off",
+                                     tok_per_s=tps,
+                                     acceptance_rate=rate, **row))
     # IDENTICAL geometry on the mixed workload. The byte ratio is the
     # acceptance gate (int8 padded pool <= 0.35x fp32: payload is a quarter,
     # scales add 2*L*N*Hkv floats); exact_match records how many greedy
@@ -521,11 +619,13 @@ def run(fast: bool = True, engines: list | None = None,
                            block_size=BLOCK_SIZE, requests=n,
                            system_prompt_len=SYSTEM_PROMPT_LEN,
                            multi_turn_sessions=MT_SESSIONS,
-                           multi_turn_turns=MT_TURNS, engines=out,
+                           multi_turn_turns=MT_TURNS,
+                           speculative_turns=SPEC_TURNS,
+                           speculative_reply=SPEC_REPLY, engines=out,
                            prefill_heavy=packed_out,
                            prefix_sharing=prefix_out,
-                           multi_turn=mt_out, kv_int8=kvq_out,
-                           latency_slo=slo_out),
+                           multi_turn=mt_out, speculative=spec_out,
+                           kv_int8=kvq_out, latency_slo=slo_out),
                       f, indent=2)
         print(f"# wrote {json_path}")
     return out

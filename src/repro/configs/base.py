@@ -102,6 +102,15 @@ class ModelConfig:
     # layout, prefix sharing, and session re-feeds stay bit-identical. Only
     # meaningful with cache_layout == "paged"; slot-arena engines reject it.
     kv_quant: str = "none"           # none | int8
+    # trie-driven speculative decoding (paged packed step only): each decode
+    # step proposes up to draft_len tokens per slot by extending the slot's
+    # matched path through the prefix trie (n-gram prompt-lookup fallback
+    # over the slot's own prompt+output), verifies them all in ONE packed
+    # step, and rolls back from the first rejection — accepted tokens
+    # amortize the per-step cost, rejected ones leave no trace (allocator,
+    # trie, and int8 block bytes restored bit-identically).
+    speculative: bool = False
+    draft_len: int = 4
 
     def __post_init__(self):
         if self.num_heads and not self.head_dim:
@@ -124,6 +133,12 @@ class ModelConfig:
         if self.kv_quant not in ("none", "int8"):
             raise ValueError(
                 f"kv_quant must be 'none' | 'int8', got {self.kv_quant!r}")
+        if self.draft_len < 1:
+            raise ValueError(f"draft_len must be >= 1, got {self.draft_len}")
+        if self.speculative and self.cache_layout != "paged":
+            raise ValueError("speculative decoding drafts against the prefix "
+                             "trie and verifies via the packed token step; "
+                             "it requires cache_layout == 'paged'")
 
     @property
     def padded_vocab(self) -> int:

@@ -69,6 +69,14 @@ def main():
                     help="store paged KV blocks as int8 with per-block "
                          "per-kv-head scales (quantize at write, dequantize "
                          "in-kernel at read; paged scheduler only)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="trie-driven speculative decoding: draft up to "
+                         "--draft-len tokens per decode step from the prefix "
+                         "trie (n-gram prompt-lookup fallback) and verify "
+                         "them all in ONE packed step; greedy outputs are "
+                         "token-identical (paged scheduler, packed layout)")
+    ap.add_argument("--draft-len", type=int, default=4,
+                    help="max draft tokens per decode step (--speculative)")
     ap.add_argument("--token-budget", type=int, default=0,
                     help="packed-step token lanes per chunk step "
                          "(0 = max_batch * block_size, one lockstep chunk "
@@ -104,6 +112,12 @@ def main():
     if args.kv_quant != "none" and args.scheduler != "paged":
         raise SystemExit("--kv-quant quantizes the paged block pool; use "
                          "--scheduler paged")
+    if args.speculative and args.scheduler != "paged":
+        raise SystemExit("--speculative drafts against the paged engine's "
+                         "prefix trie; use --scheduler paged")
+    if args.speculative and args.step_layout == "lockstep":
+        raise SystemExit("--speculative verifies all drafts in one packed "
+                         "step; drop --step-layout lockstep")
     if args.arrival_rate < 0:
         raise SystemExit(f"--arrival-rate must be >= 0, got "
                          f"{args.arrival_rate}")
@@ -149,6 +163,8 @@ def main():
                           num_blocks=args.num_blocks or None,
                           packed=(args.step_layout != "lockstep"),
                           token_budget=args.token_budget or None,
+                          speculative=args.speculative,
+                          draft_len=args.draft_len,
                           telemetry=tel)
     else:
         engine_cls = (ContinuousEngine if args.scheduler == "continuous"
@@ -241,6 +257,15 @@ def main():
         print(f"step padding: {pad['lanes_valid']}/{pad['lanes_total']} "
               f"token-lanes valid ({100 * pad['efficiency']:.0f}%), "
               f"{pad['pad_lanes_skipped']} lanes skipped by packing")
+    if args.speculative:
+        s = eng.prefix_stats()
+        rate = s["acceptance_rate"]
+        print(f"speculative: {s['tokens_drafted']} drafted, "
+              f"{s['tokens_accepted']} accepted, "
+              f"{s['tokens_rejected']} rejected "
+              f"({'n/a' if rate is None else f'{100 * rate:.0f}%'} "
+              f"acceptance) over {s['spec_steps']} verify steps, "
+              f"{s['spec_rollbacks']} rollbacks")
     if args.prefix_sharing or args.decode_sharing:
         s = eng.prefix_stats()
         # the two prefill savings side by side: prefix sharing skips real

@@ -137,8 +137,16 @@ def _slot_scatter(cache_kv, new_kv, lengths):
 # `fresh_blocks` only rides on kv_quant="int8" steps: block ids allocated
 # since the last step, whose stale per-block scales must be reset to zero
 # before this step's quantized writes (padded with the trash block 0).
+# `stage_rows`/`draft_rows` only ride on speculative verify steps over a
+# quantized pool: stage_rows makes each layer emit its RAW new KV rows
+# (staged_k/staged_v) alongside the quantized write, and draft_rows marks
+# the provisional draft lanes whose fold clamps the block scale
+# (paged_quant_scatter) — after verification the engine restores a pre-step
+# block snapshot and re-folds exactly the committed rows from the staged
+# copies (the scale fold cannot be un-folded in place).
 _PAGED_TRANSIENT = ("block_table", "write_pos", "kv_len", "slot_ids",
-                    "q_pos_grid", "grid_pos", "kv_len_slot", "fresh_blocks")
+                    "q_pos_grid", "grid_pos", "kv_len_slot", "fresh_blocks",
+                    "stage_rows", "draft_rows")
 
 
 def _paged_scatter(pool, new_kv, write_pos):
@@ -167,12 +175,14 @@ KV_QUANT_EPS = 1e-6
 KV_QUANT_INV_QMAX = jnp.float32(1.0 / 127.0)
 
 
-def paged_quant_scatter(pool, scales, new_kv, write_pos):
+def paged_quant_scatter(pool, scales, new_kv, write_pos, draft_rows=None):
     """Quantizing write into an int8 paged pool with per-block scales.
 
     pool: (N, Hkv, block_size, hd_c) int8; scales: (N, Hkv) float32 — one
     symmetric scale per (block, kv-head); new_kv: (B, Hkv, t, hd) float;
     write_pos: (B, t) flat positions exactly as in _paged_scatter.
+    draft_rows: optional (B, t) bool — rows that fold with a CLAMPED scale
+    (speculative verify steps; see below).
 
     Rows are folded IN POSITION ORDER, one at a time (lax.fori_loop):
 
@@ -190,12 +200,25 @@ def paged_quant_scatter(pool, scales, new_kv, write_pos):
     did not grow (ratio == 1.0 exactly), and zeroes stale bytes on a freshly
     allocated block (scale reset to 0 by the engine => ratio == 0.0).
     Quantization rounds half-away-from-zero (quant/int8.py's documented
-    hardware mode). Returns (pool, scales)."""
+    hardware mode). Returns (pool, scales).
+
+    Rows flagged in `draft_rows` are PROVISIONAL (speculative draft lanes):
+    they fold with the block's existing scale CLAMPED — quantized (clipped)
+    at s_old instead of growing it — so they never requantize committed
+    rows sharing their block, and every committed lane's read of history
+    stays bit-identical to a never-drafted step. A draft row landing in a
+    scale-0 block (freshly allocated for the drafts themselves, holding no
+    committed rows) still sets the scale from its own amax so later verify
+    lanes read something meaningful. Draft folds are scratch either way:
+    the engine restores the pre-step snapshot and re-folds the committed
+    rows (without the flag) after every verify step."""
     n, hkv, bs, hd_c = pool.shape
     pos = write_pos.reshape(-1)
     upd = new_kv.transpose(0, 2, 1, 3).reshape(-1, hkv, new_kv.shape[-1])
     upd = upd.astype(jnp.float32)
     hd = upd.shape[-1]
+    draft = (None if draft_rows is None
+             else draft_rows.reshape(-1).astype(bool))
 
     def write_row(i, carry):
         pool, scales = carry
@@ -205,6 +228,8 @@ def paged_quant_scatter(pool, scales, new_kv, write_pos):
         amax = jnp.abs(x).max(-1)
         s_new = jnp.maximum(s_old, jnp.maximum(amax, KV_QUANT_EPS)
                             * KV_QUANT_INV_QMAX)
+        if draft is not None:
+            s_new = jnp.where(draft[i] & (s_old > 0), s_old, s_new)
         ratio = s_old / s_new                              # s_new >= eps/127
         payload = pool[blk].astype(jnp.float32) * ratio[:, None, None]
         payload = jnp.clip(round_to_int(payload), -128, 127)
@@ -588,10 +613,11 @@ def apply_attention(p, x, cfg, hccs=None, positions=None, cache=None,
             if fresh is not None:
                 ks = ks.at[fresh].set(0.0)
                 vs = vs.at[fresh].set(0.0)
+            dr = cache.get("draft_rows")
             kc, ks = paged_quant_scatter(cache["k"], ks, k,
-                                         cache["write_pos"])
+                                         cache["write_pos"], draft_rows=dr)
             vc, vs = paged_quant_scatter(cache["v"], vs, v,
-                                         cache["write_pos"])
+                                         cache["write_pos"], draft_rows=dr)
         else:
             ks = vs = None
             kc = _paged_scatter(cache["k"], k, cache["write_pos"])
@@ -601,6 +627,13 @@ def apply_attention(p, x, cfg, hccs=None, positions=None, cache=None,
         new_cache.update(k=kc, v=vc, length=cache["length"] + t)
         if quant:
             new_cache.update(k_scale=ks, v_scale=vs)
+        if "stage_rows" in cache:
+            # speculative verify step: stage this layer's raw (pre-quant) KV
+            # rows for the engine's rollback replay. model.forward's layer
+            # scan stacks these into (L, B, Hkv, t, hd); the engine pops
+            # them out of the returned cache after the step.
+            new_cache.update(staged_k=k.astype(jnp.float32),
+                             staged_v=v.astype(jnp.float32))
         # per-slot valid-KV counts for this step (length + per-slot t_valid;
         # chunked prefill makes t_valid ragged, so `length + t` is wrong here)
         k_len = cache["kv_len"]

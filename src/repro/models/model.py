@@ -104,7 +104,8 @@ def forward(weights, hccs, batch, cfg, cache=None, decode: bool = False):
         paged_extras = {kk: cache[kk]
                         for kk in ("block_table", "write_pos", "kv_len",
                                    "slot_ids", "q_pos_grid", "grid_pos",
-                                   "kv_len_slot", "fresh_blocks")
+                                   "kv_len_slot", "fresh_blocks",
+                                   "stage_rows", "draft_rows")
                         if kk in cache}
 
     hccs = jax.tree.map(jax.lax.stop_gradient, hccs)  # theta frozen (paper QAT)

@@ -177,8 +177,9 @@ class ContinuousEngine:
             self._live[slot] = True
             self._lengths[slot] = plen
             self._temps[slot] = req.temperature
-            self._key, tok = sample_tokens(self._key, logits,
-                                           np.asarray([req.temperature]))
+            tok = sample_tokens(self._key, logits,
+                                np.asarray([req.temperature]),
+                                [req.uid], [len(req.out_tokens)])
             tok = int(tok[0])
             req.out_tokens.append(tok)
             if self.telemetry.enabled:
@@ -210,8 +211,12 @@ class ContinuousEngine:
         # they overwrite the same masked cell instead of marching on
         self._lengths = np.where(live, self._lengths + 1, self._lengths)
         with prof.phase("sample"):
-            self._key, nxt = sample_tokens(self._key, logits,
-                                           np.where(live, self._temps, 0.0))
+            # dead slots sample greedily (temp 0), so their uid/index rows
+            # are placeholders that never reach the categorical path
+            nxt = sample_tokens(
+                self._key, logits, np.where(live, self._temps, 0.0),
+                [r.uid if r else 0 for r in self._slots],
+                [len(r.out_tokens) if r else 0 for r in self._slots])
         finished = []
         for i in np.flatnonzero(live):
             req = self._slots[i]

@@ -114,17 +114,36 @@ def validate_prompt(prompt, max_len: int):
             f"prompt length {len(prompt)} not in [1, {max_len - 1}]")
 
 
-def sample_tokens(key, logits, temps: np.ndarray):
+def sample_tokens(key, logits, temps: np.ndarray, uids, gen_idx):
     """Per-row sampling: greedy where temps == 0, categorical otherwise.
-    Returns (new_key, tokens (B,) np.int64). Greedy-only batches never consume
-    the key, so greedy decoding is scheduler-independent."""
+    Returns tokens (B,) np.int64.
+
+    Each sampled row derives its own key by folding the request uid and the
+    token's generation index into the engine's base key, so a request's
+    sampled output is a pure function of (request, position) — independent
+    of batch composition, scheduler, and step layout. (The old scheme split
+    one key per STEP shared across the batch, coupling every sampled request
+    to its co-batched neighbors; speculative verification additionally needs
+    several positions of ONE request sampled in one step.) Greedy rows never
+    enter the categorical path, so they neither consume randomness nor see
+    the inf-scaled logits a near-zero temperature divisor would produce."""
     greedy = np.asarray(jnp.argmax(logits, axis=-1))
-    if (temps > 0).any():
-        key, sub = jax.random.split(key)
-        sampled = np.asarray(jax.random.categorical(
-            sub, logits / jnp.maximum(jnp.asarray(temps)[:, None], 1e-6)))
-        return key, np.where(temps > 0, sampled, greedy)
-    return key, greedy
+    temps = np.asarray(temps, np.float64)
+    hot = np.flatnonzero(temps > 0)
+    if hot.size == 0:
+        return greedy
+    uids = np.asarray(uids)
+    gen_idx = np.asarray(gen_idx)
+    # np.uint32 wraps negative uids (e.g. warmup requests) into fold_in range
+    keys = jnp.stack([jax.random.fold_in(
+        jax.random.fold_in(key, np.uint32(int(uids[i]))),
+        np.uint32(int(gen_idx[i]))) for i in hot])
+    sampled = np.asarray(jax.vmap(jax.random.categorical)(
+        keys, jnp.asarray(logits)[hot] / jnp.asarray(temps[hot, None],
+                                                     logits.dtype)))
+    out = greedy.copy()
+    out[hot] = sampled
+    return out
 
 
 class ServeEngine:
@@ -164,9 +183,10 @@ class ServeEngine:
             self.telemetry.metrics.on_submit(req.uid, len(req.prompt))
         self._queue.append(req)
 
-    def _sample(self, logits, temps: np.ndarray):
-        self._key, toks = sample_tokens(self._key, logits, temps)
-        return toks
+    def _sample(self, logits, temps: np.ndarray, wave):
+        return sample_tokens(self._key, logits, temps,
+                             [r.uid for r in wave],
+                             [len(r.out_tokens) for r in wave])
 
     def _next_wave(self) -> list[Request]:
         if not self._queue:
@@ -202,7 +222,7 @@ class ServeEngine:
                 if prof.enabled:
                     jax.block_until_ready(logits)
             with prof.phase("sample"):
-                nxt = self._sample(logits, temps)
+                nxt = self._sample(logits, temps, wave)
         live = np.ones(b, bool)
         # the prefill-sampled token counts against the budget and may be EOS,
         # exactly as in the continuous engine's admission — scheduling must
@@ -233,10 +253,10 @@ class ServeEngine:
                         jax.block_until_ready(logits)
                 with prof.phase("sample"):
                     # finished rows sample greedily (free): keeps the
-                    # categorical branch + PRNG split from running for
-                    # discarded outputs, same as the continuous engine's
-                    # dead-slot handling
-                    nxt = self._sample(logits, np.where(live, temps, 0.0))
+                    # categorical branch from running for discarded outputs,
+                    # same as the continuous engine's dead-slot handling
+                    nxt = self._sample(logits, np.where(live, temps, 0.0),
+                                       wave)
             for i, r in enumerate(wave):
                 if not live[i]:
                     continue

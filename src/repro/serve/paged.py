@@ -126,6 +126,38 @@ tests); sharing only makes it cheap. prefix_stats() splits the reuse
 telemetry into prompt_hits/decode_hits (and the matching token counters) so
 prompt-prefix reuse and decode-block reuse are separately visible.
 
+SPECULATIVE DECODING (cfg.speculative / --speculative, packed steps only):
+each decode step proposes up to draft_len tokens per decoding slot and
+verifies them ALL in one packed step — the packed layout already runs
+multi-token slots with per-token causal frontiers, so a verify step is just
+a decode step whose slots own several lanes:
+
+    draft    trie.extend_path(prompt + output) — continue the slot's matched
+             chain through the prefix trie (decode sharing keeps generated
+             blocks indexed, so multi-turn traffic drafts from prior turns);
+             n-gram prompt-lookup over the slot's own tokens when the trie
+             path runs dry
+    verify   lanes [x0, d0, d1, ..., dk-1] at positions [L, L+1, ..., L+k];
+             lane i's logits sample token t_i with the SAME per-(request,
+             position) key a never-drafted engine would fold — accept the
+             longest prefix with d_i == t_i, emit t_0..t_j (j = first
+             mismatch; the mismatched lane's own sample is the correction,
+             so every verify step emits >= 1 token)
+    rollback rejected lanes leave no trace: draft-only block allocations are
+             freed in reverse order (the free list is restored exactly),
+             fp-pool rows beyond the new frontier are dead (masked by
+             kv_len, overwritten before any read). int8 pools fold draft
+             lanes with a CLAMPED scale — never growing a block's scale, so
+             committed lanes read history bit-exactly — and after EVERY
+             verify step restore a pre-step snapshot of the touched blocks
+             and re-fold just the committed rows from the staged raw KV
+             (bytes are a pure function of row values + order, so the pool
+             is bit-identical to never having drafted)
+
+Accepted tokens amortize the per-step dispatch cost (the serving win the
+speculative benchmark section measures); greedy outputs are token-identical
+with speculation on or off, property-tested in tests/test_spec_decode.py.
+
 Attention dispatch (models/attention.py) keys off `block_table` in the cache:
 the XLA path gathers each slot's blocks into a contiguous view; with
 cfg.decode_kernel != "none" the t == 1 hot path runs the block-sparse Pallas
@@ -151,7 +183,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import model as M
-from repro.models.attention import decode_kernel_blockers, kv_store_geometry
+from repro.models.attention import (decode_kernel_blockers,
+                                    kv_store_geometry, paged_quant_scatter)
 from repro.serve.engine import (Request, kv_cache_byte_stats, sample_tokens,
                                 validate_prompt,
                                 warn_decode_kernel_fallback)
@@ -299,6 +332,10 @@ class PrefixTrie:
         self._index: dict[tuple, int] = {}   # (parent, chunk bytes) -> block
         self._block_key: dict[int, tuple] = {}      # block -> its trie key
         self._children: dict[int, int] = {}         # parent -> indexed kids
+        # parent -> {chunk bytes -> block}: the downward index extend_path
+        # drafts from (match() only ever walks exact keys downward; drafting
+        # needs "which chunks continue this parent")
+        self._kids: dict[int, dict[bytes, int]] = {}
         self._lru: dict[tuple, int] = {}            # key -> last touch
         self._origin: dict[tuple, str] = {}         # key -> prompt | decode
         self._clock = 0
@@ -342,6 +379,45 @@ class PrefixTrie:
             parent, j = blk, j + 1
         return matched
 
+    def extend_path(self, tokens, k: int) -> list[int]:
+        """Draft up to k tokens continuing `tokens` along indexed chains:
+        after the longest full-block matched path, descend through children
+        whose chunk CONTENT starts with the sequence's partial tail (int32
+        token bytes, so a bytes-prefix test IS a token-prefix test), reading
+        the draft straight out of the stored chunk. Among several matching
+        children the most recently touched wins (the trie's own recency
+        signal — no extra state). Pure: no LRU touches, no allocator
+        effects; a wrong draft is rejected by verification at zero cost.
+
+        Property (tests/test_spec_decode.py): every full block of
+        tokens + drafts re-matches, i.e.
+        len(match(tokens + drafts)) == len(tokens + drafts) // block_size."""
+        bs = self.block_size
+        matched = self.match(tokens)
+        parent = matched[-1][1] if matched else -1
+        tail = np.ascontiguousarray(
+            np.asarray(tokens[len(matched) * bs:], np.int32)).tobytes()
+        if len(tail) >= bs * 4:
+            return []            # unmatched FULL block: no chain extends it
+        out: list[int] = []
+        while len(out) < k:
+            kids = self._kids.get(parent)
+            if not kids:
+                break
+            best = None
+            for chunk, blk in kids.items():
+                if chunk.startswith(tail) and len(chunk) > len(tail):
+                    stamp = self._lru[(parent, chunk)]
+                    if best is None or stamp > best[0]:
+                        best = (stamp, chunk, blk)
+            if best is None:
+                break
+            _, chunk, blk = best
+            out.extend(np.frombuffer(chunk, np.int32)[len(tail) // 4:]
+                       .tolist())
+            parent, tail = blk, b""
+        return out[:k]
+
     def insert(self, parent: int, chunk: bytes, blk, origin: str) -> int:
         """Index `blk` under (parent, chunk) and take a reference on it;
         first writer wins — an existing key is touched and its block
@@ -358,6 +434,7 @@ class PrefixTrie:
         self._block_key[blk] = key
         self._origin[key] = origin
         self._children[key[0]] = self._children.get(key[0], 0) + 1
+        self._kids.setdefault(key[0], {})[key[1]] = blk
         self.touch(key)
         return blk
 
@@ -380,6 +457,10 @@ class PrefixTrie:
             self._children[parent] -= 1
             if not self._children[parent]:
                 del self._children[parent]
+            kids = self._kids[parent]
+            del kids[key[1]]
+            if not kids:
+                del self._kids[parent]
             self.alloc.free([blk])
             return blk
         return None
@@ -391,13 +472,14 @@ class PrefixTrie:
         self._index.clear()
         self._block_key.clear()
         self._children.clear()
+        self._kids.clear()
         self._lru.clear()
         self._origin.clear()
         self.alloc.free(blocks)
 
 
 def schedule_step_tokens(live, remaining, budget: int,
-                         chunk_cap: int | None = None):
+                         chunk_cap: int | None = None, drafts=None):
     """Per-slot token counts for one packed step (pure; property-tested in
     tests/test_packed_step.py).
 
@@ -408,7 +490,14 @@ def schedule_step_tokens(live, remaining, budget: int,
     (greedy FIFO fill), at most `chunk_cap` tokens per slot — the cap bounds
     the attention-grid width a single long prompt can force on every other
     slot's grid row (see PagedEngine._grid_widths). Requires
-    budget >= live.sum()."""
+    budget >= live.sum().
+
+    drafts ((B,) int, speculative decoding): proposed draft-token counts per
+    DECODE slot; leftover budget is dealt to decode slots' draft lanes FIRST
+    (a verified draft advances a whole token, a prefill lane only a prompt
+    position), in slot order, still at most chunk_cap lanes per slot. The
+    default (None) preserves the pinned decode-slots-take-one-lane layout
+    exactly."""
     live = np.asarray(live, bool)
     remaining = np.asarray(remaining, np.int64)
     cap = int(chunk_cap) if chunk_cap else int(budget)
@@ -418,6 +507,14 @@ def schedule_step_tokens(live, remaining, budget: int,
     if left < 0:
         raise ValueError(
             f"token budget {budget} below live slot count {live.sum()}")
+    if drafts is not None:
+        drafts = np.asarray(drafts, np.int64)
+        for slot in np.flatnonzero(live & (remaining == 0) & (drafts > 0)):
+            take = min(int(drafts[slot]), cap - 1, left)
+            t_valid[slot] += take
+            left -= take
+            if not left:
+                break
     for slot in np.flatnonzero(live & (remaining > 0)):
         take = min(int(remaining[slot]) - 1, cap - 1, left)
         t_valid[slot] += take
@@ -425,6 +522,74 @@ def schedule_step_tokens(live, remaining, budget: int,
         if not left:
             break
     return t_valid
+
+
+def ngram_propose(seq, k: int, max_n: int = 3) -> list[int]:
+    """Prompt-lookup drafting fallback (PLD-style): find the longest n-gram
+    suffix of `seq` (n = max_n down to 1) that occurred EARLIER in seq, and
+    propose the k tokens that followed its most recent earlier occurrence.
+    Pure host-side; O(len(seq) * max_n) in VECTORIZED numpy — this runs per
+    decoding slot per speculative step, and a Python-level scan of a few
+    hundred history positions costs more than the verify step it feeds
+    (~4ms vs ~5ms measured). Returns [] when no suffix repeats — drafting
+    is best-effort, verification catches everything."""
+    seq = np.asarray(seq, np.int32)
+    n_tot = len(seq)
+    for n in range(min(max_n, n_tot - 1), 0, -1):
+        suffix = seq[n_tot - n:]
+        # all length-n windows at once; candidate starts exclude the suffix
+        # itself (the window at n_tot - n), most recent earlier one wins
+        win = np.lib.stride_tricks.sliding_window_view(seq, n)
+        hits = np.flatnonzero((win[:-1] == suffix).all(axis=1))
+        if len(hits):
+            s = int(hits[-1])
+            # s + n <= n_tot - 1, so the follow run is never empty
+            return [int(x) for x in seq[s + n:s + n + k]]
+    return []
+
+
+@jax.jit
+def _gather_block_state(layers, blocks):
+    """Device-side snapshot of `blocks` (S,) across all layers — int8
+    payload and per-block scales — taken BEFORE a speculative verify step
+    folds its rows, so the post-verification rewrite can restore them
+    exactly (see _restore_and_replay). Trash-padded duplicate entries are
+    fine: gathers read, they don't race."""
+    return {name: layers[name][:, blocks]
+            for name in ("k", "v", "k_scale", "v_scale")}
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _restore_and_replay(layers, snap, blocks, fresh_mask, staged_k,
+                        staged_v, replay_pos):
+    """Post-verification int8 rewrite, run after EVERY speculative verify
+    step: restore the pre-step snapshot of every block the drafting slots'
+    rows touched (the in-step folds were scratch — draft lanes clamped the
+    scale, and a committed lane's grow cannot be un-grown in place),
+    re-zero the scales of snapshot blocks freshly allocated this step that
+    stay live (the replay fold must see the same zeroed scale a real step
+    sees; freed draft blocks instead keep their restored stale scale,
+    exactly the state a never-drafted run leaves on a never-allocated
+    block), then re-fold ONLY the committed rows from the staged raw KV,
+    rejected lanes steered into the trash block. Block bytes are a pure
+    function of (row values, order) — paged_quant_scatter's fold contract
+    — so the result is bit-identical to a step that never drafted
+    (tests/test_spec_decode.py pins this).
+
+    layers: the full per-layer cache dict (donated); snap: the
+    _gather_block_state dict; blocks: (S,) int32; fresh_mask: (S,) bool;
+    staged_k/staged_v: (L, 1, Hkv, W, hd) raw rows; replay_pos: (1, W)."""
+    out = dict(layers)
+    for name, staged in (("k", staged_k), ("v", staged_v)):
+        pool = out[name].at[:, blocks].set(snap[name])
+        sc = out[name + "_scale"].at[:, blocks].set(
+            jnp.where(fresh_mask[None, :, None], 0.0,
+                      snap[name + "_scale"]))
+        pool, sc = jax.vmap(paged_quant_scatter,
+                            in_axes=(0, 0, 0, None))(pool, sc, staged,
+                                                     replay_pos)
+        out[name], out[name + "_scale"] = pool, sc
+    return out
 
 
 def pack_slot_ids(t_valid, width: int):
@@ -529,6 +694,8 @@ class PagedEngine:
                  decode_sharing: bool | None = None,
                  packed: bool | None = None,
                  token_budget: int | None = None,
+                 speculative: bool | None = None,
+                 draft_len: int | None = None,
                  telemetry=None):
         if cfg.hot_buffer != 0:
             raise ValueError(
@@ -614,8 +781,9 @@ class PagedEngine:
         self._fresh_cap = budget // bs + 2 * max_batch
         # chunk-width ladder: a packed step runs at the smallest traced width
         # that covers its work, so prompt-tail and rider-dominated steps
-        # don't pad all the way to the budget. At most 4 traced shapes —
-        # still O(1), vs the O(log max_len) prefill buckets paging killed.
+        # don't pad all the way to the budget. At most 4 traced shapes (5
+        # with speculative decoding's 2*max_batch rung, added below) — still
+        # O(1), vs the O(log max_len) prefill buckets paging killed.
         self._widths = sorted({max_batch, max(budget // 4, max_batch),
                                max(budget // 2, max_batch), budget})
         # attention-grid width ladder: the XLA packed path runs its attention
@@ -628,10 +796,49 @@ class PagedEngine:
         # same as lockstep's ragged final chunk) while chunk steps still
         # prefill 4x the tokens a lockstep step can.
         self._chunk_cap = min(4 * bs, budget)
+        # trie-driven speculative decoding (module docstring): decode slots
+        # draft up to draft_len tokens per step, verified in one packed step
+        self.speculative = bool(cfg.speculative if speculative is None
+                                else speculative)
+        self.draft_len = int(cfg.draft_len if draft_len is None
+                             else draft_len)
+        if self.draft_len < 1:
+            raise ValueError(
+                f"draft_len must be >= 1, got {self.draft_len}")
+        if self.speculative and not self.packed:
+            raise ValueError(
+                "speculative decoding verifies all drafts in one packed "
+                "step; it requires packed=True (the lockstep layout has no "
+                "multi-token decode lanes)")
+        if self.speculative:
+            # verify lanes ride on top of a pure-decode step's max_batch
+            # lanes, so give the ladder a 2*max_batch rung: without it a
+            # lightly-drafting step jumps straight from max_batch to
+            # budget//4 lanes and the padding eats the speculative win
+            # (a 5th traced shape, still O(1))
+            self._widths = sorted(set(self._widths)
+                                  | {min(2 * max_batch, budget)})
+        # acceptance telemetry (prefix_stats): drafted = accepted + rejected
+        self.spec_steps = 0
+        self.spec_rollbacks = 0
+        self.drafted_tokens = 0
+        self.accepted_tokens = 0
+        self.rejected_tokens = 0
+        # int8 rollback snapshot cap: each drafting slot's verify rows span
+        # at most ceil((1 + draft_len)/bs) + 1 boundary-straddling blocks
+        self._snap_cap = max_batch * ((self.draft_len + 1) // bs + 2)
         self._grid_widths = [1] + [k * bs for k in
                                    range(1, self._chunk_cap // bs + 1)]
         if self._grid_widths[-1] < self._chunk_cap:
             self._grid_widths.append(self._chunk_cap)
+        if self.speculative:
+            # verify steps put 1 + draft_len tokens on every drafting slot's
+            # grid row; without a matching rung they round up to a full
+            # block_size row and the attention core pays ~3x padding —
+            # enough to erase the whole speculative win on its own
+            self._grid_widths = sorted(set(self._grid_widths)
+                                       | {min(1 + self.draft_len,
+                                              self._chunk_cap)})
         # with the fused packed kernel active, attention never reads the
         # grid-steering arrays — omit them so the step traces once per chunk
         # width, not once per (chunk width, grid width) pair
@@ -742,6 +949,25 @@ class PagedEngine:
             return logits[:, 0], cache
 
         self._packed_fn = _packed
+
+        # speculative verify step: same packed forward, but every slot reads
+        # a ROW of verify lanes instead of one sampling lane — lane_grid
+        # (B, 1 + draft_len) holds off[s] + i for slot s's i-th verify lane
+        # (non-drafting slots repeat their last lane; the duplicate columns
+        # are discarded on the host). Kept separate from _packed_fn so
+        # non-speculative steps (and anything that instruments _packed_fn)
+        # are byte-for-byte untouched.
+        @functools.partial(jax.jit, donate_argnums=(4,))
+        def _packed_spec(w, hccs, tokens, positions, cache, extras,
+                         lane_grid):
+            x, cache, _ = M.forward(
+                w, hccs, {"tokens": tokens, "positions": positions}, cfg_,
+                cache=dict(cache, **extras), decode=True)
+            h = x[0][lane_grid]                          # (B, 1+K, D)
+            logits = M.logits_from_hidden(w, h, cfg_)
+            return logits, cache
+
+        self._packed_spec_fn = _packed_spec
 
     # ------------------------------------------------------------- queue --
 
@@ -983,9 +1209,19 @@ class PagedEngine:
         lanes the packed step avoided versus the lockstep layout (zero with
         packed=False) — reported here so the two are distinguishable in the
         same printout: prefix sharing skips real prefill FLOPs, packing
-        skips padding FLOPs."""
+        skips padding FLOPs. The spec_* / *_tokens draft counters cover
+        trie-driven speculative decoding (drafted = accepted + rejected per
+        verify step; acceptance_rate is None until something was drafted —
+        launchers and benchmarks must guard the mid-run/empty case)."""
         cached = self.trie.origin_counts()
         return dict(
+            spec_steps=self.spec_steps,
+            spec_rollbacks=self.spec_rollbacks,
+            tokens_drafted=self.drafted_tokens,
+            tokens_accepted=self.accepted_tokens,
+            tokens_rejected=self.rejected_tokens,
+            acceptance_rate=(self.accepted_tokens / self.drafted_tokens
+                             if self.drafted_tokens else None),
             lookups=self.prefix_lookups, hits=self.prefix_hits,
             hit_rate=self.prefix_hits / max(self.prefix_lookups, 1),
             prompt_hits=self.prompt_hits, decode_hits=self.decode_hits,
@@ -1050,7 +1286,14 @@ class PagedEngine:
         lengths + t_valid before the step writes there. With kv_quant, every
         block allocated here is recorded as FRESH: its pool scale may be
         stale from a freed prior owner and is reset to zero inside the next
-        step, before the quantizing fold writes into it."""
+        step, before the quantizing fold writes into it.
+
+        Returns the allocations as [(slot, table index, block, reservation
+        decremented), ...] in allocation order — speculative steps grow in
+        two phases (committed coverage first, then draft lanes) and roll the
+        second phase's list back in REVERSE on rejection, which restores the
+        free list and the reservations exactly (_verify_and_finish)."""
+        allocs = []
         for slot in np.flatnonzero(t_valid > 0):
             needed = -(-int(self._lengths[slot] + t_valid[slot])
                        // self.block_size)
@@ -1060,7 +1303,10 @@ class PagedEngine:
                 row[j] = self._alloc_block()
                 if self.quantized:
                     self._fresh.append(int(row[j]))
+                resv_dec = self._resv[slot] > 0
                 self._resv[slot] = max(self._resv[slot] - 1, 0)
+                allocs.append((slot, j, int(row[j]), bool(resv_dec)))
+        return allocs
 
     def _take_fresh(self) -> np.ndarray:
         """Drain the fresh-block list into the static-size step array (padded
@@ -1073,6 +1319,52 @@ class PagedEngine:
         out[:len(self._fresh)] = self._fresh
         self._fresh.clear()
         return out
+
+    def _propose_drafts(self, live, remaining) -> dict[int, list[int]]:
+        """Draft tokens for every DECODING slot (remaining == 0): continue
+        the slot's full sequence (prompt + output) along the prefix trie
+        (extend_path), topping up from the n-gram prompt-lookup fallback
+        over the slot's own tokens when the trie path runs dry. Caps keep a
+        verify step inside never-drafted bounds: at most draft_len lanes,
+        never past the request budget's LAST token (the final token's KV is
+        never written, so drafting it buys nothing), never past cache-full,
+        within the packed chunk cap. Drafts AFTER a draft EOS are dropped —
+        a never-drafted engine stops at the EOS, so later lanes could never
+        be emitted (the EOS itself stays: accepting it finishes the request
+        a step early). Returns {slot: drafts} with only non-empty
+        entries."""
+        drafts: dict[int, list[int]] = {}
+        for slot in np.flatnonzero(np.asarray(live)
+                                   & (np.asarray(remaining) == 0)):
+            req = self._slots[slot]
+            k = min(self.draft_len,
+                    req.max_new_tokens - len(req.out_tokens) - 1,
+                    self.max_len - 2 - int(self._lengths[slot]),
+                    self._chunk_cap - 1)
+            if k <= 0:
+                continue
+            seq = np.concatenate([np.asarray(req.prompt, np.int32),
+                                  np.asarray(req.out_tokens, np.int32)])
+            d = list(self.trie.extend_path(seq, k)
+                     if self.prefix_sharing else [])
+            while len(d) < k:
+                # iterate the n-gram top-up on the hypothetical extended
+                # sequence: a single call truncates at the output's loop
+                # period (the most recent earlier suffix occurrence is only
+                # one period back, so its follow run is period-long), and
+                # short-period loops are exactly where drafting pays most
+                more = ngram_propose(
+                    np.concatenate([seq, np.asarray(d, np.int32)]),
+                    k - len(d))
+                if not more:
+                    break
+                d += more
+            d = [int(x) for x in d[:k]]
+            if self.eos_id is not None and self.eos_id in d:
+                d = d[:d.index(self.eos_id) + 1]
+            if d:
+                drafts[slot] = d
+        return drafts
 
     def _write_positions(self, t_valid: np.ndarray, width: int) -> np.ndarray:
         """Flat pool scatter targets (B, width): token i of slot b lands at
@@ -1154,13 +1446,47 @@ class PagedEngine:
             for slot in np.flatnonzero(live):
                 remaining[slot] = (len(self._slots[slot].prompt)
                                    - int(self._prompt_pos[slot]))
+            drafts = (self._propose_drafts(live, remaining)
+                      if self.speculative else {})
+            n_drafts = np.zeros(self.max_batch, np.int64)
+            for slot, d in drafts.items():
+                n_drafts[slot] = len(d)
             needed = int(np.where(
-                live, np.minimum(np.maximum(remaining, 1), self._chunk_cap),
+                live, np.minimum(np.maximum(remaining, 1) + n_drafts,
+                                 self._chunk_cap),
                 0).sum())
             needed = min(needed, self.token_budget)
             width = next(w for w in self._widths if w >= needed)
-            t_valid = schedule_step_tokens(live, remaining, width,
-                                           self._chunk_cap)
+            if drafts:
+                # draft-worthwhileness gate: verify lanes are only worth a
+                # WIDER traced shape when they could fill at least half the
+                # extra lanes the step-up pads in — a step where one slot
+                # drafts a few tokens otherwise pays rung-width compute for
+                # the whole batch. Drafts riding inside the plain width
+                # (width == plain rung) are always kept: their lanes are
+                # free. Dropping a step's drafts is just not-drafting —
+                # outputs are unchanged (greedy parity holds either way).
+                plain = min(int(np.where(
+                    live, np.minimum(np.maximum(remaining, 1),
+                                     self._chunk_cap), 0).sum()),
+                    self.token_budget)
+                w_plain = next(w for w in self._widths if w >= plain)
+                if 2 * int(n_drafts.sum()) < width - w_plain:
+                    drafts = {}
+                    n_drafts[:] = 0
+                    width = w_plain
+            t_valid = schedule_step_tokens(
+                live, remaining, width, self._chunk_cap,
+                drafts=n_drafts if drafts else None)
+            if drafts:
+                # the scheduler may truncate drafts to fit the budget
+                for slot in list(drafts):
+                    d = drafts[slot][:max(int(t_valid[slot]) - 1, 0)]
+                    n_drafts[slot] = len(d)
+                    if d:
+                        drafts[slot] = d
+                    else:
+                        del drafts[slot]
             sid, off = pack_slot_ids(t_valid, width)
             toks = np.zeros(width, np.int32)
             positions = np.zeros(width, np.int32)
@@ -1170,8 +1496,10 @@ class PagedEngine:
                 if remaining[slot] > 0:      # prefill chunk (budget-sized)
                     pos = int(self._prompt_pos[slot])
                     toks[o:o + tv] = self._slots[slot].prompt[pos:pos + tv]
-                else:                        # decode: one lane
+                else:                        # decode: one lane (+ drafts)
                     toks[o] = self._last[slot]
+                    if tv > 1:
+                        toks[o + 1:o + tv] = drafts[slot]
                 positions[o:o + tv] = (int(self._lengths[slot])
                                        + np.arange(tv))
             self.lanes_valid += int(t_valid.sum())
@@ -1191,9 +1519,26 @@ class PagedEngine:
                 self.pad_lanes_skipped += max(
                     lockstep - width - (n_lockstep - 1) * riders, 0)
         with prof.phase("alloc_cow"):
-            self._grow_tables(t_valid)
-            if self.prefix_sharing:
-                self._cow_shared(t_valid)
+            if drafts:
+                # two-phase committed-first growth: the blocks a never-
+                # drafted step would allocate are popped from the free list
+                # FIRST, draft-only blocks after — so rejection's reverse-
+                # order frees restore the free list exactly. COW runs on the
+                # committed coverage only: the single held block in a decode
+                # slot's write range is the one containing position
+                # `length`, which a never-drafted step COWs identically;
+                # draft-reached blocks are freshly allocated, never shared.
+                t_commit = np.where(remaining > 0, t_valid,
+                                    np.minimum(t_valid, 1)).astype(np.int32)
+                self._grow_tables(t_commit)
+                if self.prefix_sharing:
+                    self._cow_shared(t_commit)
+                draft_allocs = self._grow_tables(t_valid)
+            else:
+                draft_allocs = []
+                self._grow_tables(t_valid)
+                if self.prefix_sharing:
+                    self._cow_shared(t_valid)
         with prof.phase("schedule"):
             wp = packed_write_positions(t_valid, off, self._tables,
                                         self._lengths, self.block_size, width)
@@ -1204,8 +1549,34 @@ class PagedEngine:
                       "write_pos": jnp.asarray(wp[None]),
                       "kv_len": jnp.asarray(kv_len),
                       "slot_ids": jnp.asarray(sid)}
+            fresh_np = None
             if self.quantized:
-                extras["fresh_blocks"] = jnp.asarray(self._take_fresh())
+                fresh_np = self._take_fresh()
+                extras["fresh_blocks"] = jnp.asarray(fresh_np)
+            snap_blocks = snap = staged = None
+            if drafts and self.quantized:
+                # pre-step snapshot of every block the drafting slots'
+                # verify rows can touch: draft lanes fold with a CLAMPED
+                # scale (draft_rows -> paged_quant_scatter), so committed
+                # lanes read bit-exact history, and after verification the
+                # snapshot is restored and exactly the committed rows are
+                # re-folded grow-wise (_restore_and_replay). stage_rows
+                # makes each layer emit its raw KV rows for that replay.
+                bs = self.block_size
+                blks = []
+                for slot in sorted(drafts):
+                    lo = int(self._lengths[slot])
+                    hi = lo + int(t_valid[slot])
+                    blks.extend(int(self._tables[slot, j])
+                                for j in range(lo // bs, -(-hi // bs)))
+                snap_blocks = np.full(self._snap_cap, TRASH_BLOCK, np.int32)
+                snap_blocks[:len(blks)] = blks
+                extras["stage_rows"] = jnp.zeros((), jnp.int32)
+                draft_rows = np.zeros(width, bool)
+                for slot in drafts:
+                    draft_rows[off[slot] + 1:off[slot]
+                               + int(t_valid[slot])] = True
+                extras["draft_rows"] = jnp.asarray(draft_rows[None])
             if self._use_grid:
                 # XLA attention-grid steering: cell (slot, i) of the (B, Wb)
                 # grid is the slot's i-th token this step; grid_pos maps
@@ -1226,14 +1597,42 @@ class PagedEngine:
                     kv_len_slot=jnp.asarray((self._lengths
                                              + t_valid).astype(np.int32)))
         with prof.phase("device"):
-            logits, self._cache = self._packed_fn(
-                self.w, self.hccs, jnp.asarray(toks[None]),
-                jnp.asarray(positions[None]), cache, extras,
-                jnp.asarray(lane_idx))
+            if snap_blocks is not None:
+                snap = _gather_block_state(self._cache["layers"],
+                                           jnp.asarray(snap_blocks))
+            if drafts:
+                # verify lanes: row i of a drafting slot is its i-th packed
+                # lane (clamped to its last); non-drafting slots repeat
+                # their sampling lane across the row
+                lane_grid = np.tile(lane_idx[:, None],
+                                    (1, self.draft_len + 1))
+                for slot in drafts:
+                    lane_grid[slot] = off[slot] + np.minimum(
+                        np.arange(self.draft_len + 1),
+                        int(t_valid[slot]) - 1)
+                logits, self._cache = self._packed_spec_fn(
+                    self.w, self.hccs, jnp.asarray(toks[None]),
+                    jnp.asarray(positions[None]), cache, extras,
+                    jnp.asarray(lane_grid.astype(np.int32)))
+                if self.quantized:
+                    layers = dict(self._cache["layers"])
+                    staged = (layers.pop("staged_k"),
+                              layers.pop("staged_v"))
+                    self._cache = dict(self._cache, layers=layers)
+            else:
+                logits, self._cache = self._packed_fn(
+                    self.w, self.hccs, jnp.asarray(toks[None]),
+                    jnp.asarray(positions[None]), cache, extras,
+                    jnp.asarray(lane_idx))
             if prof.enabled:
                 # fence async dispatch so device time lands in THIS phase
                 # instead of smearing into the host phases that follow
                 jax.block_until_ready(logits)
+        if drafts:
+            return self._verify_and_finish(live, t_valid, drafts, off, wp,
+                                           logits, draft_allocs,
+                                           snap_blocks, snap, staged,
+                                           fresh_np)
         return self._sample_and_finish(live, t_valid, logits)
 
     def _sample_and_finish(self, live, t_valid, logits) -> list[Request]:
@@ -1247,8 +1646,12 @@ class PagedEngine:
             samples = live & (self._prompt_pos + t_valid
                               >= np.asarray([len(r.prompt) if r else 1 << 30
                                              for r in self._slots]))
-            self._key, nxt = sample_tokens(
-                self._key, logits, np.where(samples, self._temps, 0.0))
+            # non-sampling slots go greedy (temp 0): their uid/index rows
+            # are placeholders that never reach the categorical path
+            nxt = sample_tokens(
+                self._key, logits, np.where(samples, self._temps, 0.0),
+                [r.uid if r else 0 for r in self._slots],
+                [len(r.out_tokens) if r else 0 for r in self._slots])
         finished = []
         for slot in np.flatnonzero(live):
             req = self._slots[slot]
@@ -1281,6 +1684,172 @@ class PagedEngine:
                      self._lengths[slot] >= self.max_len - 1)):
                 finished.append(self._finish(slot))
         return finished
+
+    def _verify_and_finish(self, live, t_valid, drafts, off, wp, logits,
+                           draft_allocs, snap_blocks, snap, staged,
+                           fresh_np) -> list[Request]:
+        """Speculative step tail: sample EVERY verify lane with the owning
+        request's per-(uid, position) key — bit-identical to the tokens a
+        never-drafted engine samples one step at a time — accept the
+        longest draft prefix that matches, emit the accepted run plus the
+        model's own token at the first mismatched lane, then roll the
+        rejected lanes back so the step leaves no trace of them.
+
+        Rollback, cheapest layer first:
+          * host bookkeeping — draft-only block allocations freed in
+            REVERSE allocation order (restores the free list exactly),
+            table entries back to -1, decremented reservations returned;
+          * fp pools — nothing: rejected rows sit beyond the new frontier,
+            masked by kv_len and plainly overwritten before any read;
+          * int8 pools — snapshot restore + committed-row replay
+            (_restore_and_replay) after EVERY verify step, accepted or
+            not: the in-step draft folds used a clamped scale (scratch),
+            so the committed rows are re-folded grow-wise onto the
+            restored pre-step blocks — exactly the never-drafted fold."""
+        prof = self.telemetry.profiler
+        bs = self.block_size
+        width = wp.shape[0]
+        kk1 = logits.shape[1]
+        with prof.phase("sample"):
+            samples = live & (self._prompt_pos + t_valid
+                              >= np.asarray([len(r.prompt) if r else 1 << 30
+                                             for r in self._slots]))
+            # one flat sampling batch over (slot, verify lane): lane i of a
+            # drafting slot is generation index len(out_tokens) + i, so
+            # every token folds exactly the key the never-drafted engine
+            # would; all other rows go greedy (temp 0) and are discarded
+            n_ver = np.ones(self.max_batch, np.int64)
+            for slot, d in drafts.items():
+                n_ver[slot] = 1 + len(d)
+            col = np.arange(kk1)[None, :]
+            do = samples[:, None] & (col < n_ver[:, None])
+            uids = np.asarray([r.uid if r else 0 for r in self._slots])
+            gen0 = np.asarray([len(r.out_tokens) if r else 0
+                               for r in self._slots])
+            toks = sample_tokens(
+                self._key,
+                jnp.reshape(jnp.asarray(logits), (-1, logits.shape[-1])),
+                np.where(do, self._temps[:, None], 0.0).reshape(-1),
+                np.repeat(uids, kk1),
+                (gen0[:, None] + col).reshape(-1),
+            ).reshape(self.max_batch, kk1)
+        finished_slots: list[int] = []
+        replay = np.zeros(width, bool)       # committed verify lanes
+        keep_blocks: dict[int, int] = {}     # slot -> committed block count
+        any_reject = False
+        for slot in np.flatnonzero(live):
+            req = self._slots[slot]
+            tv = int(t_valid[slot])
+            was_prefill = self._prompt_pos[slot] < len(req.prompt)
+            if slot not in drafts:
+                # identical to the never-drafted tail (_sample_and_finish),
+                # except finishes are deferred until after rollback so EOS
+                # frees append to a free list rollback already restored
+                self._lengths[slot] += tv
+                self._prompt_pos[slot] = min(self._prompt_pos[slot] + tv,
+                                             len(req.prompt))
+                if self.prefix_sharing and (was_prefill
+                                            or self.decode_sharing):
+                    with prof.phase("register"):
+                        self._register_blocks(slot, req)
+                if not samples[slot]:
+                    continue                 # still mid-prompt
+                tok = int(toks[slot, 0])
+                req.out_tokens.append(tok)
+                if self.telemetry.enabled and len(req.out_tokens) == 1:
+                    self.telemetry.metrics.on_first_token(req.uid)
+                self._last[slot] = tok
+                if (len(req.out_tokens) >= req.max_new_tokens or
+                        (self.eos_id is not None and tok == self.eos_id) or
+                        (not was_prefill and
+                         self._lengths[slot] >= self.max_len - 1)):
+                    finished_slots.append(slot)
+                continue
+            # drafting decode slot: longest matching prefix wins
+            d = drafts[slot]
+            k = len(d)
+            t_row = [int(toks[slot, i]) for i in range(1 + k)]
+            j = 0
+            while j < k and d[j] == t_row[j]:
+                j += 1
+            # emit t_row[0..j] under never-drafted finish semantics: stop
+            # at the first token that would have ended the request (budget,
+            # EOS, cache-full) — later accepted tokens must not leak out
+            L0 = int(self._lengths[slot])
+            emitted: list[int] = []
+            fin = False
+            for i in range(j + 1):
+                tok = t_row[i]
+                emitted.append(tok)
+                if (len(req.out_tokens) + len(emitted)
+                        >= req.max_new_tokens or
+                        (self.eos_id is not None and
+                         tok == self.eos_id) or
+                        L0 + 1 + i >= self.max_len - 1):
+                    fin = True
+                    break
+            m = len(emitted)
+            self.spec_steps += 1
+            self.drafted_tokens += k
+            self.accepted_tokens += m - 1
+            self.rejected_tokens += k - (m - 1)
+            if m < tv:
+                any_reject = True
+            # exactly the rows a never-drafted engine would have written:
+            # lanes 0..m-1 (the final emitted token's own KV lands on its
+            # NEXT step, or never — same as one-token-per-step decode)
+            replay[off[slot]:off[slot] + m] = True
+            keep_blocks[slot] = -(-(L0 + m) // bs)
+            self._lengths[slot] += m
+            req.out_tokens.extend(emitted)
+            if self.decode_sharing:
+                with prof.phase("register"):
+                    self._register_blocks(slot, req)
+            self._last[slot] = emitted[-1]
+            if fin:
+                finished_slots.append(slot)
+        with prof.phase("rollback"):
+            for slot, jdx, blk, resv_dec in reversed(draft_allocs):
+                if jdx < keep_blocks[slot]:
+                    continue                 # covered by committed rows
+                self.alloc.free([blk])
+                self._tables[slot, jdx] = -1
+                if resv_dec:
+                    self._resv[slot] += 1
+            if any_reject:
+                self.spec_rollbacks += 1
+            if self.quantized and snap_blocks is not None:
+                # the in-step draft folds were scratch (clamped scale);
+                # EVERY verify step restores the snapshot and re-folds
+                # exactly the committed rows grow-wise, so the pool is
+                # what a never-drafted run would hold even when all
+                # drafts were accepted. Snapshot blocks freshly
+                # allocated this step AND staying live get zeroed
+                # scales (the replay fold must see what a real step
+                # sees); freed draft blocks keep their restored stale
+                # payload+scale — the state a never-drafted run leaves
+                # on a never-allocated block
+                held = set()
+                for slot in drafts:
+                    row = self._tables[slot]
+                    held.update(int(b) for b in row[row >= 0])
+                fresh_live = ((set(int(b) for b in fresh_np) & held)
+                              - {TRASH_BLOCK})
+                fresh_mask = np.asarray(
+                    [int(b) in fresh_live for b in snap_blocks], bool)
+                replay_pos = np.where(
+                    replay, wp.astype(np.int64),
+                    TRASH_BLOCK * bs
+                    + np.arange(width, dtype=np.int64) % bs)
+                self._cache = dict(
+                    self._cache,
+                    layers=_restore_and_replay(
+                        self._cache["layers"], snap,
+                        jnp.asarray(snap_blocks),
+                        jnp.asarray(fresh_mask), staged[0], staged[1],
+                        jnp.asarray(
+                            replay_pos.astype(np.int32)[None])))
+        return [self._finish(slot) for slot in finished_slots]
 
     # --------------------------------------------------------------- run --
 

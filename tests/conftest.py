@@ -65,6 +65,11 @@ def pytest_addoption(parser):
                           "paged KV blocks (per-block per-kv-head scales); "
                           "only meaningful with --cache-layout paged "
                           "(CI runs packed + lockstep int8 legs)")
+    parser.addoption("--speculative", default="off", choices=("on", "off"),
+                     help="run the engine-level suites with trie-driven "
+                          "speculative decoding (draft/verify/rollback); "
+                          "only meaningful with --cache-layout paged "
+                          "--packed-step on (CI runs speculative legs)")
 
 
 def pytest_collection_modifyitems(config, items):
@@ -119,8 +124,14 @@ def kv_quant(request):
 
 
 @pytest.fixture
+def speculative(request):
+    """The --speculative option as a bool (paged packed engines only)."""
+    return request.config.getoption("--speculative") == "on"
+
+
+@pytest.fixture
 def make_engine(cache_layout, prefix_sharing, decode_sharing, packed_step,
-                kv_quant):
+                kv_quant, speculative):
     """Factory building the continuous-batching engine for the selected
     cache layout: ContinuousEngine (slot arena) or PagedEngine (block pool,
     optionally with --prefix-sharing prompt-prefix reuse, --decode-sharing
@@ -139,6 +150,9 @@ def make_engine(cache_layout, prefix_sharing, decode_sharing, packed_step,
             kw.setdefault("prefix_sharing", prefix_sharing)
             kw.setdefault("decode_sharing", decode_sharing)
             kw.setdefault("packed", packed_step)
+            # speculative decoding rides the packed step only; explicit
+            # lockstep engines built by individual tests stay non-spec
+            kw.setdefault("speculative", speculative and kw["packed"])
             return PagedEngine(params, cfg, **kw)
         from repro.serve import ContinuousEngine
         return ContinuousEngine(params, cfg, **kw)

@@ -112,6 +112,58 @@ def test_write_positions_no_cross_slot_leakage(state):
         assert int(wp[lane]) % bs == gpos % bs
 
 
+@st.composite
+def spec_step_states(draw):
+    """A step state plus per-slot draft proposals (speculative decoding):
+    drafts are drawn for EVERY slot — the scheduler must ignore them on
+    prefilling and dead slots (only decode slots verify drafts)."""
+    state = draw(step_states())
+    b = len(state[0])
+    drafts = np.asarray(
+        draw(st.lists(st.integers(0, 6), min_size=b, max_size=b)), np.int64)
+    return state, drafts
+
+
+@settings(max_examples=150, deadline=None)
+@given(spec_step_states())
+def test_schedule_drafts_contract(state_and_drafts):
+    """Speculative draft lanes ride the same packer contract: budget and
+    chunk cap still bind, every live slot still gets its guaranteed lane,
+    draft lanes go ONLY to decode slots, and the leftover budget is dealt
+    to decode drafts FIRST (slot order), prefill chunks after."""
+    (live, remaining, _, budget, chunk_cap), drafts = state_and_drafts
+    t_valid = schedule_step_tokens(live, remaining, budget, chunk_cap,
+                                   drafts=drafts)
+    cap = chunk_cap if chunk_cap is not None else budget
+    assert int(t_valid.sum()) <= budget
+    assert (t_valid[live] >= 1).all()
+    assert (t_valid[~live] == 0).all()
+    # decode slots: one committed lane + at most min(drafts, cap-1) draft
+    # lanes; prefill slots never read the drafts array at all
+    decode = live & (remaining == 0)
+    assert (t_valid[decode] <= 1 + np.minimum(drafts[decode],
+                                              max(cap, 1) - 1)).all()
+    prefill = live & (remaining > 0)
+    assert (t_valid[prefill] <= remaining[prefill]).all()
+    assert (t_valid[prefill] <= max(cap, 1)).all()
+    # drafts-first priority: any prefill slot holding extra lanes means
+    # every drafting decode slot already took its full draft allotment
+    if (t_valid[prefill] > 1).any():
+        want = 1 + np.minimum(drafts[decode], max(cap, 1) - 1)
+        assert (t_valid[decode] == want).all()
+    # FIFO among drafting decode slots: a later slot only gets draft lanes
+    # after every earlier one is maxed out
+    drafting = np.flatnonzero(decode & (drafts > 0))
+    for a, b_ in zip(drafting, drafting[1:]):
+        if t_valid[b_] > 1:
+            assert t_valid[a] == 1 + min(int(drafts[a]), max(cap, 1) - 1)
+    # all-zero drafts is EXACTLY the pinned non-speculative layout
+    base = schedule_step_tokens(live, remaining, budget, chunk_cap)
+    spec0 = schedule_step_tokens(live, remaining, budget, chunk_cap,
+                                 drafts=np.zeros_like(drafts))
+    assert (base == spec0).all()
+
+
 @settings(max_examples=80, deadline=None)
 @given(step_states())
 def test_schedule_is_greedy_fifo(state):

@@ -234,6 +234,51 @@ def test_equal_chunk_content_under_distinct_parents(depth, c1, c2):
     assert set(got_a).isdisjoint(got_b)
 
 
+@given(st.lists(st.lists(st.integers(0, 3), min_size=1, max_size=4),
+                min_size=1, max_size=6),
+       st.integers(0, 10 ** 6), st.integers(0, 10 ** 6), st.integers(1, 12))
+@settings(max_examples=150, deadline=None)
+def test_extend_path_contract(seqs, pick, cut, k):
+    """Speculative-drafting contract of extend_path (the trie half of
+    trie-driven speculative decoding), on an arbitrary registered forest and
+    an arbitrary probe prefix:
+
+      * every full block of probe + drafts re-matches — the draft only ever
+        walks indexed chains, so len(match(probe + drafts)) ==
+        len(probe + drafts) // BS;
+      * at most k tokens are drafted;
+      * a probe with a full UNMATCHED block drafts nothing (no chain can
+        extend past content the trie has never seen);
+      * purity: drafting leaves the trie (index, LRU clock) and the
+        allocator untouched — a wrong draft must cost nothing."""
+    alloc = BlockAllocator(NUM_BLOCKS)
+    trie = PrefixTrie(alloc, BS)
+    model = TrieModel()
+    for chunk_ids in seqs:
+        _register(trie, model, alloc, chunk_ids, len(chunk_ids))
+    # probe: a token-level prefix of one registered sequence (cut lands
+    # mid-block as often as on a boundary, covering the partial-tail walk)
+    base = _tokens(seqs[pick % len(seqs)])
+    probe = base[:cut % (len(base) + 1)]
+
+    index0 = dict(trie._index)
+    lru0 = dict(trie._lru)
+    clock0, live0, free0 = trie._clock, alloc.num_live, alloc.num_free
+    drafts = trie.extend_path(probe, k)
+
+    assert len(drafts) <= k
+    ext = list(probe) + drafts
+    assert len(trie.match(ext)) == len(ext) // BS
+    # purity: no index/LRU/allocator side effects
+    assert trie._index == index0 and trie._lru == lru0
+    assert trie._clock == clock0
+    assert alloc.num_live == live0 and alloc.num_free == free0
+
+    # a probe the trie has NOT seen past a full block cannot be extended
+    alien = probe + [7] * BS               # token 7 is outside the alphabet
+    assert trie.extend_path(alien, k) == []
+
+
 @given(st.integers(1, 3), st.integers(1, 3))
 @settings(max_examples=50, deadline=None)
 def test_generated_block_insertion_matches_like_prompt(n_prompt, n_decode):

@@ -247,6 +247,51 @@ def test_snapshot_schema_stability(served, rng, enabled):
         assert format_snapshot(snap).startswith("telemetry snapshot")
 
 
+def _assert_no_nan(node, path="snap"):
+    if isinstance(node, dict):
+        for k, v in node.items():
+            _assert_no_nan(v, f"{path}.{k}")
+    elif isinstance(node, (list, tuple)):
+        for i, v in enumerate(node):
+            _assert_no_nan(v, f"{path}[{i}]")
+    elif isinstance(node, float):
+        assert node == node, f"NaN at {path}"
+
+
+def test_snapshot_mid_run_never_crashes(served, rng):
+    """A snapshot taken MID-FLIGHT (unfinished requests, zero finished, a
+    speculative engine that has not drafted yet) must render and serialize:
+    every empty distribution reports None (percentile([]) -> None), the
+    draft acceptance_rate is None until something was drafted, and nothing
+    anywhere is NaN — dashboards poll snapshot() on live engines."""
+    cfg, params = served
+    eng = PagedEngine(params, cfg.replace(cache_layout="paged",
+                                          speculative=True),
+                      max_batch=4, max_len=64, block_size=8, packed=True,
+                      prefix_sharing=True, decode_sharing=True,
+                      telemetry=Telemetry(enabled=True))
+    # before ANY work: no steps, no finished requests, empty trie
+    for snap_point in range(3):
+        snap = eng.snapshot()
+        assert set(snap) == SNAPSHOT_KEYS
+        for dist in ("ttft", "tpot", "e2e", "queue_wait"):
+            if snap["latency"]["requests"] == 0:
+                assert snap["latency"][dist]["count"] == 0
+                assert snap["latency"][dist]["p50"] is None
+        if snap["prefix"]["tokens_drafted"] == 0:
+            assert snap["prefix"]["acceptance_rate"] is None
+        _assert_no_nan(snap)
+        assert json.dumps(snap)
+        assert format_snapshot(snap).startswith("telemetry snapshot")
+        if snap_point == 0:               # go mid-flight: some steps, no
+            for r in _requests(rng, 3, max_new=24):   # finishes yet
+                eng.submit(r)
+            eng.step()
+            eng.step()
+        elif snap_point == 1:
+            eng.run()                     # drained: finished requests exist
+
+
 @pytest.mark.parametrize("name", ["wave", "continuous", "paged"])
 def test_phase_coverage_gate(served, rng, name):
     """>= 90% of measured step wall time must be attributed to named phases
