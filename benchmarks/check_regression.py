@@ -133,6 +133,29 @@ def metric_specs(ref: dict) -> list:
          ("latency_slo", "tok_per_s"), HIGHER, TOL_THROUGHPUT),
         ("latency_slo.phase_coverage",
          ("latency_slo", "phase_coverage"), HIGHER, TOL_STRUCTURAL),
+        # overload section (serve/admission.py): resume parity is exact-or-
+        # fail — a preempted request's greedy output must stay token-
+        # identical to the uncontended run, so the band is ZERO
+        ("overload.resume_token_parity",
+         ("overload", "resume_token_parity"), HIGHER, 0.0),
+        # the parity sub-run is fully seeded (no clocks), so its trie-riding
+        # resume skip rate is deterministic — tight band
+        ("overload.parity_reprefill_skip_rate",
+         ("overload", "parity_reprefill_skip_rate"), HIGHER, TOL_STRUCTURAL),
+        ("overload.tok_per_s",
+         ("overload", "tok_per_s"), HIGHER, TOL_THROUGHPUT),
+        # per-class fairness under 2x overload: the HIGH class's SLO-failure
+        # rate (deadline miss + shed + rejected) must not blow up (failure
+        # rates under deliberate overload are queueing-noise-sensitive, so
+        # the band is the wide one)
+        ("overload.per_class[2].slo_fail_rate",
+         ("overload", "per_class", "2", "slo_fail_rate"),
+         LOWER, TOL_LATENCY),
+        # the HIGH class's TTFT p95 under overload (queue wait included):
+        # the latency the priority machinery exists to protect
+        ("overload.per_class[2].ttft_p95_ms",
+         ("overload", "per_class", "2", "ttft_p95_ms"),
+         LOWER, TOL_LATENCY),
     ]
     for m in ("ttft", "tpot", "e2e"):
         for q in ("p50", "p95", "p99"):

@@ -63,6 +63,20 @@ step-phase coverage, as the `latency_slo` section of BENCH_serving.json;
 benchmarks/check_regression.py gates fresh runs against those committed
 numbers.
 
+An OVERLOAD workload (open-loop again, but HOSTILE): arrivals at ~2x the
+engine's measured closed-loop capacity, an UNDERSIZED block pool (half the
+slot-arena equivalent), three priority classes with per-request E2E
+deadlines, a bounded queue with shed-lowest-priority backpressure, and
+priority preemption on (serve/admission.py). Records per-class
+deadline-miss and SLO-failure rates (miss + shed + rejected) and TTFT p95;
+the SLO-failure ordering is the fairness signal — the high class must fail
+at most as often as the low class (asserted) — and preemption /
+exhaustion / shed counts, and the re-prefill skip rate of resumed
+requests. A second, contention-only sub-run (no deadlines, no bound)
+forces real preemptions by arrival order and asserts every preempted
+request's greedy output TOKEN-IDENTICAL to an uncontended run of the same
+requests — `resume_token_parity`, gated at zero tolerance.
+
 Cache bytes are reported as cache_bytes_logical AND cache_bytes_padded:
 with the decode kernel active the arena is lane-padded (head_dim -> 128),
 so the raw allocation is up to 4x the logical cache — reporting both keeps
@@ -88,8 +102,9 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import model as M
-from repro.serve import (ContinuousEngine, PagedEngine, Request, ServeEngine,
-                         Telemetry, drive_open_loop, kv_cache_byte_stats)
+from repro.serve import (AdmissionConfig, ContinuousEngine, PagedEngine,
+                         Request, RobustnessCounters, ServeEngine, Telemetry,
+                         drive_open_loop, kv_cache_byte_stats, percentile)
 
 VOCAB = 512
 MAX_BATCH = 8
@@ -143,6 +158,32 @@ def _prefix_workload(rng, n):
                             int(rng.choice([4, 8, 12, 20]))).astype(np.int32)
         out = int(rng.choice([4, 8, 16], p=[.4, .35, .25]))
         reqs.append(Request(uid=i, prompt=np.concatenate([system, tail]),
+                            max_new_tokens=out))
+    return reqs
+
+
+def _overload_workload(rng, n, classes=3):
+    """Tiered overload traffic (the regime priority preemption exists for):
+    the BATCH tier (class 0) runs long generations that pin pool blocks for
+    most of the run, the INTERACTIVE top tier is short and
+    latency-sensitive, the middle tier sits between. Short interactive
+    arrivals landing on a pool full of long batch work is what forces the
+    reservation gate to preempt rather than queue."""
+    reqs = []
+    for i in range(n):
+        c = i % classes
+        if c == 0:
+            plen = int(rng.choice([22, 30, 46]))
+            out = int(rng.choice([32, 48]))
+        elif c == classes - 1:
+            plen = int(rng.choice([6, 10, 14]))
+            out = int(rng.choice([4, 8]))
+        else:
+            plen = int(rng.choice([10, 14, 22]))
+            out = int(rng.choice([8, 16]))
+        reqs.append(Request(uid=i, priority=c,
+                            prompt=rng.integers(0, VOCAB,
+                                                plen).astype(np.int32),
                             max_new_tokens=out))
     return reqs
 
@@ -612,6 +653,196 @@ def run(fast: bool = True, engines: list | None = None,
               "phase_coverage,%.2f" % (tps, lat["queue_depth_peak"],
                                        phases["coverage"] or 0))
 
+    # OVERLOAD: the open-loop driver again, but hostile — ~2x measured
+    # capacity on an UNDERSIZED pool, three priority classes, E2E deadlines,
+    # bounded queue + shed backpressure, preemption on. The per-class miss
+    # rates are the fairness signal (strict priority must protect the high
+    # class); the parity sub-run is the correctness gate for preemption
+    # resume (token-identical to an uncontended run, zero tolerance).
+    ovl_out = None
+    if engines is None or any(e.startswith("paged") for e in names):
+        classes = 3
+        # a QUARTER of the slot-arena equivalent: tight enough that the
+        # reservation gate stalls under load, which is what routes overload
+        # through preemption (not just queueing + shed)
+        nblk = MAX_BATCH * (MAX_LEN // BLOCK_SIZE) // 4 + 1
+        tel = Telemetry(enabled=True)
+        eng = PagedEngine(
+            params, cfg, block_size=BLOCK_SIZE, max_batch=MAX_BATCH,
+            max_len=MAX_LEN, num_blocks=nblk, prefix_sharing=True,
+            packed=True, telemetry=tel,
+            admission=AdmissionConfig(max_queue=2 * MAX_BATCH,
+                                      backpressure="shed-lowest-priority",
+                                      preemption=True))
+        # two warm drains: the first compiles, the second measures the
+        # engine's CLOSED-LOOP capacity on this pool — which sets both the
+        # 2x-overload arrival rate and a deadline the uncontended engine
+        # would comfortably meet
+        # capacity is measured on the SAME tiered workload the overload run
+        # uses — the batch tier's long generations make it several times
+        # heavier per request than the mixed workload, and calibrating on
+        # the lighter mix would turn "2x capacity" into ~10x
+        owarm = _overload_workload(np.random.default_rng(43), n,
+                                   classes=classes)
+        cap_rps = None
+        for timed_pass in (False, True):
+            # chunks of MAX_BATCH stay under the queue bound, so the warm
+            # drains never shed work (a shed warm request would skew the
+            # capacity estimate AND leave its jit shapes cold)
+            work = copy.deepcopy(owarm)
+            t0 = time.perf_counter()
+            wdone = []
+            while work:
+                for r in work[:MAX_BATCH]:
+                    eng.submit(r)
+                work = work[MAX_BATCH:]
+                wdone.extend(eng.run())
+            if timed_pass:
+                cap_rps = len(wdone) / (time.perf_counter() - t0)
+        # the warm drains bumped the cumulative robustness counters and left
+        # a prefix-cache cushion of evictable blocks (the gate prefers
+        # evicting those over preempting); the timed segment starts clean
+        eng.clear_prefix_cache()
+        eng.robust_counters = RobustnessCounters()
+        tel.reset()
+        # SLA shape: the interactive top class gets the tight deadline,
+        # lower classes progressively looser ones (batch tiers tolerate
+        # latency) — which also keeps low-class work ALIVE long enough for
+        # the reservation gate to preempt it, instead of deadline expiry
+        # acting as the only pressure valve
+        deadline = 8.0 / cap_rps
+        oreqs = _overload_workload(np.random.default_rng(41), 2 * n,
+                                   classes=classes)
+        # the interactive tier's deadline covers its own service time plus
+        # bounded queueing (it must be MEETABLE under priority protection —
+        # a deadline nobody can hit measures nothing); the batch tier's is
+        # loose enough to survive being preempted and resumed
+        for r in oreqs:
+            r.deadline_e2e = deadline * (4, 8, 16)[classes - 1 - r.priority]
+        arrivals = np.cumsum(np.random.default_rng(47).exponential(
+            1.0 / (2.0 * cap_rps), len(oreqs)))
+        row, _ = _timed(eng, lambda: drive_open_loop(eng, oreqs, arrivals))
+        # the engine only returns what it finished or failed itself; shed /
+        # rejected requests are marked in place, so outcomes come off oreqs
+        assert all(r.done or r.failed for r in oreqs), \
+            "overload run left requests unaccounted"
+        ttfts = {c: [] for c in range(classes)}
+        for t in tel.metrics.finished:
+            if t.ttft is not None:
+                ttfts[t.uid % classes].append(t.ttft)
+        per_class = {}
+        for c in range(classes):
+            cs = [r for r in oreqs if r.priority == c]
+            missed = sum((r.fail_reason or "").startswith("deadline")
+                         for r in cs if r.failed)
+            lost = sum(r.failed for r in cs) - missed
+            p95 = percentile(ttfts[c], 95)
+            per_class[str(c)] = dict(
+                submitted=len(cs), finished=sum(r.done for r in cs),
+                deadline_missed=missed, shed_or_rejected=lost,
+                deadline_miss_rate=missed / max(len(cs), 1),
+                # the fairness signal: the fraction of the class's traffic
+                # that failed its SLO for ANY reason (deadline, shed,
+                # rejected). Raw deadline-miss rate alone inverts under
+                # shed-lowest-priority — the low class gets shed before it
+                # can miss, which flatters its miss rate.
+                slo_fail_rate=(missed + lost) / max(len(cs), 1),
+                ttft_p95_ms=None if p95 is None else 1e3 * p95)
+        hi = per_class[str(classes - 1)]["slo_fail_rate"]
+        lo = per_class["0"]["slo_fail_rate"]
+        # epsilon absorbs total-collapse runs (a box so loaded that EVERY
+        # class fails ~everything — deadlines were calibrated before the
+        # load landed): there hi ~ lo ~ 1 and the ordering carries no
+        # signal. A genuine inversion (high class starved while the low
+        # class is served) shows hi >> lo and still fails.
+        assert hi <= lo + 0.10, (
+            f"priority inversion under overload: class {classes - 1} failed "
+            f"{hi:.0%} of its SLOs vs class 0's {lo:.0%}")
+        rb = row["snapshot"]["robustness"]
+
+        # parity sub-run: contention only (no deadlines, unbounded queue).
+        # Low-class requests admit first and high-class arrivals then stall
+        # the reservation gate, forcing real preemptions; every output must
+        # match the uncontended reference token for token. Shared-prefix
+        # traffic so the resumed victims' re-prefill rides the trie: the
+        # system-prompt blocks stay live-referenced by the preempting high
+        # class, hence survive the very pool pressure that evicted the
+        # victims (skip rate asserted > 0 below).
+        preqs = _prefix_workload(np.random.default_rng(53), n)
+        ref_eng = PagedEngine(params, cfg, block_size=BLOCK_SIZE,
+                              max_batch=MAX_BATCH, max_len=MAX_LEN,
+                              prefix_sharing=True, packed=True)
+        for r in copy.deepcopy(preqs):
+            ref_eng.submit(r)
+        ref_out = {r.uid: [int(t) for t in r.out_tokens]
+                   for r in ref_eng.run()}
+        # a pool barely over twice one request's worst case: the high-class
+        # arrivals cannot co-reside with the running low class, so the gate
+        # stalls and preemption must actually fire (asserted below — a
+        # parity gate over zero preemptions would be vacuous)
+        peng = PagedEngine(params, cfg, block_size=BLOCK_SIZE,
+                           max_batch=MAX_BATCH, max_len=MAX_LEN,
+                           num_blocks=14, prefix_sharing=True, packed=True,
+                           admission=AdmissionConfig(preemption=True))
+        work = copy.deepcopy(preqs)
+        for r in work:
+            r.priority = r.uid % 2
+        pdone = []
+        for r in work:
+            if r.priority == 0:
+                peng.submit(r)
+        # run the low class well into decode before the high class lands:
+        # preempted mid-generation, the victims carry out_tokens as resume
+        # state, so the re-prefill (and its trie skip rate) is exercised
+        for _ in range(6):
+            pdone.extend(peng.step())
+        for r in work:
+            if r.priority == 1:
+                peng.submit(r)
+        pdone.extend(peng.run())
+        parity = (sum(ref_out[r.uid] == [int(t) for t in r.out_tokens]
+                      for r in pdone) / max(len(pdone), 1))
+        assert parity == 1.0, \
+            f"preempted outputs diverged from uncontended run ({parity:.3f})"
+        assert peng.robust_counters.preemptions > 0, \
+            "parity sub-run forced no preemptions; the gate proved nothing"
+        assert peng.robust_counters.reprefill_skipped > 0, \
+            "resumed victims re-prefilled from scratch; trie riding broken"
+        tps = row["tokens"] / row["seconds"]
+        ovl_out = dict(arrival_rate=2.0 * cap_rps, capacity_rps=cap_rps,
+                       requests=len(oreqs), classes=classes,
+                       deadline_ms=1e3 * deadline, num_blocks=nblk,
+                       tok_per_s=tps, per_class=per_class,
+                       preemptions=rb["preemptions"],
+                       exhaustion_events=rb["exhaustion_events"],
+                       shed=rb["shed"], rejected=rb["rejected"],
+                       deadline_misses=rb["deadline_misses"]["total"],
+                       reprefill_skip_rate=rb["reprefill"]["skip_rate"],
+                       resume_token_parity=parity,
+                       parity_preemptions=(
+                           peng.robust_counters.preemptions),
+                       parity_reprefill_skip_rate=(
+                           peng.robust_counters.snapshot()
+                           ["reprefill"]["skip_rate"]), **row)
+        print("\n# overload (paged+packed+sharing, %.0f req/s ~ 2x capacity, "
+              "%d blocks, deadline %.0f ms): class, submitted, finished, "
+              "miss_rate, slo_fail_rate, ttft_p95_ms"
+              % (2.0 * cap_rps, nblk, 1e3 * deadline))
+        for c in sorted(per_class, reverse=True):
+            pc = per_class[c]
+            print("overload,class%s,%d,%d,%.2f,%.2f,%s" % (
+                c, pc["submitted"], pc["finished"], pc["deadline_miss_rate"],
+                pc["slo_fail_rate"],
+                "-" if pc["ttft_p95_ms"] is None
+                else "%.1f" % pc["ttft_p95_ms"]))
+        print("overload,totals,preempt=%d,exhaust=%d,shed=%d,misses=%d,"
+              "reprefill_skip=%.2f,parity=%.2f(preempt=%d,skip=%.2f)" % (
+                  rb["preemptions"], rb["exhaustion_events"], rb["shed"],
+                  rb["deadline_misses"]["total"],
+                  rb["reprefill"]["skip_rate"], parity,
+                  peng.robust_counters.preemptions,
+                  ovl_out["parity_reprefill_skip_rate"]))
+
     if json_path:
         with open(json_path, "w") as f:
             json.dump(dict(benchmark="serving_throughput",
@@ -625,7 +856,8 @@ def run(fast: bool = True, engines: list | None = None,
                            prefill_heavy=packed_out,
                            prefix_sharing=prefix_out,
                            multi_turn=mt_out, speculative=spec_out,
-                           kv_int8=kvq_out, latency_slo=slo_out),
+                           kv_int8=kvq_out, latency_slo=slo_out,
+                           overload=ovl_out),
                       f, indent=2)
         print(f"# wrote {json_path}")
     return out

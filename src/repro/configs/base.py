@@ -111,6 +111,15 @@ class ModelConfig:
     # trie, and int8 block bytes restored bit-identically).
     speculative: bool = False
     draft_len: int = 4
+    # overload robustness (serve/admission.py; strictly opt-in — all three
+    # at their defaults leave the serving engines on the exact legacy
+    # fail-fast FIFO path): queue_limit bounds QUEUED requests (0 =
+    # unbounded), backpressure picks the overflow policy, preemption lets
+    # the paged engine reclaim a lower-class request's blocks (re-queued
+    # with resume state) when a higher class would otherwise starve.
+    queue_limit: int = 0
+    backpressure: str = "reject"     # reject | shed-lowest-priority
+    preemption: bool = False
 
     def __post_init__(self):
         if self.num_heads and not self.head_dim:
@@ -139,6 +148,16 @@ class ModelConfig:
             raise ValueError("speculative decoding drafts against the prefix "
                              "trie and verifies via the packed token step; "
                              "it requires cache_layout == 'paged'")
+        if self.backpressure not in ("reject", "shed-lowest-priority"):
+            raise ValueError(
+                f"backpressure must be 'reject' | 'shed-lowest-priority', "
+                f"got {self.backpressure!r}")
+        if self.queue_limit < 0:
+            raise ValueError(
+                f"queue_limit must be >= 0, got {self.queue_limit}")
+        if self.preemption and self.cache_layout != "paged":
+            raise ValueError("preemption reclaims KV blocks from the paged "
+                             "pool; it requires cache_layout == 'paged'")
 
     @property
     def padded_vocab(self) -> int:

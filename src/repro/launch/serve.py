@@ -20,6 +20,23 @@ percentiles are measured under genuine queueing:
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --reduced \
         --scheduler paged --arrival-rate 16 --trace-out trace.jsonl
+
+Overload robustness (serve/admission.py; strictly opt-in): mixed priority
+classes, per-request E2E deadlines, a bounded queue with backpressure, and
+— on the paged engine — priority preemption by block reclaim:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --reduced \
+        --scheduler paged --arrival-rate 32 --priority-classes 3 \
+        --deadline-ms 4000 --queue-limit 8 --backpressure shed-lowest-priority
+
+`--chaos SEED` replaces the demo with a seeded fault-injection run
+(serve/chaos.py): arrival bursts, allocator exhaustion, mid-flight cancels,
+preemption storms, and device-step failures, with the engine's block
+-accounting invariants asserted after every step and a drain-to-empty check
+at the end:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --reduced \
+        --scheduler paged --chaos 0 --requests 24
 """
 from __future__ import annotations
 
@@ -81,6 +98,34 @@ def main():
                     help="packed-step token lanes per chunk step "
                          "(0 = max_batch * block_size, one lockstep chunk "
                          "step's lane count)")
+    ap.add_argument("--priority-classes", type=int, default=1, metavar="N",
+                    help="assign demo requests round-robin to N priority/SLA "
+                         "classes (0 = lowest); admission serves the highest "
+                         "class first and the paged engine may PREEMPT a "
+                         "lower class's blocks when a higher class would "
+                         "otherwise starve (continuous/paged scheduler)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0, metavar="T",
+                    help="per-request end-to-end deadline in milliseconds; "
+                         "requests past it are failed at the next step "
+                         "boundary (queued or running) with their blocks "
+                         "freed (continuous/paged scheduler)")
+    ap.add_argument("--queue-limit", type=int, default=0, metavar="N",
+                    help="bound the ADMISSION QUEUE (not running slots) to N "
+                         "requests; overflow is resolved by --backpressure "
+                         "(0 = unbounded; continuous/paged scheduler)")
+    ap.add_argument("--backpressure", default="reject",
+                    choices=["reject", "shed-lowest-priority"],
+                    help="bounded-queue overflow policy: 'reject' refuses "
+                         "the incoming request (QueueFull, the HTTP-429 "
+                         "analogue); 'shed-lowest-priority' drops the "
+                         "lowest-class newest QUEUED request instead")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="replace the demo with a seeded fault-injection "
+                         "run (serve/chaos.py): bursts, allocator "
+                         "exhaustion, cancels, preemption storms, device "
+                         "failures — engine invariants asserted after every "
+                         "step, pool drained to empty at the end (paged "
+                         "scheduler only)")
     ap.add_argument("--telemetry", action="store_true",
                     help="record request lifecycles (TTFT/TPOT/E2E "
                          "percentiles) and per-step phase timings, and print "
@@ -128,6 +173,27 @@ def main():
     if args.arrival_rate and args.turns > 1:
         raise SystemExit("--arrival-rate is a single-turn open-loop load "
                          "test; drop --turns")
+    if args.priority_classes < 1:
+        raise SystemExit(f"--priority-classes must be >= 1, got "
+                         f"{args.priority_classes}")
+    if args.deadline_ms < 0:
+        raise SystemExit(f"--deadline-ms must be >= 0, got "
+                         f"{args.deadline_ms}")
+    if args.queue_limit < 0:
+        raise SystemExit(f"--queue-limit must be >= 0, got "
+                         f"{args.queue_limit}")
+    robust_on = bool(args.priority_classes > 1 or args.deadline_ms
+                     or args.queue_limit or args.chaos is not None)
+    if robust_on and args.scheduler == "wave":
+        raise SystemExit("--priority-classes/--deadline-ms/--queue-limit/"
+                         "--chaos drive the step-at-a-time admission layer; "
+                         "use --scheduler continuous or paged")
+    if args.chaos is not None and args.scheduler != "paged":
+        raise SystemExit("--chaos injects faults into the paged block pool; "
+                         "use --scheduler paged")
+    if args.chaos is not None and (args.turns > 1 or args.arrival_rate):
+        raise SystemExit("--chaos drives its own submission schedule; drop "
+                         "--turns/--arrival-rate")
     telemetry_on = bool(args.telemetry or args.trace_out
                         or args.arrival_rate)
 
@@ -136,9 +202,9 @@ def main():
 
     from repro.configs import get_config, reduced_config
     from repro.models import model as M
-    from repro.serve import (ContinuousEngine, PagedEngine, Request,
-                             ServeEngine, Telemetry, drive_open_loop,
-                             format_snapshot)
+    from repro.serve import (AdmissionConfig, ChaosMonkey, ContinuousEngine,
+                             PagedEngine, QueueFull, Request, ServeEngine,
+                             Telemetry, drive_open_loop, format_snapshot)
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     if args.decode_kernel != "none":
@@ -152,6 +218,14 @@ def main():
     # a session's history grows every turn: the cache must hold all of them
     max_len = args.turns * (args.prompt_len + args.new_tokens) + 1
     tel = Telemetry(enabled=telemetry_on)
+    # the robustness layer is strictly opt-in: admission=None keeps the
+    # engines on the exact legacy fail-fast FIFO path (preemption only
+    # exists on the paged engine's block pool; continuous ignores it)
+    admission = None
+    if robust_on:
+        admission = AdmissionConfig(max_queue=args.queue_limit or None,
+                                    backpressure=args.backpressure,
+                                    preemption=(args.scheduler == "paged"))
     if args.scheduler == "paged":
         cfg = cfg.replace(cache_layout="paged",
                           prefix_sharing=args.prefix_sharing,
@@ -165,12 +239,13 @@ def main():
                           token_budget=args.token_budget or None,
                           speculative=args.speculative,
                           draft_len=args.draft_len,
-                          telemetry=tel)
+                          telemetry=tel, admission=admission)
     else:
         engine_cls = (ContinuousEngine if args.scheduler == "continuous"
                       else ServeEngine)
+        kw = {} if args.scheduler == "wave" else dict(admission=admission)
         eng = engine_cls(params, cfg, max_batch=args.max_batch,
-                         max_len=max_len, telemetry=tel)
+                         max_len=max_len, telemetry=tel, **kw)
     rng = np.random.default_rng(0)
     # with --prefix-sharing the single-turn demo traffic shares a system-
     # prompt-style prefix (~3/4 of the prompt, rounded DOWN to the block
@@ -187,7 +262,43 @@ def main():
                   f"({bs} tokens); prefix sharing cannot hit — lower "
                   f"--block-size or raise --prompt-len")
     shared = rng.integers(0, cfg.vocab_size, shared_len).astype(np.int32)
-    if args.turns > 1:
+
+    def robust_kw(i):
+        """Per-request robustness fields for demo request i (empty when the
+        layer is off, so Request construction is unchanged)."""
+        kw = {}
+        if args.priority_classes > 1:
+            kw["priority"] = int(i % args.priority_classes)
+        if args.deadline_ms:
+            kw["deadline_e2e"] = args.deadline_ms / 1000.0
+        return kw
+
+    if args.chaos is not None:
+        crng = np.random.default_rng(args.chaos)
+
+        def mk(i):
+            plen = int(crng.integers(4, args.prompt_len + 1))
+            return Request(
+                uid=i,
+                prompt=crng.integers(0, cfg.vocab_size,
+                                     plen).astype(np.int32),
+                max_new_tokens=int(crng.integers(2, args.new_tokens + 1)),
+                **robust_kw(i))
+
+        t0 = time.perf_counter()
+        report = ChaosMonkey(eng, seed=args.chaos, make_request=mk,
+                             n_requests=args.requests).run()
+        dt = time.perf_counter() - t0
+        done = report["finished"] + report["failed"]
+        faults = ", ".join(f"{k} x{v}"
+                           for k, v in sorted(report["faults"].items()))
+        print(f"chaos(seed={args.chaos}): survived {report['steps']} steps "
+              f"in {dt:.2f}s — {report['submitted']} submitted, "
+              f"{len(report['finished'])} finished, "
+              f"{len(report['failed'])} failed; "
+              f"faults: {faults or 'none injected'}")
+        print("invariants held after every step; pool fully reclaimed")
+    elif args.turns > 1:
         # multi-turn demo: each "request" is a chat session; every turn
         # submits a fresh user message on top of the engine-stored history,
         # so with --decode-sharing the follow-up turns prefix-match prior
@@ -198,9 +309,14 @@ def main():
             for i in range(args.requests):
                 msg = rng.integers(0, cfg.vocab_size,
                                    args.prompt_len).astype(np.int32)
-                eng.submit(Request(uid=args.requests * turn + i, prompt=msg,
-                                   max_new_tokens=args.new_tokens),
-                           session=f"session-{i}")
+                try:
+                    eng.submit(Request(uid=args.requests * turn + i,
+                                       prompt=msg,
+                                       max_new_tokens=args.new_tokens,
+                                       **robust_kw(i)),
+                               session=f"session-{i}")
+                except QueueFull:
+                    pass    # rejected turn: the session stays reusable
             done.extend(eng.run())
         dt = time.perf_counter() - t0
         total_new = sum(len(r.out_tokens) for r in done)
@@ -221,7 +337,8 @@ def main():
             tail = rng.integers(0, cfg.vocab_size,
                                 args.prompt_len - shared_len).astype(np.int32)
             reqs.append(Request(uid=i, prompt=np.concatenate([shared, tail]),
-                                max_new_tokens=args.new_tokens))
+                                max_new_tokens=args.new_tokens,
+                                **robust_kw(i)))
         arrivals = np.cumsum(rng.exponential(1.0 / args.arrival_rate,
                                              args.requests))
         t0 = time.perf_counter()
@@ -235,14 +352,35 @@ def main():
         for i in range(args.requests):
             tail = rng.integers(0, cfg.vocab_size,
                                 args.prompt_len - shared_len).astype(np.int32)
-            eng.submit(Request(uid=i, prompt=np.concatenate([shared, tail]),
-                               max_new_tokens=args.new_tokens))
+            try:
+                eng.submit(Request(uid=i,
+                                   prompt=np.concatenate([shared, tail]),
+                                   max_new_tokens=args.new_tokens,
+                                   **robust_kw(i)))
+            except QueueFull:
+                pass        # counted in robust_counters.rejected below
         t0 = time.perf_counter()
         done = eng.run()
         dt = time.perf_counter() - t0
         total_new = sum(len(r.out_tokens) for r in done)
         print(f"served {len(done)} requests, {total_new} tokens in {dt:.2f}s "
               f"({total_new / dt:.1f} tok/s)")
+    if robust_on:
+        rb = eng.robust_counters.snapshot()
+        dm, rp = rb["deadline_misses"], rb["reprefill"]
+        print(f"robustness: {rb['preemptions']} preemptions "
+              f"({rb['exhaustion_events']} pool-exhaustion reclaims), "
+              f"{rb['shed']} shed, {rb['rejected']} rejected, "
+              f"{rb['cancelled']} cancelled, {dm['total']} deadline misses "
+              f"(ttft {dm['ttft']}, e2e {dm['e2e']}), re-prefill "
+              f"{rp['skipped']}/{rp['tokens']} tokens skipped")
+        if args.priority_classes > 1:
+            for p, c in sorted(rb["per_class"].items(),
+                               key=lambda kv: -int(kv[0])):
+                print(f"  class {p}: {c['submitted']} submitted, "
+                      f"{c['finished']} finished, {c['preempted']} preempted, "
+                      f"{c['deadline_misses']} deadline misses, "
+                      f"{c['shed'] + c['rejected']} shed/rejected")
     cache = getattr(eng, "_cache", None)
     if cache is not None:
         # logical vs padded: with the decode kernel active the arena is

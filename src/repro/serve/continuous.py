@@ -44,6 +44,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import model as M
+from repro.serve.admission import (AdmissionQueue, QueueFull,
+                                   RobustnessCounters, as_admission)
 from repro.serve.engine import (Request, kv_cache_byte_stats, sample_tokens,
                                 validate_prompt,
                                 warn_decode_kernel_fallback)
@@ -53,7 +55,8 @@ from repro.serve.telemetry import as_telemetry, make_snapshot
 class ContinuousEngine:
     def __init__(self, params, cfg, *, max_batch: int = 8,
                  max_len: int = 512, eos_id: int | None = None,
-                 cache_dtype=None, min_bucket: int = 16, telemetry=None):
+                 cache_dtype=None, min_bucket: int = 16, telemetry=None,
+                 admission=None):
         if cfg.hot_buffer != 0:
             raise ValueError(
                 "continuous batching uses the slot arena, not hot buffers "
@@ -73,7 +76,18 @@ class ContinuousEngine:
         self.eos_id = eos_id
         self.cache_dtype = cache_dtype
         self.min_bucket = min_bucket
-        self._queue: list[Request] = []
+        # opt-in robustness layer (serve/admission.py): bounded priority
+        # queue + backpressure + deadlines. The slot arena has no block
+        # pool, so the paged engine's preemption/graceful-exhaustion halves
+        # do not apply here. admission=None keeps the plain FIFO list.
+        self._adm = as_admission(admission, cfg)
+        self._robust = self._adm is not None
+        if self._robust:
+            self._queue = AdmissionQueue(self._adm)
+        else:
+            self._queue: list[Request] = []
+        self.robust_counters = RobustnessCounters()
+        self._submitted_ts = np.zeros(max_batch, float)
         self._key = jax.random.PRNGKey(0)
         # request-lifecycle tracing + step-phase profiling (telemetry.py);
         # disabled by default — every hook below is a no-op flag check then
@@ -133,10 +147,68 @@ class ContinuousEngine:
     # ------------------------------------------------------------- queue --
 
     def submit(self, req: Request):
+        """Queue a request. With the robustness layer, the bounded-queue
+        backpressure policy runs here: "reject" raises QueueFull before any
+        state is touched; "shed-lowest-priority" drops the lowest-class
+        newest queued request (possibly this one, returned marked
+        failed/"shed")."""
         validate_prompt(req.prompt, self.max_len)
+        if self._robust:
+            rc = self.robust_counters
+            rc.klass(req.priority)["submitted"] += 1
+            try:
+                shed = self._queue.push(req, now=self._adm.clock())
+            except QueueFull:
+                rc.rejected += 1
+                rc.klass(req.priority)["rejected"] += 1
+                raise
+            for victim in shed:
+                rc.shed += 1
+                rc.klass(victim.priority)["shed"] += 1
+                victim.failed = True
+                victim.fail_reason = "shed"
+                if self.telemetry.enabled:
+                    self.telemetry.metrics.on_drop(victim.uid)
+            if req.failed:
+                return                   # shed on arrival: nothing enqueued
         if self.telemetry.enabled:
             self.telemetry.metrics.on_submit(req.uid, len(req.prompt))
-        self._queue.append(req)
+        if not self._robust:
+            self._queue.append(req)
+
+    def _expire_deadlines(self, now: float) -> list[Request]:
+        """Step-boundary deadline enforcement: queued requests past TTFT or
+        E2E expire in place; running slots past E2E are failed and freed
+        (TTFT cannot expire on a slot — admission prefill samples the first
+        token in the same call)."""
+        rc = self.robust_counters
+        failed = []
+        for req, reason in self._queue.expire(now):
+            if reason == "deadline_ttft":
+                rc.deadline_miss_ttft += 1
+            else:
+                rc.deadline_miss_e2e += 1
+            rc.klass(req.priority)["deadline_misses"] += 1
+            req.failed = True
+            req.fail_reason = reason
+            if self.telemetry.enabled:
+                self.telemetry.metrics.on_drop(req.uid)
+            failed.append(req)
+        for slot in np.flatnonzero(self._live):
+            req = self._slots[slot]
+            age = now - float(self._submitted_ts[slot])
+            if req.deadline_e2e is not None and age > req.deadline_e2e:
+                rc.deadline_miss_e2e += 1
+                rc.klass(req.priority)["deadline_misses"] += 1
+                req.failed = True
+                req.fail_reason = "deadline_e2e"
+                if self.telemetry.enabled:
+                    self.telemetry.metrics.on_drop(req.uid)
+                self._slots[slot] = None
+                self._live[slot] = False
+                self._temps[slot] = 0.0
+                failed.append(req)
+        return failed
 
     def _bucket(self, plen: int) -> int:
         b = self.min_bucket
@@ -151,6 +223,8 @@ class ContinuousEngine:
         req.done = True
         if self.telemetry.enabled:
             self.telemetry.metrics.on_finish(req.uid, len(req.out_tokens))
+        if self._robust:
+            self.robust_counters.klass(req.priority)["finished"] += 1
         self._slots[slot] = None
         self._live[slot] = False
         self._temps[slot] = 0.0
@@ -162,7 +236,13 @@ class ContinuousEngine:
         finished = []
         while self._queue and not self._live.all():
             slot = int(np.argmin(self._live))          # first free slot
-            req = self._queue.pop(0)
+            if self._robust:
+                entry = self._queue.pop_head()
+                req = entry.req
+                self._submitted_ts[slot] = entry.submit_ts
+                self.robust_counters.klass(req.priority)["admitted"] += 1
+            else:
+                req = self._queue.pop(0)
             if self.telemetry.enabled:
                 self.telemetry.metrics.on_admit(req.uid)
             plen = len(req.prompt)
@@ -244,8 +324,12 @@ class ContinuousEngine:
         no-op when the engine is idle."""
         prof = self.telemetry.profiler
         with prof.step():
+            finished: list[Request] = []
             with prof.phase("admit"):
-                finished = self._admit()
+                if self._robust:
+                    finished.extend(
+                        self._expire_deadlines(self._adm.clock()))
+                finished.extend(self._admit())
             if self.telemetry.enabled:
                 self.telemetry.metrics.sample_queue_depth()
             if self._live.any():
@@ -269,4 +353,6 @@ class ContinuousEngine:
             kv_cache=kv_cache_byte_stats(self._cache, self.cfg,
                                          self.max_len),
             occupancy=(self.occupancy_sum / self.occupancy_steps
-                       if self.occupancy_steps else None))
+                       if self.occupancy_steps else None),
+            robustness=(self.robust_counters.snapshot()
+                        if self._robust else None))

@@ -97,12 +97,27 @@ def kv_cache_byte_stats(cache, cfg, max_len: int | None = None) -> dict:
 
 @dataclasses.dataclass
 class Request:
+    """One serving request. The robustness fields (serve/admission.py) are
+    strictly opt-in: with the defaults every engine treats the request
+    exactly as before they existed. `done` means completed normally;
+    `failed` is the OTHER terminal state (shed / deadline miss / cancel /
+    device error, reason in `fail_reason`) — blocks are freed and sessions
+    stay reusable either way. A preempted request is neither: it re-queues
+    with `out_tokens` as resume state and `preemptions` bumped, and its
+    final output is token-identical to an uncontended run (sampling keys
+    fold (uid, generation index), not batch position)."""
     uid: int
     prompt: np.ndarray            # (t,) int32
     max_new_tokens: int = 32
     temperature: float = 0.0
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
+    priority: int = 0             # SLA class: higher admits (and evicts) first
+    deadline_ttft: float | None = None   # seconds, submit -> first token
+    deadline_e2e: float | None = None    # seconds, submit -> finish
+    failed: bool = False
+    fail_reason: str | None = None
+    preemptions: int = 0
 
 
 def validate_prompt(prompt, max_len: int):

@@ -171,6 +171,35 @@ ceil((prompt + max_new) / block_size), so alloc-on-frontier-crossing can
 never exhaust the pool mid-flight (the allocator still raises
 BlockPoolExhausted before corrupting state if driven past capacity by hand).
 
+OVERLOAD ROBUSTNESS (admission=AdmissionConfig, serve/admission.py —
+strictly opt-in; without it every path above is byte-identical): requests
+carry a priority/SLA class and optional TTFT/E2E deadlines, the queue
+becomes bounded with a backpressure policy, and the engine gains preemption
+by block reclaim, cancel(uid), and graceful pool exhaustion. A request's
+life under the layer:
+
+                 submit()                       _admit()
+    queued ────────────────► AdmissionQueue ──────────────► running
+      │  (priority order,         │                            │
+      │   bounded + shed/reject)  │ deadline past              │ EOS/budget
+      │                           ▼ (expire in place)          ▼
+      │ cancel(uid) ─────► failed("cancelled"|                done
+      │                     "deadline_*"|"shed")               ▲
+      ▼                                                        │
+    running ──► PREEMPTED (blocks freed refcount-aware;        │
+                out_tokens become resume state) ──► RE-QUEUED  │
+                (original seq + SLA clock) ──► RESUMED ────────┘
+                (re-prefill prompt + out_tokens rides the prefix
+                 trie, so most of it is skipped; sampling keys fold
+                 (uid, generation index) — resumed outputs are
+                 token-identical to a never-preempted run)
+
+Preemption picks the lowest class, most recently admitted victim
+(choose_victim); graceful exhaustion catches BlockPoolExhausted inside
+step(), unwinds the failing phase's partial allocations exactly (the
+alloc/COW journal), and preempts instead of crashing. serve/chaos.py is
+the seeded fault injector + invariant checker exercising all of it.
+
 When to prefer which engine: see the module docstrings of engine.py (wave)
 and continuous.py (slot arena), and ROADMAP.md "Serving architecture".
 """
@@ -185,6 +214,9 @@ import numpy as np
 from repro.models import model as M
 from repro.models.attention import (decode_kernel_blockers,
                                     kv_store_geometry, paged_quant_scatter)
+from repro.serve.admission import (AdmissionQueue, QueueFull,
+                                   RobustnessCounters, as_admission,
+                                   choose_victim)
 from repro.serve.engine import (Request, kv_cache_byte_stats, sample_tokens,
                                 validate_prompt,
                                 warn_decode_kernel_fallback)
@@ -696,7 +728,7 @@ class PagedEngine:
                  token_budget: int | None = None,
                  speculative: bool | None = None,
                  draft_len: int | None = None,
-                 telemetry=None):
+                 telemetry=None, admission=None):
         if cfg.hot_buffer != 0:
             raise ValueError(
                 "paged batching uses the block pool, not hot buffers "
@@ -739,7 +771,18 @@ class PagedEngine:
                              self._nblk_per_seq + 2)
         self.num_blocks = int(num_blocks)
         self.alloc = BlockAllocator(self.num_blocks)
-        self._queue: list[Request] = []
+        # opt-in overload-robustness layer (serve/admission.py + module
+        # docstring). admission=None with an all-default cfg keeps the
+        # legacy unbounded FIFO list and the fail-fast exhaustion path —
+        # byte-identical to the pre-robustness engine.
+        self._adm = as_admission(admission, cfg)
+        self._robust = self._adm is not None
+        if self._robust:
+            self._queue = AdmissionQueue(self._adm)
+        else:
+            self._queue: list[Request] = []
+        self.robust_counters = RobustnessCounters()
+        self._admit_counter = 0              # monotone admission order
         self._key = jax.random.PRNGKey(0)
         # request-lifecycle tracing + step-phase profiling (telemetry.py);
         # disabled by default — every hook below is a no-op flag check then
@@ -903,11 +946,22 @@ class PagedEngine:
         self._tables = np.full((max_batch, self._nblk_per_seq), -1, np.int32)
         self._resv = np.zeros(max_batch, np.int64)   # admission reservations
         self._slots: list[Request | None] = [None] * max_batch
+        # the FEED is the token sequence prefill must cover: req.prompt for
+        # a first admission, prompt + out_tokens for a request resuming
+        # after preemption (the KV rebuilds exactly, mostly skipped via the
+        # trie). Every per-step length/position check runs against the feed,
+        # never req.prompt, so resume is invisible to the step machinery.
+        self._feeds: list[np.ndarray | None] = [None] * max_batch
         self._live = np.zeros(max_batch, bool)
         self._lengths = np.zeros(max_batch, np.int32)
-        self._prompt_pos = np.zeros(max_batch, np.int32)  # prompt tokens fed
+        self._prompt_pos = np.zeros(max_batch, np.int32)  # feed tokens fed
         self._last = np.zeros(max_batch, np.int32)        # next token to feed
         self._temps = np.zeros(max_batch)
+        # robustness per-slot metadata: victim policy keys + deadline clocks
+        self._prio = np.zeros(max_batch, np.int64)
+        self._admit_seq = np.zeros(max_batch, np.int64)
+        self._qseq = np.zeros(max_batch, np.int64)   # queue seq (for requeue)
+        self._submitted_ts = np.zeros(max_batch, float)
         self._cache = init_paged_cache(cfg, self.num_blocks, bs, max_batch,
                                        cache_dtype)
 
@@ -983,7 +1037,13 @@ class PagedEngine:
         everything already decoded; with sharing off it degenerates to
         re-feeding the concatenated history (same outputs, full cost). The
         history (and the max_len bound) grows with every turn; a session
-        admits one turn at a time."""
+        admits one turn at a time.
+
+        With the robustness layer, submission additionally runs the
+        bounded-queue backpressure policy: "reject" raises QueueFull before
+        ANY engine or session state is touched; "shed-lowest-priority"
+        drops the lowest-class newest queued request — possibly this one,
+        which then returns marked failed/"shed" instead of queued."""
         prompt = req.prompt
         followup = False
         if session is not None:
@@ -1003,6 +1063,21 @@ class PagedEngine:
                 f"{self.num_blocks - 1} usable")
         # all validation passed: commit the concat + session bookkeeping
         req.prompt = prompt
+        if self._robust:
+            rc = self.robust_counters
+            rc.klass(req.priority)["submitted"] += 1
+            try:
+                shed = self._queue.push(req, now=self._adm.clock())
+            except QueueFull:
+                rc.rejected += 1
+                rc.klass(req.priority)["rejected"] += 1
+                raise
+            for victim in shed:
+                rc.shed += 1
+                rc.klass(victim.priority)["shed"] += 1
+                self._drop_request(victim, "shed")
+            if req.failed:
+                return                   # shed on arrival: nothing enqueued
         if self.telemetry.enabled:
             self.telemetry.metrics.on_submit(req.uid, len(prompt))
         if session is not None:
@@ -1010,7 +1085,8 @@ class PagedEngine:
             self._req_session[id(req)] = session
             if followup:
                 self._followups.add(id(req))
-        self._queue.append(req)
+        if not self._robust:
+            self._queue.append(req)
 
     def session_history(self, session):
         """Full token history (prompt + generated, every finished turn) of a
@@ -1019,11 +1095,49 @@ class PagedEngine:
         return None if hist is None else np.asarray(hist).copy()
 
     def end_session(self, session):
-        """Forget a session's history. Its cached KV stays in the trie until
-        evicted under pool pressure or clear_prefix_cache()."""
+        """Forget a session's history. A session with an IN-FLIGHT turn has
+        that turn cancelled first (the cancel() path: blocks freed
+        refcount-aware, the turn writes NO history — it never happened), so
+        ending a session is always safe and never orphans queue or slot
+        state. Cached KV stays in the trie until evicted under pool
+        pressure or clear_prefix_cache()."""
         if session in self._session_busy:
-            raise ValueError(f"session {session!r} has an in-flight turn")
+            for req_id, sid in list(self._req_session.items()):
+                if sid == session:
+                    req = next(
+                        (r for r in list(self._queue) + list(self._slots)
+                         if r is not None and id(r) == req_id), None)
+                    if req is not None:
+                        self.cancel(req.uid)
+            self._session_busy.discard(session)
         self._sessions.pop(session, None)
+
+    def cancel(self, uid) -> bool:
+        """Cancel a queued or running request by uid (public API, works with
+        or without the robustness layer). The request is marked failed with
+        reason "cancelled", its blocks are freed refcount-aware, and its
+        session turn — if any — is aborted with no history written, leaving
+        the session immediately reusable. Returns False when no queued or
+        running request has this uid."""
+        if self._robust:
+            req = self._queue.remove(uid)
+        else:
+            req = next((r for r in self._queue if r.uid == uid), None)
+            if req is not None:
+                self._queue.remove(req)
+        if req is None:
+            for slot in np.flatnonzero(self._live):
+                if self._slots[slot].uid == uid:
+                    req = self._slots[slot]
+                    self._release_slot(int(slot))
+                    break
+        if req is None:
+            return False
+        self._drop_request(req, "cancelled")
+        self.robust_counters.cancelled += 1
+        if self._robust:
+            self.robust_counters.klass(req.priority)["cancelled"] += 1
+        return True
 
     def _admit(self):
         """FIFO admission into free slots, gated on UNRESERVED free blocks
@@ -1038,24 +1152,53 @@ class PagedEngine:
         inside a shared block, and the copy-on-write copy needs a block.
         Index-only cached blocks are evicted on demand when the gate would
         otherwise stall (num_free alone still covers every reservation, so
-        eviction can only help, never deadlock)."""
+        eviction can only help, never deadlock).
+
+        With the robustness layer, the queue head is the highest class and
+        a stalled gate can PREEMPT instead of waiting: a live victim of a
+        STRICTLY lower class (lowest class, most recently admitted) is
+        released and re-queued with its generated tokens as resume state,
+        then the gate re-evaluates with the reclaimed blocks."""
         while self._queue and not self._live.all():
-            req = self._queue[0]
-            matched = (self._match_prefix(req.prompt)
+            entry = None
+            if self._robust:
+                entry = self._queue.head_entry()
+                req = entry.req
+            else:
+                req = self._queue[0]
+            # the feed is what prefill must cover: the prompt, plus — for a
+            # preempted request resuming — every token generated before
+            # preemption, re-fed so the KV rebuilds exactly (the trie skips
+            # whatever stayed cached). need is unchanged: the worst case
+            # len(prompt) + max_new equals len(feed) + remaining budget.
+            feed = (np.concatenate([np.asarray(req.prompt, np.int32),
+                                    np.asarray(req.out_tokens, np.int32)])
+                    if req.out_tokens else np.asarray(req.prompt, np.int32))
+            matched = (self._match_prefix(feed)
                        if self.prefix_sharing else [])
-            start = min(len(matched) * self.block_size, len(req.prompt) - 1)
+            start = min(len(matched) * self.block_size, len(feed) - 1)
             need = (self._blocks_for(len(req.prompt), req.max_new_tokens)
                     - len(matched))
             if len(matched) * self.block_size > start:
-                need += 1                    # full-prompt hit: COW copy block
+                need += 1                    # full-feed hit: COW copy block
             resv_other = int(self._resv.sum())
             protect = {blk for _, blk in matched}
             while (self.alloc.num_free - resv_other < need
                    and self._evict_one(protect)):
                 pass
             if self.alloc.num_free - resv_other < need:
+                if self._robust and self._adm.preemption:
+                    victim = choose_victim(
+                        np.flatnonzero(self._live), self._prio,
+                        self._admit_seq, below=int(req.priority))
+                    if victim is not None:
+                        self._preempt_slot(int(victim))
+                        continue             # gate re-evaluates, pool grew
                 break                        # wait for EOS to free blocks
-            self._queue.pop(0)
+            if self._robust:
+                self._queue.pop_head()
+            else:
+                self._queue.pop(0)
             slot = int(np.argmin(self._live))
             if self.telemetry.enabled:
                 self.telemetry.metrics.on_admit(req.uid)
@@ -1070,7 +1213,7 @@ class PagedEngine:
                 self.prefix_hits += bool(matched)
                 self.prompt_hits += any(o == "prompt" for o in origins)
                 self.decode_hits += any(o == "decode" for o in origins)
-            self.prefill_tokens_total += len(req.prompt)
+            self.prefill_tokens_total += len(feed)
             self.prefill_tokens_skipped += start
             # split the skip by matched-block origin (the last matched block
             # may contribute < block_size when the whole prompt matched and
@@ -1083,9 +1226,21 @@ class PagedEngine:
                 else:
                     self.prompt_tokens_skipped += skipped
             if id(req) in self._followups:
-                self.followup_prefill_tokens += len(req.prompt)
+                self.followup_prefill_tokens += len(feed)
                 self.followup_tokens_skipped += start
+            if self._robust:
+                rc = self.robust_counters
+                rc.klass(req.priority)["admitted"] += 1
+                if req.out_tokens:           # resumed after preemption
+                    rc.reprefill_tokens += len(feed)
+                    rc.reprefill_skipped += start
+                self._prio[slot] = int(req.priority)
+                self._qseq[slot] = entry.seq
+                self._submitted_ts[slot] = entry.submit_ts
+                self._admit_seq[slot] = self._admit_counter
+                self._admit_counter += 1
             self._slots[slot] = req
+            self._feeds[slot] = feed
             self._live[slot] = True
             self._lengths[slot] = start
             self._prompt_pos[slot] = start
@@ -1159,12 +1314,15 @@ class PagedEngine:
             self._evict_one()
         return self.alloc.alloc()
 
-    def _cow_shared(self, t_valid: np.ndarray):
+    def _cow_shared(self, t_valid: np.ndarray, journal: list | None = None):
         """Copy-on-write: a slot may only write into a block whose refcount
         is 1. Any shared block in this step's write range [length, length +
         t_valid) is copied to a fresh block first (device-side copy across
         all layers), the table entry is swapped, and the writer's reference
-        on the original is dropped — shared KV bytes stay immutable."""
+        on the original is dropped — shared KV bytes stay immutable. With
+        `journal`, each copy records ("cow", slot, j, old, new, resv_dec)
+        AFTER the swap, so _unwind_allocs can re-fork the source and return
+        the copy on a mid-phase BlockPoolExhausted."""
         bs = self.block_size
         for slot in np.flatnonzero(t_valid > 0):
             lo = int(self._lengths[slot])
@@ -1174,6 +1332,7 @@ class PagedEngine:
                 if self.alloc.ref(blk) <= 1:
                     continue
                 new = self._alloc_block()
+                resv_dec = self._resv[slot] > 0
                 self._resv[slot] = max(self._resv[slot] - 1, 0)
                 self._cache = dict(
                     self._cache,
@@ -1182,6 +1341,9 @@ class PagedEngine:
                 self.alloc.free([blk])       # drop this slot's reference
                 self._tables[slot, j] = new
                 self.cow_copies += 1
+                if journal is not None:
+                    journal.append(("cow", slot, j, blk, new,
+                                    bool(resv_dec)))
 
     def clear_prefix_cache(self):
         """Drop every index reference; blocks with no live holder return to
@@ -1252,6 +1414,25 @@ class PagedEngine:
 
     # ------------------------------------------------------------- slots --
 
+    def _release_slot(self, slot: int):
+        """Free a slot's block references and reset its host state — the
+        shared core of finish, preemption, cancellation and deadline
+        failure. Refcount-aware: blocks also referenced by the prefix index
+        (or shared with other slots) keep those references and stay
+        cached."""
+        row = self._tables[slot]
+        self.alloc.free(row[row >= 0])
+        row[:] = -1
+        self._resv[slot] = 0
+        self._slots[slot] = None
+        self._feeds[slot] = None
+        self._live[slot] = False
+        self._lengths[slot] = 0
+        self._prompt_pos[slot] = 0
+        self._temps[slot] = 0.0
+        self._reg_level[slot] = 0
+        self._reg_parent[slot] = -1
+
     def _finish(self, slot: int) -> Request:
         req = self._slots[slot]
         req.done = True
@@ -1266,22 +1447,80 @@ class PagedEngine:
                  np.asarray(req.out_tokens, np.int32)])
             self._session_busy.discard(session)
         self._followups.discard(id(req))
-        row = self._tables[slot]
-        # free-at-EOS drops this slot's references; blocks registered in the
-        # prefix index keep the index's reference and stay cached
-        self.alloc.free(row[row >= 0])
-        row[:] = -1
-        self._resv[slot] = 0
-        self._slots[slot] = None
-        self._live[slot] = False
-        self._lengths[slot] = 0
-        self._prompt_pos[slot] = 0
-        self._temps[slot] = 0.0
-        self._reg_level[slot] = 0
-        self._reg_parent[slot] = -1
+        if self._robust:
+            self.robust_counters.klass(req.priority)["finished"] += 1
+        self._release_slot(slot)
         return req
 
-    def _grow_tables(self, t_valid: np.ndarray):
+    def _preempt_slot(self, slot: int) -> Request:
+        """Preemption by block reclaim (module docstring): free the slot's
+        block references and re-queue the request with its generated tokens
+        as resume state, keeping its ORIGINAL queue seq and SLA clock. On
+        re-admission the feed (prompt + out_tokens) re-prefills — mostly
+        skipped via the prefix trie when sharing is on — and sampling keys
+        fold (uid, generation index), so the final output is
+        token-identical to a never-preempted run."""
+        req = self._slots[slot]
+        seq = int(self._qseq[slot])
+        ts = float(self._submitted_ts[slot])
+        self._release_slot(slot)
+        req.preemptions += 1
+        rc = self.robust_counters
+        rc.preemptions += 1
+        rc.klass(req.priority)["preempted"] += 1
+        self._queue.requeue(req, seq=seq, submit_ts=ts)
+        return req
+
+    def _drop_request(self, req: Request, reason: str) -> Request:
+        """Terminal failure shared by the shed / deadline / cancel /
+        device-error paths: the request ends without completing (done stays
+        False), its session turn is aborted with NO history extension (the
+        turn never happened), and the session is immediately reusable."""
+        req.failed = True
+        req.fail_reason = reason
+        session = self._req_session.pop(id(req), None)
+        if session is not None:
+            self._session_busy.discard(session)
+        self._followups.discard(id(req))
+        if self.telemetry.enabled:
+            self.telemetry.metrics.on_drop(req.uid)
+        return req
+
+    def _fail_slot(self, slot: int, reason: str) -> Request:
+        req = self._slots[slot]
+        self._release_slot(slot)
+        return self._drop_request(req, reason)
+
+    def _count_deadline(self, req: Request, reason: str):
+        rc = self.robust_counters
+        if reason == "deadline_ttft":
+            rc.deadline_miss_ttft += 1
+        else:
+            rc.deadline_miss_e2e += 1
+        rc.klass(req.priority)["deadline_misses"] += 1
+
+    def _expire_deadlines(self, now: float) -> list[Request]:
+        """Deadline enforcement at the step boundary: queued requests past
+        TTFT/E2E expire in place (AdmissionQueue.expire); running ones are
+        failed and their blocks freed. Misses count per class — the
+        fairness signal the overload benchmark gates on."""
+        failed = []
+        for req, reason in self._queue.expire(now):
+            self._count_deadline(req, reason)
+            failed.append(self._drop_request(req, reason))
+        for slot in np.flatnonzero(self._live):
+            req = self._slots[slot]
+            age = now - float(self._submitted_ts[slot])
+            if (req.deadline_ttft is not None and not req.out_tokens
+                    and age > req.deadline_ttft):
+                self._count_deadline(req, "deadline_ttft")
+                failed.append(self._fail_slot(int(slot), "deadline_ttft"))
+            elif req.deadline_e2e is not None and age > req.deadline_e2e:
+                self._count_deadline(req, "deadline_e2e")
+                failed.append(self._fail_slot(int(slot), "deadline_e2e"))
+        return failed
+
+    def _grow_tables(self, t_valid: np.ndarray, journal: list | None = None):
         """Alloc-on-frontier-crossing: extend each slot's table to cover
         lengths + t_valid before the step writes there. With kv_quant, every
         block allocated here is recorded as FRESH: its pool scale may be
@@ -1292,7 +1531,14 @@ class PagedEngine:
         decremented), ...] in allocation order — speculative steps grow in
         two phases (committed coverage first, then draft lanes) and roll the
         second phase's list back in REVERSE on rejection, which restores the
-        free list and the reservations exactly (_verify_and_finish)."""
+        free list and the reservations exactly (_verify_and_finish).
+
+        With `journal`, every allocation is ALSO appended there as
+        ("alloc", slot, j, block, resv_dec) so a mid-phase
+        BlockPoolExhausted can be unwound exactly (_unwind_allocs): the
+        allocator raises BEFORE mutating, so the journal holds precisely
+        the completed allocations and reverse-order frees restore the free
+        list byte-identically."""
         allocs = []
         for slot in np.flatnonzero(t_valid > 0):
             needed = -(-int(self._lengths[slot] + t_valid[slot])
@@ -1306,7 +1552,37 @@ class PagedEngine:
                 resv_dec = self._resv[slot] > 0
                 self._resv[slot] = max(self._resv[slot] - 1, 0)
                 allocs.append((slot, j, int(row[j]), bool(resv_dec)))
+                if journal is not None:
+                    journal.append(("alloc", slot, j, int(row[j]),
+                                    bool(resv_dec)))
         return allocs
+
+    def _unwind_allocs(self, journal: list):
+        """Roll back a failed alloc/COW phase in REVERSE journal order so
+        allocator, tables, reservations and the fresh-block list return to
+        their pre-phase state (the free list byte-identically: frees append
+        in the reverse of the pops). A COW whose SOURCE block was evicted
+        later in the same phase cannot re-fork it — the slot keeps its
+        private copy, which is valid (the bytes were copied) though no
+        longer shared."""
+        for op in reversed(journal):
+            if op[0] == "alloc":
+                _, slot, j, blk, resv_dec = op
+                if self.quantized and self._fresh and self._fresh[-1] == blk:
+                    self._fresh.pop()
+                self.alloc.free([blk])
+                self._tables[slot, j] = -1
+                if resv_dec:
+                    self._resv[slot] += 1
+            else:                            # ("cow", slot, j, old, new, dec)
+                _, slot, j, old, new, resv_dec = op
+                if self.alloc.ref(old):
+                    self.alloc.fork(old)
+                    self.alloc.free([new])
+                    self._tables[slot, j] = old
+                    self.cow_copies -= 1
+                if resv_dec:
+                    self._resv[slot] += 1
 
     def _take_fresh(self) -> np.ndarray:
         """Drain the fresh-block list into the static-size step array (padded
@@ -1397,11 +1673,11 @@ class PagedEngine:
             t_valid = np.zeros(self.max_batch, np.int32)
             toks = np.zeros((self.max_batch, width), np.int32)
             for slot in np.flatnonzero(live):
-                req = self._slots[slot]
+                feed = self._feeds[slot]
                 pos = int(self._prompt_pos[slot])
-                if pos < len(req.prompt):    # chunked prefill
-                    tv = min(width, len(req.prompt) - pos)
-                    toks[slot, :tv] = req.prompt[pos:pos + tv]
+                if pos < len(feed):          # chunked prefill
+                    tv = min(width, len(feed) - pos)
+                    toks[slot, :tv] = feed[pos:pos + tv]
                     t_valid[slot] = tv
                 else:                        # decode rides along, t_valid 1
                     toks[slot, 0] = self._last[slot]
@@ -1409,9 +1685,14 @@ class PagedEngine:
             self.lanes_valid += int(t_valid.sum())
             self.lanes_total += self.max_batch * width
         with prof.phase("alloc_cow"):
-            self._grow_tables(t_valid)
-            if self.prefix_sharing:
-                self._cow_shared(t_valid)
+            journal: list[tuple] = []
+            try:
+                self._grow_tables(t_valid, journal)
+                if self.prefix_sharing:
+                    self._cow_shared(t_valid, journal)
+            except BlockPoolExhausted:
+                self._unwind_allocs(journal)
+                raise
         with prof.phase("schedule"):
             cache = dict(self._cache, length=jnp.asarray(self._lengths))
             extras = {"block_table": jnp.asarray(self._tables),
@@ -1421,9 +1702,9 @@ class PagedEngine:
             if self.quantized:
                 extras["fresh_blocks"] = jnp.asarray(self._take_fresh())
         with prof.phase("device"):
-            logits, self._cache = self._step_fn(self.w, self.hccs,
-                                                jnp.asarray(toks), cache,
-                                                extras, jnp.asarray(t_valid))
+            logits, self._cache = self._call_device(
+                self._step_fn, self.w, self.hccs, jnp.asarray(toks), cache,
+                extras, jnp.asarray(t_valid))
             if prof.enabled:
                 # fence async dispatch so device time lands in THIS phase
                 # instead of smearing into the host phases that follow
@@ -1444,7 +1725,7 @@ class PagedEngine:
         with prof.phase("schedule"):
             remaining = np.zeros(self.max_batch, np.int64)
             for slot in np.flatnonzero(live):
-                remaining[slot] = (len(self._slots[slot].prompt)
+                remaining[slot] = (len(self._feeds[slot])
                                    - int(self._prompt_pos[slot]))
             drafts = (self._propose_drafts(live, remaining)
                       if self.speculative else {})
@@ -1495,7 +1776,7 @@ class PagedEngine:
                 o = int(off[slot])
                 if remaining[slot] > 0:      # prefill chunk (budget-sized)
                     pos = int(self._prompt_pos[slot])
-                    toks[o:o + tv] = self._slots[slot].prompt[pos:pos + tv]
+                    toks[o:o + tv] = self._feeds[slot][pos:pos + tv]
                 else:                        # decode: one lane (+ drafts)
                     toks[o] = self._last[slot]
                     if tv > 1:
@@ -1519,26 +1800,33 @@ class PagedEngine:
                 self.pad_lanes_skipped += max(
                     lockstep - width - (n_lockstep - 1) * riders, 0)
         with prof.phase("alloc_cow"):
-            if drafts:
-                # two-phase committed-first growth: the blocks a never-
-                # drafted step would allocate are popped from the free list
-                # FIRST, draft-only blocks after — so rejection's reverse-
-                # order frees restore the free list exactly. COW runs on the
-                # committed coverage only: the single held block in a decode
-                # slot's write range is the one containing position
-                # `length`, which a never-drafted step COWs identically;
-                # draft-reached blocks are freshly allocated, never shared.
-                t_commit = np.where(remaining > 0, t_valid,
-                                    np.minimum(t_valid, 1)).astype(np.int32)
-                self._grow_tables(t_commit)
-                if self.prefix_sharing:
-                    self._cow_shared(t_commit)
-                draft_allocs = self._grow_tables(t_valid)
-            else:
-                draft_allocs = []
-                self._grow_tables(t_valid)
-                if self.prefix_sharing:
-                    self._cow_shared(t_valid)
+            journal: list[tuple] = []
+            try:
+                if drafts:
+                    # two-phase committed-first growth: the blocks a never-
+                    # drafted step would allocate are popped from the free
+                    # list FIRST, draft-only blocks after — so rejection's
+                    # reverse-order frees restore the free list exactly. COW
+                    # runs on the committed coverage only: the single held
+                    # block in a decode slot's write range is the one
+                    # containing position `length`, which a never-drafted
+                    # step COWs identically; draft-reached blocks are
+                    # freshly allocated, never shared.
+                    t_commit = np.where(
+                        remaining > 0, t_valid,
+                        np.minimum(t_valid, 1)).astype(np.int32)
+                    self._grow_tables(t_commit, journal)
+                    if self.prefix_sharing:
+                        self._cow_shared(t_commit, journal)
+                    draft_allocs = self._grow_tables(t_valid, journal)
+                else:
+                    draft_allocs = []
+                    self._grow_tables(t_valid, journal)
+                    if self.prefix_sharing:
+                        self._cow_shared(t_valid, journal)
+            except BlockPoolExhausted:
+                self._unwind_allocs(journal)
+                raise
         with prof.phase("schedule"):
             wp = packed_write_positions(t_valid, off, self._tables,
                                         self._lengths, self.block_size, width)
@@ -1610,20 +1898,20 @@ class PagedEngine:
                     lane_grid[slot] = off[slot] + np.minimum(
                         np.arange(self.draft_len + 1),
                         int(t_valid[slot]) - 1)
-                logits, self._cache = self._packed_spec_fn(
-                    self.w, self.hccs, jnp.asarray(toks[None]),
-                    jnp.asarray(positions[None]), cache, extras,
-                    jnp.asarray(lane_grid.astype(np.int32)))
+                logits, self._cache = self._call_device(
+                    self._packed_spec_fn, self.w, self.hccs,
+                    jnp.asarray(toks[None]), jnp.asarray(positions[None]),
+                    cache, extras, jnp.asarray(lane_grid.astype(np.int32)))
                 if self.quantized:
                     layers = dict(self._cache["layers"])
                     staged = (layers.pop("staged_k"),
                               layers.pop("staged_v"))
                     self._cache = dict(self._cache, layers=layers)
             else:
-                logits, self._cache = self._packed_fn(
-                    self.w, self.hccs, jnp.asarray(toks[None]),
-                    jnp.asarray(positions[None]), cache, extras,
-                    jnp.asarray(lane_idx))
+                logits, self._cache = self._call_device(
+                    self._packed_fn, self.w, self.hccs,
+                    jnp.asarray(toks[None]), jnp.asarray(positions[None]),
+                    cache, extras, jnp.asarray(lane_idx))
             if prof.enabled:
                 # fence async dispatch so device time lands in THIS phase
                 # instead of smearing into the host phases that follow
@@ -1635,31 +1923,59 @@ class PagedEngine:
                                            fresh_np)
         return self._sample_and_finish(live, t_valid, logits)
 
+    def _call_device(self, fn, *args):
+        """Dispatch one jitted step function. In robust mode transient
+        failures are retried up to max_device_retries times — safe because
+        the chaos harness's fault wrappers raise BEFORE dispatching to the
+        real function, so the donated pool buffer is intact and the call
+        repeats bit-identically. Past the retry budget the error propagates
+        to step(), which fails every live slot with reason
+        "device_error"."""
+        if not self._robust:
+            return fn(*args)
+        retries = self._adm.max_device_retries
+        for attempt in range(retries + 1):
+            try:
+                return fn(*args)
+            except Exception:
+                self.robust_counters.device_retries += 1
+                if attempt == retries:
+                    raise
+
     def _sample_and_finish(self, live, t_valid, logits) -> list[Request]:
         """Shared step tail (lockstep and packed layouts): sample each slot
         that produced a next token, advance frontiers, register prefixes,
         finish slots at budget/EOS/cache-full."""
         prof = self.telemetry.profiler
         # a slot samples this step iff it produced a next token: decoding, or
-        # its prompt completed within this chunk
+        # its feed completed within this chunk
         with prof.phase("sample"):
-            samples = live & (self._prompt_pos + t_valid
-                              >= np.asarray([len(r.prompt) if r else 1 << 30
-                                             for r in self._slots]))
+            feed_len = np.asarray([len(f) if f is not None else 1 << 30
+                                   for f in self._feeds])
+            samples = live & (self._prompt_pos + t_valid >= feed_len)
+            finished: list[Request] = []
+            if self._robust and self._adm.nan_check:
+                # logits are a pure step OUTPUT (the KV write is unaffected),
+                # so only rows about to be sampled matter — a non-finite one
+                # fails its request with a reason instead of emitting garbage
+                bad = ~np.isfinite(np.asarray(logits)).all(axis=-1)
+                for slot in np.flatnonzero(samples & bad):
+                    finished.append(self._fail_slot(int(slot), "nan_logits"))
+                    live[slot] = False
+                    samples[slot] = False
             # non-sampling slots go greedy (temp 0): their uid/index rows
             # are placeholders that never reach the categorical path
             nxt = sample_tokens(
                 self._key, logits, np.where(samples, self._temps, 0.0),
                 [r.uid if r else 0 for r in self._slots],
                 [len(r.out_tokens) if r else 0 for r in self._slots])
-        finished = []
         for slot in np.flatnonzero(live):
             req = self._slots[slot]
             tv = int(t_valid[slot])
-            was_prefill = self._prompt_pos[slot] < len(req.prompt)
+            was_prefill = self._prompt_pos[slot] < feed_len[slot]
             self._lengths[slot] += tv
             self._prompt_pos[slot] = min(self._prompt_pos[slot] + tv,
-                                         len(req.prompt))
+                                         feed_len[slot])
             if self.prefix_sharing and (was_prefill or self.decode_sharing):
                 # registration precedes any possible _finish below, so a
                 # prompt that completes (or a block that fills at the decode
@@ -1711,9 +2027,9 @@ class PagedEngine:
         width = wp.shape[0]
         kk1 = logits.shape[1]
         with prof.phase("sample"):
-            samples = live & (self._prompt_pos + t_valid
-                              >= np.asarray([len(r.prompt) if r else 1 << 30
-                                             for r in self._slots]))
+            feed_len = np.asarray([len(f) if f is not None else 1 << 30
+                                   for f in self._feeds])
+            samples = live & (self._prompt_pos + t_valid >= feed_len)
             # one flat sampling batch over (slot, verify lane): lane i of a
             # drafting slot is generation index len(out_tokens) + i, so
             # every token folds exactly the key the never-drafted engine
@@ -1740,14 +2056,14 @@ class PagedEngine:
         for slot in np.flatnonzero(live):
             req = self._slots[slot]
             tv = int(t_valid[slot])
-            was_prefill = self._prompt_pos[slot] < len(req.prompt)
+            was_prefill = self._prompt_pos[slot] < feed_len[slot]
             if slot not in drafts:
                 # identical to the never-drafted tail (_sample_and_finish),
                 # except finishes are deferred until after rollback so EOS
                 # frees append to a free list rollback already restored
                 self._lengths[slot] += tv
                 self._prompt_pos[slot] = min(self._prompt_pos[slot] + tv,
-                                             len(req.prompt))
+                                             feed_len[slot])
                 if self.prefix_sharing and (was_prefill
                                             or self.decode_sharing):
                     with prof.phase("register"):
@@ -1861,25 +2177,67 @@ class PagedEngine:
 
     def step(self) -> list[Request]:
         """Admit from the queue and run ONE engine step; returns newly
-        finished requests. The step-at-a-time API arrival-driven serving
-        loops build on (run() is just step() until drained); a no-op when
-        the engine is idle."""
+        finished requests (including, in robust mode, requests ending in
+        failure: deadline expiry, NaN logits, device errors — check
+        Request.failed / fail_reason). The step-at-a-time API
+        arrival-driven serving loops build on (run() is just step() until
+        drained); a no-op when the engine is idle.
+
+        With graceful_exhaustion, BlockPoolExhausted never escapes: the
+        failing phase unwound its partial allocations (journal), so state
+        is exactly pre-step; a victim is preempted (lowest class, most
+        recently admitted — possibly the very slot that needed to grow,
+        which resumes output-identically once blocks return) and the next
+        step retries with the reclaimed blocks."""
         prof = self.telemetry.profiler
         with prof.step():
+            finished: list[Request] = []
             with prof.phase("admit"):
+                if self._robust:
+                    finished.extend(
+                        self._expire_deadlines(self._adm.clock()))
                 self._admit()
             if self.telemetry.enabled:
                 self.telemetry.metrics.sample_queue_depth()
             if not self._live.any():
-                assert not self._queue, "admission stalled with free pool"
-                return []
-            if self.packed:
-                return self._step_packed()
-            prefilling = any(
-                self._live[s]
-                and self._prompt_pos[s] < len(self._slots[s].prompt)
-                for s in range(self.max_batch) if self._slots[s] is not None)
-            return self._step(self.block_size if prefilling else 1)
+                # a robust queue may legitimately stall head-of-line (gate
+                # blocked with no preemptible lower class); without the
+                # layer a stalled queue beside a free pool is a scheduling
+                # bug
+                assert self._robust or not self._queue, \
+                    "admission stalled with free pool"
+                return finished
+            try:
+                if self.packed:
+                    finished.extend(self._step_packed())
+                else:
+                    prefilling = any(
+                        self._live[s]
+                        and self._prompt_pos[s] < len(self._feeds[s])
+                        for s in range(self.max_batch)
+                        if self._slots[s] is not None)
+                    finished.extend(
+                        self._step(self.block_size if prefilling else 1))
+            except BlockPoolExhausted:
+                if not (self._robust and self._adm.graceful_exhaustion):
+                    raise
+                self.robust_counters.exhaustion_events += 1
+                victim = choose_victim(np.flatnonzero(self._live),
+                                       self._prio, self._admit_seq)
+                if victim is not None:
+                    self._preempt_slot(int(victim))
+            except AssertionError:
+                raise                        # invariant violations stay loud
+            except Exception:
+                if not self._robust:
+                    raise
+                # device failure past max_device_retries: fail every live
+                # slot with a reason instead of wedging the engine — blocks
+                # freed, queue intact, the engine keeps serving
+                for slot in np.flatnonzero(self._live):
+                    finished.append(
+                        self._fail_slot(int(slot), "device_error"))
+            return finished
 
     def run(self) -> list[Request]:
         """Serve the whole queue; returns finished requests (uid order
@@ -1900,4 +2258,6 @@ class PagedEngine:
             occupancy=(self.occupancy_sum / self.occupancy_steps
                        if self.occupancy_steps else None),
             prefix=self.prefix_stats(),
-            padding=self.padding_stats())
+            padding=self.padding_stats(),
+            robustness=(self.robust_counters.snapshot()
+                        if self._robust else None))

@@ -82,7 +82,11 @@ import time
 
 import numpy as np
 
-SNAPSHOT_SCHEMA_VERSION = 1
+# v2 added the `robustness` section (admission/preemption/deadline counters
+# from serve/admission.py's RobustnessCounters; None for engines without the
+# opt-in layer) and RequestTrace.dropped / MetricsRegistry.on_drop for
+# requests ending in failure (shed, cancelled, deadline-expired)
+SNAPSHOT_SCHEMA_VERSION = 2
 
 # admission-wait histogram bucket edges (milliseconds, log-spaced); the last
 # bucket is open-ended
@@ -129,6 +133,7 @@ class RequestTrace:
     first_token_ts: float | None = None
     finish_ts: float | None = None
     n_tokens: int = 0
+    dropped: bool = False         # ended in failure (shed/cancel/deadline)
 
     @property
     def queue_wait(self):
@@ -199,6 +204,18 @@ class MetricsRegistry:
         t.finish_ts = self.clock()
         t.n_tokens = int(n_tokens)
         self.finished.append(t)
+
+    def on_drop(self, uid: int):
+        """A request ended in failure (shed / cancelled / deadline-expired /
+        device error): mark its trace dropped and rebalance queue_depth if
+        it was never admitted. Dropped traces never join the finished list,
+        so the latency percentiles summarize completed work only."""
+        t = self.traces.get(uid)
+        if t is None or t.dropped or t.finish_ts is not None:
+            return
+        t.dropped = True
+        if t.admit_ts is None:
+            self.queue_depth -= 1
 
     def sample_queue_depth(self):
         """Per-step queue-depth sample (drives the mean in the summary)."""
@@ -362,13 +379,16 @@ def as_telemetry(telemetry) -> Telemetry:
 
 
 def make_snapshot(engine: str, telemetry: Telemetry, *, kv_cache=None,
-                  occupancy=None, prefix=None, padding=None) -> dict:
+                  occupancy=None, prefix=None, padding=None,
+                  robustness=None) -> dict:
     """The unified, schema-versioned telemetry snapshot every engine's
     ``snapshot()`` returns, ``launch/serve.py`` prints, and the serving
     benchmark writes. Counter sections an engine doesn't have (and the
     latency/phase sections when telemetry is disabled) are None rather than
     absent, so the key set is STABLE across engines and settings — pinned
-    by tests/test_telemetry.py::test_snapshot_schema_stability."""
+    by tests/test_telemetry.py::test_snapshot_schema_stability.
+    `robustness` (schema v2) is RobustnessCounters.snapshot() for engines
+    running the opt-in admission layer, None otherwise."""
     enabled = telemetry.enabled
     return dict(
         schema_version=SNAPSHOT_SCHEMA_VERSION,
@@ -378,7 +398,8 @@ def make_snapshot(engine: str, telemetry: Telemetry, *, kv_cache=None,
         kv_cache=kv_cache,
         occupancy=occupancy,
         prefix=prefix,
-        padding=padding)
+        padding=padding,
+        robustness=robustness)
 
 
 def format_snapshot(snap: dict) -> str:
@@ -420,7 +441,11 @@ def drive_open_loop(eng, reqs, arrivals, *, clock=time.perf_counter,
     do NOT wait for the system — the load generator of every latency-SLO
     benchmark — so admission queueing lands in TTFT where it belongs.
     The engine needs the step-at-a-time API (`step()` + `busy`): paged or
-    continuous. Returns finished requests."""
+    continuous. Returns the requests the ENGINE returned (finished OR
+    failed); requests that never entered it — rejected by backpressure or
+    shed straight from the queue — are marked failed in place on `reqs`,
+    so per-request outcomes are always read off the input list."""
+    from repro.serve.admission import QueueFull
     arrivals = np.asarray(arrivals, float)
     if len(arrivals) != len(reqs):
         raise ValueError(f"{len(reqs)} requests but {len(arrivals)} arrivals")
@@ -432,7 +457,15 @@ def drive_open_loop(eng, reqs, arrivals, *, clock=time.perf_counter,
     while i < len(reqs) or eng.busy:
         now = clock() - t0
         while i < len(reqs) and arrivals[i] <= now:
-            eng.submit(reqs[i])
+            try:
+                eng.submit(reqs[i])
+            except QueueFull:
+                # backpressure="reject": the overload analogue of HTTP 429.
+                # The request never entered the engine, so mark it here —
+                # an open-loop load test must keep generating load, and the
+                # caller reads per-request outcomes off the reqs list.
+                reqs[i].failed = True
+                reqs[i].fail_reason = "rejected"
             i += 1
         if eng.busy:
             done.extend(eng.step())

@@ -44,19 +44,26 @@ def _snapshot():
         latency_slo=dict(arrival_rate=8.0, tok_per_s=85.0,
                          phase_coverage=0.98, ttft=dict(dist),
                          tpot=dict(dist), e2e=dict(dist)),
+        overload=dict(tok_per_s=900.0, resume_token_parity=1.0,
+                      parity_reprefill_skip_rate=0.75,
+                      per_class={"2": dict(slo_fail_rate=0.1,
+                                           ttft_p95_ms=770.0)}),
     )
 
 
 def test_specs_cover_every_section():
     names = [name for name, *_ in metric_specs(_snapshot())]
     for prefix in ("engines[", "prefill_heavy[", "prefix_sharing[",
-                   "multi_turn[", "kv_int8[", "latency_slo."):
+                   "multi_turn[", "kv_int8[", "latency_slo.", "overload."):
         assert any(n.startswith(prefix) for n in names), prefix
     # higher-is-better latency would be nonsense; spot-check directions
     spec = {name: (d, tol) for name, _, d, tol in metric_specs(_snapshot())}
     assert spec["latency_slo.ttft.p99"][0] == "lower"
     assert spec["engines[wave].tok_per_s"][0] == "higher"
     assert spec["kv_int8[int8].kv_bytes_vs_fp32"][0] == "lower"
+    assert spec["overload.per_class[2].slo_fail_rate"][0] == "lower"
+    # resume parity is exact-or-fail: zero tolerance band
+    assert spec["overload.resume_token_parity"] == ("higher", 0.0)
 
 
 def test_identity_passes():

@@ -527,6 +527,141 @@ def test_decode_block_churn_refcounts_and_drain(served, rng):
     assert (eng._tables == -1).all()
 
 
+def test_robust_block_churn_random_interleavings(served, rng):
+    """The churn test above under adversarial scheduling: a ROBUST engine
+    (priorities, deadlines on a fake clock, preemption) stepped manually
+    while a seeded adversary interleaves preemptions, cancellations, clock
+    jumps (deadline expiry) and late submissions between steps. After
+    EVERY step the chaos invariant checker must hold; afterwards every
+    request is terminal (done or failed) and the pool fully drains."""
+    from repro.serve import AdmissionConfig, assert_drained, check_invariants
+    cfg, params = served
+    fake = [0.0]
+    eng = PagedEngine(params, cfg, max_batch=2, max_len=64, block_size=8,
+                      num_blocks=12, prefix_sharing=True, decode_sharing=True,
+                      admission=AdmissionConfig(preemption=True,
+                                                clock=lambda: fake[0]))
+    reqs = []
+    for i in range(12):
+        r = Request(uid=i,
+                    prompt=rng.integers(0, 256,
+                                        int(rng.choice([9, 13, 21]))).astype(
+                        np.int32),
+                    max_new_tokens=int(rng.choice([4, 8])),
+                    priority=int(rng.integers(0, 3)))
+        if i % 4 == 0:                   # some SLAs tight enough to expire
+            r.deadline_e2e = 4.0         # on a clock-jump fault, some not
+        if i % 4 == 2:
+            r.deadline_ttft = 30.0
+        reqs.append(r)
+    i = steps = 0
+    while i < len(reqs) or eng.busy:
+        if i < len(reqs) and rng.random() < 0.6:
+            eng.submit(reqs[i])
+            i += 1
+        act = rng.random()
+        if act < 0.15:                   # preemption storm
+            live = np.flatnonzero(eng._live)
+            if len(live):
+                eng._preempt_slot(int(rng.choice(live)))
+        elif act < 0.30:                 # cancel a random uid (hit or miss)
+            eng.cancel(int(rng.integers(0, len(reqs))))
+        elif act < 0.40:                 # clock jump: deadlines expire
+            fake[0] += 3.0
+        eng.step()
+        fake[0] += 0.1
+        check_invariants(eng)
+        steps += 1
+        assert steps < 2000, "churn run did not converge"
+    assert all(r.done or r.failed for r in reqs)
+    assert eng.robust_counters.preemptions > 0
+    assert_drained(eng)
+
+
+def test_exhaustion_rollback_byte_identical(served, rng):
+    """Hand-driven BlockPoolExhausted on a NON-robust engine: blocks stolen
+    straight from the pool (below the reservation gate's assumptions) make
+    the next decode-boundary growth raise out of step(). The journal must
+    roll the step back to a byte-identical engine — free list ORDER,
+    refcounts, tables, reservations, lengths, queue, trie — so the caller
+    can free blocks and retry; the retried run finishes with outputs
+    token-identical to an uncontended run."""
+    cfg, params = served
+    reqs = _requests(rng, 2, lens=(13,), max_new=12)
+    ref_eng = PagedEngine(params, cfg, max_batch=2, max_len=64, block_size=8,
+                          packed=False)
+    for r in copy.deepcopy(reqs):
+        ref_eng.submit(r)
+    ref_out = {r.uid: r.out_tokens for r in ref_eng.run()}
+
+    eng = PagedEngine(params, cfg, max_batch=2, max_len=64, block_size=8,
+                      num_blocks=9, packed=False)
+
+    def snap(e):
+        return (list(e.alloc._free), dict(e.alloc._ref),
+                e._tables.tolist(), e._resv.tolist(), e._lengths.tolist(),
+                [r.uid for r in e._queue],
+                sorted(int(b) for b in e.trie.blocks()))
+
+    work = copy.deepcopy(reqs)
+    for r in work:
+        eng.submit(r)
+    while not eng._live.any():           # drive both into decode
+        eng.step()
+    for _ in range(2):
+        eng.step()
+    stolen = [eng.alloc.alloc() for _ in range(eng.alloc.num_free)]
+    assert eng.alloc.num_free == 0
+    raised = False
+    done = []
+    while eng.busy and not raised:
+        before = snap(eng)
+        try:
+            done.extend(eng.step())
+        except BlockPoolExhausted:
+            raised = True
+            assert snap(eng) == before   # the rollback contract
+    assert raised, "steal never forced a boundary crossing"
+    assert all(not r.failed for r in work)
+    eng.alloc.free(stolen)               # give the blocks back; retry runs
+    done.extend(eng.run())
+    assert {r.uid: r.out_tokens for r in done} == ref_out
+
+
+def test_end_session_cancels_in_flight_turn(served, rng):
+    """end_session() on a session whose turn is mid-decode: the turn is
+    cancelled (failed, reason "cancelled", no history written), the
+    session is immediately reusable, and a fresh turn on the same session
+    id behaves exactly like a first turn on a fresh engine."""
+    cfg, params = served
+    eng = PagedEngine(params, cfg, max_batch=2, max_len=64, block_size=8,
+                      num_blocks=12, prefix_sharing=True)
+    p1 = rng.integers(0, 256, 11).astype(np.int32)
+    p2 = rng.integers(0, 256, 9).astype(np.int32)
+    r1 = Request(uid=1, prompt=p1, max_new_tokens=16)
+    eng.submit(r1, session="s")
+    eng.step()
+    assert eng.busy and not r1.done
+    eng.end_session("s")
+    assert r1.failed and r1.fail_reason == "cancelled" and not r1.done
+    assert not eng.busy
+    # the aborted turn left no history: the next turn on "s" matches a
+    # first turn on an untouched engine
+    r2 = Request(uid=2, prompt=p2.copy(), max_new_tokens=6)
+    eng.submit(r2, session="s")
+    out = eng.run()
+    assert [r.uid for r in out] == [2] and r2.done
+    fresh = PagedEngine(params, cfg, max_batch=2, max_len=64, block_size=8,
+                        prefix_sharing=True)
+    rf = Request(uid=3, prompt=p2.copy(), max_new_tokens=6)
+    fresh.submit(rf, session="x")
+    fresh.run()
+    assert r2.out_tokens == rf.out_tokens
+    # nothing leaked: dropping the cache reclaims the whole pool
+    eng.clear_prefix_cache()
+    assert eng.alloc.num_free == eng.num_blocks - 1
+
+
 def test_watermark_parent_survives_eviction_and_cache_clear(served, rng):
     """Regression: under first-writer-wins, a live slot's registration
     watermark can point at ANOTHER chain's indexed block that the slot holds

@@ -15,9 +15,13 @@ from repro.serve import (ContinuousEngine, MetricsRegistry, PagedEngine,
                          drive_open_loop, format_snapshot, percentile)
 
 # the unified snapshot contract (telemetry.make_snapshot): every engine,
-# every telemetry setting, exactly these keys
+# every telemetry setting, exactly these keys. v2 added `robustness`
+# (admission/preemption/deadline counters; None off the robust path)
 SNAPSHOT_KEYS = {"schema_version", "engine", "latency", "phases", "kv_cache",
-                 "occupancy", "prefix", "padding"}
+                 "occupancy", "prefix", "padding", "robustness"}
+ROBUSTNESS_KEYS = {"preemptions", "exhaustion_events", "device_retries",
+                   "cancelled", "shed", "rejected", "deadline_misses",
+                   "reprefill", "per_class"}
 LATENCY_KEYS = {"requests", "ttft", "tpot", "e2e", "queue_wait",
                 "queue_wait_hist", "queue_depth_peak", "queue_depth_mean"}
 DIST_KEYS = {"count", "mean", "p50", "p95", "p99"}
@@ -230,8 +234,9 @@ def test_snapshot_schema_stability(served, rng, enabled):
     for name, eng in engines.items():
         snap = eng.snapshot()
         assert set(snap) == SNAPSHOT_KEYS
-        assert snap["schema_version"] == 1
+        assert snap["schema_version"] == 2
         assert snap["engine"] == name
+        assert snap["robustness"] is None    # none of these are robust
         assert set(snap["kv_cache"]) == {"cache_bytes_logical",
                                          "cache_bytes_padded"}
         if enabled:
@@ -245,6 +250,29 @@ def test_snapshot_schema_stability(served, rng, enabled):
             assert snap["prefix"] is None and snap["padding"] is None
         assert json.dumps(snap)           # JSON-serializable as-is
         assert format_snapshot(snap).startswith("telemetry snapshot")
+
+
+def test_snapshot_robustness_section(served, rng):
+    """A robust engine's snapshot carries the v2 `robustness` section with a
+    stable key set (JSON-serializable, str per-class keys), populated from
+    the run's admission/preemption counters."""
+    from repro.serve import AdmissionConfig
+    cfg, params = served
+    eng = PagedEngine(params, cfg, max_batch=2, max_len=64, block_size=8,
+                      admission=AdmissionConfig(preemption=True),
+                      telemetry=Telemetry(enabled=True))
+    for i, r in enumerate(_requests(rng, 4)):
+        r.priority = i % 2
+        eng.submit(r)
+    eng.run()
+    snap = eng.snapshot()
+    rb = snap["robustness"]
+    assert set(rb) == ROBUSTNESS_KEYS
+    assert set(rb["deadline_misses"]) == {"ttft", "e2e", "total"}
+    assert set(rb["reprefill"]) == {"tokens", "skipped", "skip_rate"}
+    assert all(isinstance(k, str) for k in rb["per_class"])
+    assert sum(pc["finished"] for pc in rb["per_class"].values()) == 4
+    assert json.dumps(snap)
 
 
 def _assert_no_nan(node, path="snap"):
