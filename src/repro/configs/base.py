@@ -111,6 +111,16 @@ class ModelConfig:
     # trie, and int8 block bytes restored bit-identically).
     speculative: bool = False
     draft_len: int = 4
+    # pipelined async engine loop (paged packed step only): dispatch step
+    # N+1's packed batch while step N's sampled tokens are still in flight —
+    # decode lanes read step N's on-device sampled-token array (token
+    # indirection inside the jitted step), and host-side commit (EOS
+    # detection, trie registration, telemetry) runs one step behind on the
+    # already-landed results. Greedy outputs are token-identical with the
+    # loop on or off; hot-temperature and speculative steps fall back to
+    # commit-then-dispatch ordering (host sampling / drafting need the
+    # landed tokens).
+    async_loop: bool = False
     # overload robustness (serve/admission.py; strictly opt-in — all three
     # at their defaults leave the serving engines on the exact legacy
     # fail-fast FIFO path): queue_limit bounds QUEUED requests (0 =
@@ -158,6 +168,10 @@ class ModelConfig:
         if self.preemption and self.cache_layout != "paged":
             raise ValueError("preemption reclaims KV blocks from the paged "
                              "pool; it requires cache_layout == 'paged'")
+        if self.async_loop and self.cache_layout != "paged":
+            raise ValueError("async_loop pipelines the paged engine's "
+                             "packed token step; it requires "
+                             "cache_layout == 'paged'")
 
     @property
     def padded_vocab(self) -> int:

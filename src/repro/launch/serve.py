@@ -10,6 +10,13 @@ the prior turns' KV — prompt AND generated — via decode-block sharing):
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --reduced \
         --scheduler paged --decode-sharing --turns 4
 
+Pipelined async loop (`--async-loop`): dispatch step N+1 while step N's
+sampled tokens are still in flight — host bookkeeping commits one step
+behind; greedy outputs are token-identical to the synchronous loop:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --reduced \
+        --scheduler paged --async-loop --requests 8
+
 Telemetry (serve/telemetry.py): `--telemetry` records request lifecycles
 (TTFT/TPOT/E2E percentiles) and a per-step phase breakdown and prints the
 unified snapshot; `--trace-out trace.jsonl` additionally writes the step
@@ -94,6 +101,12 @@ def main():
                          "token-identical (paged scheduler, packed layout)")
     ap.add_argument("--draft-len", type=int, default=4,
                     help="max draft tokens per decode step (--speculative)")
+    ap.add_argument("--async-loop", action="store_true",
+                    help="pipeline the paged engine's step loop: dispatch "
+                         "step N+1 while step N's sampled tokens are still "
+                         "in flight, committing host bookkeeping one step "
+                         "behind (greedy outputs stay token-identical; "
+                         "paged scheduler, packed layout)")
     ap.add_argument("--token-budget", type=int, default=0,
                     help="packed-step token lanes per chunk step "
                          "(0 = max_batch * block_size, one lockstep chunk "
@@ -163,6 +176,12 @@ def main():
     if args.speculative and args.step_layout == "lockstep":
         raise SystemExit("--speculative verifies all drafts in one packed "
                          "step; drop --step-layout lockstep")
+    if args.async_loop and args.scheduler != "paged":
+        raise SystemExit("--async-loop pipelines the paged engine's packed "
+                         "token step; use --scheduler paged")
+    if args.async_loop and args.step_layout == "lockstep":
+        raise SystemExit("--async-loop pipelines the packed token step; "
+                         "drop --step-layout lockstep")
     if args.arrival_rate < 0:
         raise SystemExit(f"--arrival-rate must be >= 0, got "
                          f"{args.arrival_rate}")
@@ -239,6 +258,7 @@ def main():
                           token_budget=args.token_budget or None,
                           speculative=args.speculative,
                           draft_len=args.draft_len,
+                          async_loop=args.async_loop,
                           telemetry=tel, admission=admission)
     else:
         engine_cls = (ContinuousEngine if args.scheduler == "continuous"

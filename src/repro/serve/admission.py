@@ -45,7 +45,6 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
-import time
 
 
 class QueueFull(RuntimeError):
@@ -69,7 +68,14 @@ class AdmissionConfig:
     max_device_retries: transient device-step failures retried this many
                         times before every live slot fails with reason
                         "device_error".
-    clock:              deadline clock (seconds; injectable for tests).
+    clock:              deadline clock override (seconds; injectable for
+                        tests). None — the default — means "the engine's
+                        serving clock": the engines resolve deadlines off
+                        their Telemetry instance's clock
+                        (telemetry.SERVING_CLOCK unless injected), so
+                        deadline-miss decisions and TTFT/E2E percentiles
+                        always read ONE timebase. Set this only to pin
+                        admission to a different clock on purpose.
     """
     max_queue: int | None = None
     backpressure: str = "reject"
@@ -77,7 +83,7 @@ class AdmissionConfig:
     graceful_exhaustion: bool = True
     nan_check: bool = False
     max_device_retries: int = 3
-    clock: object = time.monotonic
+    clock: object = None
 
     def __post_init__(self):
         if self.backpressure not in ("reject", "shed-lowest-priority"):

@@ -156,7 +156,8 @@ class ChaosMonkey:
         self._pending_raise = 0
         self._pending_nan = False
         self._orig = {}
-        for name in ("_step_fn", "_packed_fn", "_packed_spec_fn"):
+        for name in ("_step_fn", "_packed_fn", "_packed_spec_fn",
+                     "_packed_async_fn"):
             self._orig[name] = getattr(eng, name)
             setattr(eng, name, self._wrap(self._orig[name],
                                           allow_nan=name != "_packed_spec_fn"))
@@ -172,6 +173,9 @@ class ChaosMonkey:
             out = fn(*args)
             if self._pending_nan and allow_nan:
                 self._pending_nan = False
+                if len(out) == 3:            # async fn: (logits, sampled, cache)
+                    logits, sampled, cache = out
+                    return jnp.full_like(logits, jnp.nan), sampled, cache
                 logits, cache = out
                 return jnp.full_like(logits, jnp.nan), cache
             return out

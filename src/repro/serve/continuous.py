@@ -92,6 +92,14 @@ class ContinuousEngine:
         # request-lifecycle tracing + step-phase profiling (telemetry.py);
         # disabled by default — every hook below is a no-op flag check then
         self.telemetry = as_telemetry(telemetry)
+        # the UNIFIED serving clock: deadlines, queue timestamps and
+        # telemetry latencies all read one timebase (telemetry.SERVING_CLOCK
+        # unless a clock was injected into Telemetry); an explicit
+        # AdmissionConfig.clock still wins for deadline decisions so tests
+        # can pin admission to a fake clock independently.
+        self._clock = (self._adm.clock
+                       if self._robust and self._adm.clock is not None
+                       else self.telemetry.clock)
         # occupancy telemetry: running sum/count of the live fraction per
         # decode step (O(1) state — a long-lived engine never accumulates)
         self.occupancy_sum = 0.0
@@ -157,7 +165,12 @@ class ContinuousEngine:
             rc = self.robust_counters
             rc.klass(req.priority)["submitted"] += 1
             try:
-                shed = self._queue.push(req, now=self._adm.clock())
+                # open-loop drivers stamp the intended arrival time on the
+                # request; anchoring the deadline clock there charges a
+                # mid-step arrival's wait to queueing, not to the step
+                now = (req.arrival_ts if req.arrival_ts is not None
+                       else self._clock())
+                shed = self._queue.push(req, now=now)
             except QueueFull:
                 rc.rejected += 1
                 rc.klass(req.priority)["rejected"] += 1
@@ -172,7 +185,8 @@ class ContinuousEngine:
             if req.failed:
                 return                   # shed on arrival: nothing enqueued
         if self.telemetry.enabled:
-            self.telemetry.metrics.on_submit(req.uid, len(req.prompt))
+            self.telemetry.metrics.on_submit(req.uid, len(req.prompt),
+                                             ts=req.arrival_ts)
         if not self._robust:
             self._queue.append(req)
 
@@ -328,7 +342,7 @@ class ContinuousEngine:
             with prof.phase("admit"):
                 if self._robust:
                     finished.extend(
-                        self._expire_deadlines(self._adm.clock()))
+                        self._expire_deadlines(self._clock()))
                 finished.extend(self._admit())
             if self.telemetry.enabled:
                 self.telemetry.metrics.sample_queue_depth()

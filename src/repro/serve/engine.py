@@ -118,6 +118,12 @@ class Request:
     failed: bool = False
     fail_reason: str | None = None
     preemptions: int = 0
+    # intended arrival time (absolute seconds on the serving clock), stamped
+    # by open-loop drivers BEFORE submit. Engines anchor the telemetry
+    # submit timestamp and the admission queue's deadline clock here, so an
+    # arrival that came due during a long device step is measured from when
+    # it arrived, not from the post-step submit. None = "arrived at submit".
+    arrival_ts: float | None = None
 
 
 def validate_prompt(prompt, max_len: int):
@@ -195,7 +201,8 @@ class ServeEngine:
     def submit(self, req: Request):
         validate_prompt(req.prompt, self.max_len)
         if self.telemetry.enabled:
-            self.telemetry.metrics.on_submit(req.uid, len(req.prompt))
+            self.telemetry.metrics.on_submit(req.uid, len(req.prompt),
+                                             ts=req.arrival_ts)
         self._queue.append(req)
 
     def _sample(self, logits, temps: np.ndarray, wave):

@@ -200,6 +200,42 @@ step(), unwinds the failing phase's partial allocations exactly (the
 alloc/COW journal), and preempts instead of crashing. serve/chaos.py is
 the seeded fault injector + invariant checker exercising all of it.
 
+PIPELINED ASYNC LOOP (cfg.async_loop / PagedEngine(async_loop=True) —
+strictly opt-in; packed layout only): the synchronous loop serializes
+[dispatch N → fence → commit N → dispatch N+1], leaving the device idle
+while the host samples, detects EOS, registers prefixes and runs
+telemetry. The async loop dispatches step N+1 BEFORE committing step N,
+so step N's host bookkeeping overlaps step N+1's device execution (JAX
+async dispatch returns at enqueue; the donated pool buffer serializes the
+device side, so N+1 never reads a half-written pool):
+
+      device   ──[ step N ]──────[ step N+1 ]─────[ step N+2 ]──►
+                     │  sampled_N     ▲   │ sampled_N+1   ▲
+                     ▼  (on device)   │   ▼               │
+      host     ──[ dispatch N+1 ]──[ commit N ]──[ dispatch N+2 ]──
+                  tok_src indirection:    │  fence + land sampled_N:
+                  decode lanes read       │  append tokens, EOS/budget
+                  sampled_N on device     │  finishes, trie registration,
+                  (never lands on host)   │  telemetry — one step LATE
+                                          ▼
+                               _release_slot dead-marks the in-flight
+                               record; its writes for that slot die inert
+
+    Commit boundary contract: frontiers (_lengths/_prompt_pos, alloc/COW)
+    advance at DISPATCH — step N+1 schedules against post-N state without
+    knowing N's token VALUES (greedy only: the device argmax is
+    bit-identical to the host sampler's greedy path). Token-dependent
+    control flow moves to the commit, one step late: budget/cache-full
+    finishes are PREDICTED and excluded from the next schedule; EOS is
+    not predictable, so an EOS slot runs one extra in-flight step whose
+    writes are discarded at release (freed-block phantom rows are masked
+    by position-ordered write-before-read + int8 fresh-block scale
+    zeroing). Hot sampling and speculative drafting need landed values —
+    those steps degrade to commit-then-sync-step (async_sync_fallbacks).
+    Greedy outputs are token-identical with the loop on or off
+    (tests/test_async_loop.py runs the packed x sharing x int8 x
+    speculative parity matrix).
+
 When to prefer which engine: see the module docstrings of engine.py (wave)
 and continuous.py (slot arena), and ROADMAP.md "Serving architecture".
 """
@@ -728,6 +764,7 @@ class PagedEngine:
                  token_budget: int | None = None,
                  speculative: bool | None = None,
                  draft_len: int | None = None,
+                 async_loop: bool | None = None,
                  telemetry=None, admission=None):
         if cfg.hot_buffer != 0:
             raise ValueError(
@@ -787,6 +824,14 @@ class PagedEngine:
         # request-lifecycle tracing + step-phase profiling (telemetry.py);
         # disabled by default — every hook below is a no-op flag check then
         self.telemetry = as_telemetry(telemetry)
+        # the UNIFIED serving clock: deadline decisions, queue timestamps
+        # and telemetry latencies all read one timebase (the Telemetry
+        # instance's clock — telemetry.SERVING_CLOCK unless injected). An
+        # explicit AdmissionConfig.clock still wins for deadline decisions,
+        # so tests can pin admission to a fake clock independently.
+        self._clock = (self._adm.clock
+                       if self._robust and self._adm.clock is not None
+                       else self.telemetry.clock)
         # occupancy telemetry: running sum/count, O(1) state
         self.occupancy_sum = 0.0
         self.occupancy_steps = 0
@@ -888,6 +933,28 @@ class PagedEngine:
         self._use_grid = not (cfg.decode_kernel != "none"
                               and not decode_kernel_blockers(cfg)
                               and bool(params["hccs"]))
+        # pipelined async loop (module docstring, "Pipelined async loop"):
+        # dispatch step N+1 while step N's tokens are still in flight, with
+        # host commit running one step behind. Opt-in; packed-only (the
+        # lockstep layout is the parity baseline and stays strictly
+        # synchronous).
+        self.async_loop = bool(cfg.async_loop if async_loop is None
+                               else async_loop)
+        if self.async_loop and not self.packed:
+            raise ValueError(
+                "async_loop pipelines the packed token step; it requires "
+                "packed=True (the lockstep layout is the synchronous "
+                "parity baseline)")
+        # the in-flight packed step awaiting host commit (one deep — JAX
+        # queues the dispatch, the donated pool serializes execution):
+        # None, or the dict _dispatch_packed_async builds. See
+        # _commit_pending for the record's contract.
+        self._pending: dict | None = None
+        # pipelining accounting: steps that dispatched ahead of the
+        # previous step's commit vs. steps that had to commit first
+        # (hot sampling / speculative drafting need landed tokens)
+        self.async_overlapped_steps = 0
+        self.async_sync_fallbacks = 0
         # token-lane telemetry: padding efficiency is lanes_valid/lanes_total;
         # pad_lanes_skipped estimates the lanes the lockstep layout would
         # have burned for the same steps (packing's analogue of the prefix
@@ -944,6 +1011,16 @@ class PagedEngine:
 
         # block tables + host slot table
         self._tables = np.full((max_batch, self._nblk_per_seq), -1, np.int32)
+        # dirty-tracked DEVICE MIRRORS of _tables/_lengths: the step used to
+        # re-upload both via jnp.asarray(...) every step even when nothing
+        # changed (a decode step only crosses a block boundary every
+        # block_size tokens). The mirror is invalidated (set to None) at
+        # every host-side mutation — all of which go through the handful of
+        # methods below (_admit/_grow_tables/_cow_shared/_release_slot/
+        # _unwind_allocs and the commit-time length advances) — and rebuilt
+        # lazily by _device_tables()/_device_lengths().
+        self._tables_dev = None
+        self._lengths_dev = None
         self._resv = np.zeros(max_batch, np.int64)   # admission reservations
         self._slots: list[Request | None] = [None] * max_batch
         # the FEED is the token sequence prefill must cover: req.prompt for
@@ -1023,6 +1100,49 @@ class PagedEngine:
 
         self._packed_spec_fn = _packed_spec
 
+        # async-loop packed step: identical forward math to _packed_fn plus
+        # (a) TOKEN INDIRECTION — decode lanes whose feed token is the
+        # PREVIOUS step's still-in-flight sample read it from that step's
+        # on-device sampled array (tok_src[lane] = slot id, -1 = host-fed),
+        # so the host never blocks on a sample just to re-upload it — and
+        # (b) a device-side greedy sample (argmax over the vocab axis,
+        # bit-identical to sample_tokens' greedy path, which is
+        # np.asarray(jnp.argmax(logits, -1))) returned alongside the logits
+        # to feed the NEXT step's indirection. Kept separate from
+        # _packed_fn so sync engines are byte-for-byte untouched.
+        @functools.partial(jax.jit, donate_argnums=(6,))
+        def _packed_async(w, hccs, tokens, tok_src, prev_sampled, positions,
+                          cache, extras, lane_idx):
+            src = jnp.clip(tok_src, 0, prev_sampled.shape[0] - 1)
+            fed = jnp.where(tok_src >= 0, prev_sampled[src], tokens[0])
+            x, cache, _ = M.forward(
+                w, hccs, {"tokens": fed[None], "positions": positions},
+                cfg_, cache=dict(cache, **extras), decode=True)
+            h_last = x[0, lane_idx][:, None]             # (B, 1, D)
+            logits = M.logits_from_hidden(w, h_last, cfg_)
+            logits = logits[:, 0]
+            sampled = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return logits, sampled, cache
+
+        self._packed_async_fn = _packed_async
+        # prev_sampled placeholder for steps with no in-flight predecessor
+        # (every lane host-fed): a constant device array, uploaded once
+        self._no_pending_tokens = jnp.zeros(max_batch, jnp.int32)
+
+    # ----------------------------------------------- device mirrors --
+
+    def _device_tables(self):
+        """Device mirror of the host block tables, rebuilt only after a
+        host-side mutation (see the dirty-tracking note in __init__)."""
+        if self._tables_dev is None:
+            self._tables_dev = jnp.asarray(self._tables)
+        return self._tables_dev
+
+    def _device_lengths(self):
+        if self._lengths_dev is None:
+            self._lengths_dev = jnp.asarray(self._lengths)
+        return self._lengths_dev
+
     # ------------------------------------------------------------- queue --
 
     def _blocks_for(self, plen: int, max_new: int) -> int:
@@ -1067,7 +1187,12 @@ class PagedEngine:
             rc = self.robust_counters
             rc.klass(req.priority)["submitted"] += 1
             try:
-                shed = self._queue.push(req, now=self._adm.clock())
+                # open-loop drivers stamp the intended arrival time on the
+                # request; anchoring the deadline clock there charges a
+                # mid-step arrival's wait to queueing, not to the step
+                now = (req.arrival_ts if req.arrival_ts is not None
+                       else self._clock())
+                shed = self._queue.push(req, now=now)
             except QueueFull:
                 rc.rejected += 1
                 rc.klass(req.priority)["rejected"] += 1
@@ -1079,7 +1204,8 @@ class PagedEngine:
             if req.failed:
                 return                   # shed on arrival: nothing enqueued
         if self.telemetry.enabled:
-            self.telemetry.metrics.on_submit(req.uid, len(prompt))
+            self.telemetry.metrics.on_submit(req.uid, len(prompt),
+                                             ts=req.arrival_ts)
         if session is not None:
             self._session_busy.add(session)
             self._req_session[id(req)] = session
@@ -1243,6 +1369,8 @@ class PagedEngine:
             self._feeds[slot] = feed
             self._live[slot] = True
             self._lengths[slot] = start
+            self._tables_dev = None          # forked blocks joined the table
+            self._lengths_dev = None
             self._prompt_pos[slot] = start
             self._resv[slot] = need
             self._temps[slot] = req.temperature
@@ -1259,7 +1387,8 @@ class PagedEngine:
         session's follow-up turn matches straight through prior replies."""
         return self.trie.match(prompt)
 
-    def _register_blocks(self, slot: int, req: Request):
+    def _register_blocks(self, slot: int, req: Request,
+                         covered: int | None = None):
         """Index every block of this slot now FULLY covered by tokens whose
         values are known (frontier-crossing insertion). Without decode
         sharing that is the prompt-covered prefix; with it, the whole
@@ -1275,11 +1404,21 @@ class PagedEngine:
         survives the request's EOS; on equal content the first writer wins
         (the walk threads the INDEXED block into the next level's key, so a
         chain stays rooted in index blocks even when this slot's table
-        holds a COW copy or a duplicate)."""
+        holds a COW copy or a duplicate).
+
+        `covered` overrides the written-token count to register up to: the
+        async loop commits one step BEHIND dispatch, so at commit time the
+        slot's _lengths/_prompt_pos already include the NEXT in-flight
+        step's frontier advance, whose token values are not landed yet —
+        the commit passes the pending step's own post-step coverage
+        instead. The in-flight step only writes rows at or past that
+        coverage, so no registered (hence shared-refcount) block is ever a
+        write target of the step racing this registration."""
         bs = self.block_size
         plen = len(req.prompt)
-        covered = (int(self._lengths[slot]) if self.decode_sharing
-                   else min(int(self._prompt_pos[slot]), plen))
+        if covered is None:
+            covered = (int(self._lengths[slot]) if self.decode_sharing
+                       else min(int(self._prompt_pos[slot]), plen))
         n_levels = covered // bs
         parent = int(self._reg_parent[slot])
         for j in range(int(self._reg_level[slot]), n_levels):
@@ -1340,6 +1479,7 @@ class PagedEngine:
                                           jnp.int32(blk), jnp.int32(new)))
                 self.alloc.free([blk])       # drop this slot's reference
                 self._tables[slot, j] = new
+                self._tables_dev = None
                 self.cow_copies += 1
                 if journal is not None:
                     journal.append(("cow", slot, j, blk, new,
@@ -1423,6 +1563,8 @@ class PagedEngine:
         row = self._tables[slot]
         self.alloc.free(row[row >= 0])
         row[:] = -1
+        self._tables_dev = None
+        self._lengths_dev = None
         self._resv[slot] = 0
         self._slots[slot] = None
         self._feeds[slot] = None
@@ -1432,6 +1574,15 @@ class PagedEngine:
         self._temps[slot] = 0.0
         self._reg_level[slot] = 0
         self._reg_parent[slot] = -1
+        # async loop: the slot may have an uncommitted sample in the
+        # in-flight step (and the step after it may have written a phantom
+        # row into the blocks just freed — harmless: freed blocks always
+        # hold stale bytes, and the position-ordered write-before-read
+        # discipline plus fresh-block scale zeroing masks them). Mark it
+        # dead so _commit_pending skips it: its landed token is discarded,
+        # exactly as if the slot had never been scheduled.
+        if self._pending is not None:
+            self._pending["dead"][slot] = True
 
     def _finish(self, slot: int) -> Request:
         req = self._slots[slot]
@@ -1547,6 +1698,7 @@ class PagedEngine:
             held = int((row >= 0).sum())
             for j in range(held, needed):
                 row[j] = self._alloc_block()
+                self._tables_dev = None
                 if self.quantized:
                     self._fresh.append(int(row[j]))
                 resv_dec = self._resv[slot] > 0
@@ -1565,6 +1717,8 @@ class PagedEngine:
         later in the same phase cannot re-fork it — the slot keeps its
         private copy, which is valid (the bytes were copied) though no
         longer shared."""
+        if journal:
+            self._tables_dev = None
         for op in reversed(journal):
             if op[0] == "alloc":
                 _, slot, j, blk, resv_dec = op
@@ -1694,8 +1848,18 @@ class PagedEngine:
                 self._unwind_allocs(journal)
                 raise
         with prof.phase("schedule"):
-            cache = dict(self._cache, length=jnp.asarray(self._lengths))
-            extras = {"block_table": jnp.asarray(self._tables),
+            # dirty-tracked device mirrors: _tables only changes when a
+            # frontier crosses a block boundary (every block_size tokens),
+            # so most decode steps re-use the uploaded copy instead of
+            # transferring the whole (B, nblk) table again
+            # the mirrors must ride in `extras` (undonated): the cache
+            # argument is donated, so a mirror passed inside it would have
+            # its buffer invalidated after the step. extras merge AFTER the
+            # cache inside the jitted fn, so "length" here overrides the
+            # stale length the previous step's returned cache carries.
+            cache = self._cache
+            extras = {"length": self._device_lengths(),
+                      "block_table": self._device_tables(),
                       "write_pos": jnp.asarray(
                           self._write_positions(t_valid, width)),
                       "kv_len": jnp.asarray(self._lengths + t_valid)}
@@ -1712,6 +1876,14 @@ class PagedEngine:
         return self._sample_and_finish(live, t_valid, logits)
 
     def _step_packed(self) -> list[Request]:
+        """One PACKED engine step — dispatches to the synchronous tail
+        (default) or the pipelined async loop (cfg.async_loop; see the
+        module docstring's pipeline diagram)."""
+        if self.async_loop:
+            return self._step_packed_async()
+        return self._step_packed_sync()
+
+    def _step_packed_sync(self) -> list[Request]:
         """One PACKED token step: the step's work — a chunk of any length per
         prefilling slot plus one token per decoding slot — flattened into a
         ragged (1, width) token batch with per-token slot ids, positions and
@@ -1832,8 +2004,13 @@ class PagedEngine:
                                         self._lengths, self.block_size, width)
             kv_len = np.where(sid >= 0, positions + 1, 0).astype(np.int32)
             lane_idx = np.maximum(off + t_valid - 1, 0).astype(np.int32)
-            cache = dict(self._cache, length=jnp.asarray(self._lengths))
-            extras = {"block_table": jnp.asarray(self._tables),
+            # dirty-tracked device mirrors (see _step): skip the per-step
+            # _tables/_lengths re-upload when the host copies are unchanged
+            # mirrors ride in `extras` (undonated; see _step) — the donated
+            # cache arg would invalidate them after the step
+            cache = self._cache
+            extras = {"length": self._device_lengths(),
+                      "block_table": self._device_tables(),
                       "write_pos": jnp.asarray(wp[None]),
                       "kv_len": jnp.asarray(kv_len),
                       "slot_ids": jnp.asarray(sid)}
@@ -1923,6 +2100,258 @@ class PagedEngine:
                                            fresh_np)
         return self._sample_and_finish(live, t_valid, logits)
 
+    # ------------------------------------------- pipelined async loop --
+
+    def _step_packed_async(self) -> list[Request]:
+        """One engine step of the pipelined loop: dispatch step N+1's packed
+        batch, THEN commit step N's (already in-flight) results — so the
+        host bookkeeping of step N overlaps step N+1's device execution
+        (the donated pool serializes the device side; JAX async dispatch
+        makes the second enqueue return immediately).
+
+        Overlap requires that step N+1's schedule not depend on step N's
+        landed token VALUES — true exactly when every live slot samples
+        greedily (the device argmax in _packed_async_fn is bit-identical to
+        sample_tokens' greedy path, and decode lanes read it via on-device
+        indirection) and nothing drafts (speculative accept/reject decides
+        the next frontier on the host). Otherwise the step degrades to
+        commit-then-sync-step — correct, just unpipelined.
+
+        Token-value-independent schedule aside, step N's commit can still
+        CHANGE step N+1's live set: a slot at its token budget (or decode
+        cache-full bound) finishes at commit. Both are predictable without
+        the token value, so those slots are excluded from the dispatch;
+        EOS is not predictable — an EOS slot gets one extra in-flight step
+        whose writes die with the slot's release (_release_slot dead-marks
+        the pending record; freed-block phantom rows are masked by the
+        position-ordered write-before-read discipline + int8 fresh-block
+        scale zeroing)."""
+        live = self._live
+        hot = bool((live & (self._temps > 0.0)).any())
+        if self.speculative or hot:
+            finished = self._commit_pending()
+            if self._live.any():
+                self.async_sync_fallbacks += 1
+                finished.extend(self._step_packed_sync())
+            return finished
+        p = self._pending
+        sched_live = live.copy()
+        if p is not None:
+            # exclude slots whose pending sample finishes them at commit:
+            # scheduling them would grow frontiers past their end
+            for slot in np.flatnonzero(p["samples"] & ~p["dead"] & live):
+                req = self._slots[slot]
+                if req is None:
+                    continue
+                if (len(req.out_tokens) + 1 >= req.max_new_tokens
+                        or (not p["was_prefill"][slot]
+                            and p["lengths_after"][slot]
+                            >= self.max_len - 1)):
+                    sched_live[slot] = False
+        if not sched_live.any():
+            return self._commit_pending()
+        new_pending = self._dispatch_packed_async(sched_live)
+        old, self._pending = self._pending, new_pending
+        if old is None:
+            return []
+        self.async_overlapped_steps += 1
+        # commits that _finish/_fail a slot dead-mark new_pending via
+        # _release_slot — the in-flight step's writes for it become inert
+        return self._commit_pending_record(old)
+
+    def _dispatch_packed_async(self, live) -> dict:
+        """Schedule + allocate + enqueue one packed step WITHOUT waiting for
+        its results: the greedy-sampling clone of _step_packed_sync's front
+        half (no drafts by construction — the caller falls back when
+        speculation is on). Advances the host frontiers (_lengths /
+        _prompt_pos) at dispatch so the NEXT dispatch schedules against the
+        post-step state, and returns the pending record _commit_pending
+        lands one step later. Raises BlockPoolExhausted (journal unwound,
+        state exactly pre-dispatch) like the sync path."""
+        prof = self.telemetry.profiler
+        self.occupancy_sum += float(live.mean())
+        self.occupancy_steps += 1
+        p = self._pending
+        with prof.phase("schedule"):
+            remaining = np.zeros(self.max_batch, np.int64)
+            for slot in np.flatnonzero(live):
+                remaining[slot] = (len(self._feeds[slot])
+                                   - int(self._prompt_pos[slot]))
+            needed = int(np.where(
+                live, np.minimum(np.maximum(remaining, 1), self._chunk_cap),
+                0).sum())
+            needed = min(needed, self.token_budget)
+            width = next(w for w in self._widths if w >= needed)
+            t_valid = schedule_step_tokens(live, remaining, width,
+                                           self._chunk_cap)
+            sid, off = pack_slot_ids(t_valid, width)
+            toks = np.zeros(width, np.int32)
+            # decode-lane token indirection: tok_src[lane] = slot id whose
+            # token must be read from the in-flight step's device sample
+            # (still unlanded on the host); -1 = host-fed from toks
+            tok_src = np.full(width, -1, np.int32)
+            positions = np.zeros(width, np.int32)
+            for slot in np.flatnonzero(t_valid > 0):
+                tv = int(t_valid[slot])
+                o = int(off[slot])
+                if remaining[slot] > 0:      # prefill chunk (host tokens)
+                    pos = int(self._prompt_pos[slot])
+                    toks[o:o + tv] = self._feeds[slot][pos:pos + tv]
+                elif (p is not None and p["samples"][slot]
+                        and not p["dead"][slot]):
+                    tok_src[o] = slot        # feed step N's device sample
+                else:
+                    toks[o] = self._last[slot]
+                positions[o:o + tv] = (int(self._lengths[slot])
+                                       + np.arange(tv))
+            self.lanes_valid += int(t_valid.sum())
+            self.lanes_total += width
+            if (remaining > 0).any():        # see _step_packed_sync
+                n_lockstep = -(-int(t_valid.max()) // self.block_size)
+                riders = int((live & (remaining == 0)).sum())
+                lockstep = n_lockstep * self.max_batch * self.block_size
+                self.pad_lanes_skipped += max(
+                    lockstep - width - (n_lockstep - 1) * riders, 0)
+        with prof.phase("alloc_cow"):
+            journal: list[tuple] = []
+            try:
+                self._grow_tables(t_valid, journal)
+                if self.prefix_sharing:
+                    self._cow_shared(t_valid, journal)
+            except BlockPoolExhausted:
+                self._unwind_allocs(journal)
+                raise
+        with prof.phase("schedule"):
+            wp = packed_write_positions(t_valid, off, self._tables,
+                                        self._lengths, self.block_size,
+                                        width)
+            kv_len = np.where(sid >= 0, positions + 1, 0).astype(np.int32)
+            lane_idx = np.maximum(off + t_valid - 1, 0).astype(np.int32)
+            # mirrors ride in `extras` (undonated; see _step)
+            cache = self._cache
+            extras = {"length": self._device_lengths(),
+                      "block_table": self._device_tables(),
+                      "write_pos": jnp.asarray(wp[None]),
+                      "kv_len": jnp.asarray(kv_len),
+                      "slot_ids": jnp.asarray(sid)}
+            if self.quantized:
+                extras["fresh_blocks"] = jnp.asarray(self._take_fresh())
+            if self._use_grid:
+                max_tv = max(int(t_valid.max()), 1)
+                wb = next(w for w in self._grid_widths if w >= max_tv)
+                q_pos_grid = (self._lengths[:, None]
+                              + np.arange(wb, dtype=np.int32)[None, :])
+                grid_pos = np.full(width, self.max_batch * wb, np.int32)
+                valid_lane = sid >= 0
+                grid_pos[valid_lane] = (sid[valid_lane] * wb
+                                        + (np.flatnonzero(valid_lane)
+                                           - off[sid[valid_lane]]))
+                extras.update(
+                    q_pos_grid=jnp.asarray(q_pos_grid.astype(np.int32)),
+                    grid_pos=jnp.asarray(grid_pos),
+                    kv_len_slot=jnp.asarray((self._lengths
+                                             + t_valid).astype(np.int32)))
+            prev = (p["sampled"] if p is not None
+                    else self._no_pending_tokens)
+        with prof.phase("device"):
+            # NO fence here — landing results is _commit_pending's job, one
+            # step later; this enqueue returns as soon as XLA accepts it
+            logits, sampled, self._cache = self._call_device(
+                self._packed_async_fn, self.w, self.hccs,
+                jnp.asarray(toks[None]), jnp.asarray(tok_src), prev,
+                jnp.asarray(positions[None]), cache, extras,
+                jnp.asarray(lane_idx))
+        with prof.phase("sample"):
+            # frontier advance AT DISPATCH (the commit reads the record's
+            # snapshots, never the advanced arrays)
+            feed_len = np.asarray([len(f) if f is not None else 1 << 30
+                                   for f in self._feeds])
+            samples = live & (self._prompt_pos + t_valid >= feed_len)
+            was_prefill = live & (self._prompt_pos < feed_len)
+            self._lengths_dev = None
+            for slot in np.flatnonzero(live):
+                tv = int(t_valid[slot])
+                self._lengths[slot] += tv
+                self._prompt_pos[slot] = min(self._prompt_pos[slot] + tv,
+                                             feed_len[slot])
+        return {
+            "live": live.copy(),
+            "samples": samples,
+            "was_prefill": was_prefill,
+            "lengths_after": self._lengths.copy(),
+            "prompt_pos_after": self._prompt_pos.copy(),
+            "logits": logits,                # device handle, not landed
+            "sampled": sampled,              # device handle, not landed
+            "dead": np.zeros(self.max_batch, bool),
+        }
+
+    def _commit_pending(self) -> list[Request]:
+        """Land and commit the in-flight step, if any (the drain entry
+        point: sync fallbacks, empty schedules, and step()'s no-live-work
+        branch). Pops the record FIRST so releases triggered inside the
+        commit don't dead-mark the record being committed."""
+        p, self._pending = self._pending, None
+        if p is None:
+            return []
+        return self._commit_pending_record(p)
+
+    def _commit_pending_record(self, p) -> list[Request]:
+        """The host back half of a pipelined step, one step late: fence the
+        step's device outputs, then run _sample_and_finish's commit loop
+        against the record's SNAPSHOTS (the live arrays already hold the
+        next step's frontier advance). Slots released since dispatch
+        (preempt / cancel / deadline / EOS at the previous commit) are
+        dead-marked in the record and skipped — their landed token is
+        discarded exactly as if never scheduled. Prefix registration passes
+        the record's own coverage so no block the still-in-flight next step
+        writes is ever registered (= refcounted as shared)."""
+        prof = self.telemetry.profiler
+        with prof.phase("device"):
+            if prof.enabled:
+                # the profiler's device fence moves HERE from the dispatch
+                # (the whole point of the pipeline): device time attributed
+                # to the step whose results are being landed
+                jax.block_until_ready(p["logits"])
+        finished: list[Request] = []
+        with prof.phase("sample"):
+            live = p["live"] & ~p["dead"]
+            samples = p["samples"] & ~p["dead"]
+            # np.asarray blocks until the step's outputs land (the
+            # unprofiled path's only sync point)
+            sampled = np.asarray(p["sampled"])
+            if self._robust and self._adm.nan_check:
+                bad = ~np.isfinite(np.asarray(p["logits"])).all(axis=-1)
+                for slot in np.flatnonzero(samples & bad):
+                    finished.append(self._fail_slot(int(slot),
+                                                    "nan_logits"))
+                    live[slot] = False
+                    samples[slot] = False
+        for slot in np.flatnonzero(live):
+            req = self._slots[slot]
+            if req is None:
+                continue
+            if self.prefix_sharing and (p["was_prefill"][slot]
+                                        or self.decode_sharing):
+                covered = (int(p["lengths_after"][slot])
+                           if self.decode_sharing
+                           else min(int(p["prompt_pos_after"][slot]),
+                                    len(req.prompt)))
+                with prof.phase("register"):
+                    self._register_blocks(slot, req, covered=covered)
+            if not samples[slot]:
+                continue                     # still mid-prompt at dispatch
+            tok = int(sampled[slot])
+            req.out_tokens.append(tok)
+            if self.telemetry.enabled and len(req.out_tokens) == 1:
+                self.telemetry.metrics.on_first_token(req.uid)
+            self._last[slot] = tok
+            if (len(req.out_tokens) >= req.max_new_tokens or
+                    (self.eos_id is not None and tok == self.eos_id) or
+                    (not p["was_prefill"][slot] and
+                     p["lengths_after"][slot] >= self.max_len - 1)):
+                finished.append(self._finish(slot))
+        return finished
+
     def _call_device(self, fn, *args):
         """Dispatch one jitted step function. In robust mode transient
         failures are retried up to max_device_retries times — safe because
@@ -1969,6 +2398,7 @@ class PagedEngine:
                 self._key, logits, np.where(samples, self._temps, 0.0),
                 [r.uid if r else 0 for r in self._slots],
                 [len(r.out_tokens) if r else 0 for r in self._slots])
+        self._lengths_dev = None             # frontiers advance below
         for slot in np.flatnonzero(live):
             req = self._slots[slot]
             tv = int(t_valid[slot])
@@ -2053,6 +2483,7 @@ class PagedEngine:
         replay = np.zeros(width, bool)       # committed verify lanes
         keep_blocks: dict[int, int] = {}     # slot -> committed block count
         any_reject = False
+        self._lengths_dev = None             # frontiers advance below
         for slot in np.flatnonzero(live):
             req = self._slots[slot]
             tv = int(t_valid[slot])
@@ -2130,6 +2561,7 @@ class PagedEngine:
                     continue                 # covered by committed rows
                 self.alloc.free([blk])
                 self._tables[slot, jdx] = -1
+                self._tables_dev = None
                 if resv_dec:
                     self._resv[slot] += 1
             if any_reject:
@@ -2172,8 +2604,12 @@ class PagedEngine:
     @property
     def busy(self) -> bool:
         """True while the engine has queued or in-flight requests (the
-        open-loop driver's loop condition — see telemetry.drive_open_loop)."""
-        return bool(self._queue) or bool(self._live.any())
+        open-loop driver's loop condition — see telemetry.drive_open_loop).
+        An uncommitted pipelined step counts as in-flight work: its tokens
+        have not landed in Request.out_tokens yet, so the drain loop must
+        keep stepping until the commit catches up."""
+        return (bool(self._queue) or bool(self._live.any())
+                or self._pending is not None)
 
     def step(self) -> list[Request]:
         """Admit from the queue and run ONE engine step; returns newly
@@ -2195,11 +2631,18 @@ class PagedEngine:
             with prof.phase("admit"):
                 if self._robust:
                     finished.extend(
-                        self._expire_deadlines(self._adm.clock()))
+                        self._expire_deadlines(self._clock()))
                 self._admit()
             if self.telemetry.enabled:
                 self.telemetry.metrics.sample_queue_depth()
             if not self._live.any():
+                if self._pending is not None:
+                    # pipeline drain: every live slot finished at the last
+                    # commit (or was released), but one dispatched step is
+                    # still in flight — land it so its tokens/telemetry
+                    # are not lost
+                    finished.extend(self._commit_pending())
+                    return finished
                 # a robust queue may legitimately stall head-of-line (gate
                 # blocked with no preemptible lower class); without the
                 # layer a stalled queue beside a free pool is a scheduling

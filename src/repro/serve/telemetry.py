@@ -93,6 +93,15 @@ SNAPSHOT_SCHEMA_VERSION = 2
 QUEUE_WAIT_EDGES_MS = (1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0,
                        500.0, 1000.0, 2000.0, 5000.0)
 
+# THE serving clock. Every time-reading component of the serving stack —
+# deadline/admission decisions (serve/admission.py), lifecycle latencies
+# (MetricsRegistry), the step profiler, and the open-loop driver — defaults
+# to this one callable, so a request can never miss its SLA on one clock
+# while telemetry reports it in-SLO on another. Inject a replacement by
+# passing `clock=` to Telemetry (the engines resolve deadlines off the same
+# instance unless AdmissionConfig.clock is explicitly overridden).
+SERVING_CLOCK = time.perf_counter
+
 _NULL = contextlib.nullcontext()
 
 
@@ -172,8 +181,8 @@ class MetricsRegistry:
     on_submit at queue entry, on_admit at slot assignment, on_first_token
     when out_tokens goes 0 -> 1, on_finish when the request completes."""
 
-    def __init__(self, clock=time.perf_counter):
-        self.clock = clock
+    def __init__(self, clock=None):
+        self.clock = clock if clock is not None else SERVING_CLOCK
         self.traces: dict[int, RequestTrace] = {}
         self.finished: list[RequestTrace] = []
         self.queue_depth = 0          # currently submitted, not yet admitted
@@ -181,8 +190,15 @@ class MetricsRegistry:
         self._depth_sum = 0           # sampled per step for the mean
         self._depth_samples = 0
 
-    def on_submit(self, uid: int, prompt_len: int):
-        self.traces[uid] = RequestTrace(uid, int(prompt_len), self.clock())
+    def on_submit(self, uid: int, prompt_len: int, ts=None):
+        """`ts` is an optional explicit submit timestamp (seconds on the
+        registry clock). Open-loop drivers pass the request's INTENDED
+        arrival time here: an arrival that came due while a multi-ms device
+        step was in flight is only submitted after the step returns, and
+        without the override its queue wait / TTFT would silently absorb
+        that step-granularity jitter instead of charging it to queueing."""
+        self.traces[uid] = RequestTrace(
+            uid, int(prompt_len), self.clock() if ts is None else float(ts))
         self.queue_depth += 1
         self.queue_depth_peak = max(self.queue_depth_peak, self.queue_depth)
 
@@ -296,9 +312,9 @@ class StepProfiler:
     can't silently hide outside the breakdown. When disabled both return a
     shared null context: one attribute check, zero allocation."""
 
-    def __init__(self, enabled: bool = True, clock=time.perf_counter):
+    def __init__(self, enabled: bool = True, clock=None):
         self.enabled = enabled
-        self.clock = clock
+        self.clock = clock if clock is not None else SERVING_CLOCK
         self.reset()
 
     def reset(self):
@@ -356,11 +372,11 @@ class Telemetry:
     so every hook site stays a plain attribute check when telemetry is off
     (no Optional plumbing, no behavioral branches)."""
 
-    def __init__(self, enabled: bool = True, clock=time.perf_counter):
+    def __init__(self, enabled: bool = True, clock=None):
         self.enabled = enabled
-        self.clock = clock
-        self.metrics = MetricsRegistry(clock)
-        self.profiler = StepProfiler(enabled, clock)
+        self.clock = clock if clock is not None else SERVING_CLOCK
+        self.metrics = MetricsRegistry(self.clock)
+        self.profiler = StepProfiler(enabled, self.clock)
 
     def reset(self):
         """Drop accumulated traces and profile data (e.g. after a warm-up
@@ -433,8 +449,7 @@ def format_snapshot(snap: dict) -> str:
     return "\n".join(lines)
 
 
-def drive_open_loop(eng, reqs, arrivals, *, clock=time.perf_counter,
-                    sleep=time.sleep):
+def drive_open_loop(eng, reqs, arrivals, *, clock=None, sleep=time.sleep):
     """Open-loop serving: submit reqs[i] once `arrivals[i]` seconds have
     elapsed (arrival offsets must be sorted ascending) and step the engine
     whenever it has work; idle gaps sleep until the next arrival. Arrivals
@@ -444,8 +459,18 @@ def drive_open_loop(eng, reqs, arrivals, *, clock=time.perf_counter,
     continuous. Returns the requests the ENGINE returned (finished OR
     failed); requests that never entered it — rejected by backpressure or
     shed straight from the queue — are marked failed in place on `reqs`,
-    so per-request outcomes are always read off the input list."""
+    so per-request outcomes are always read off the input list.
+
+    Each request is stamped with its INTENDED arrival time
+    (``req.arrival_ts = t0 + arrivals[i]``, absolute on `clock`) before
+    submission; the engines forward that to ``MetricsRegistry.on_submit``
+    and to the admission queue's deadline anchor, so an arrival that came
+    due mid-step is measured from when it ARRIVED, not from when the step
+    loop got around to submitting it. `clock` defaults to SERVING_CLOCK —
+    inject a custom clock into the engine's Telemetry as well, or the
+    stamped arrivals land on a different timebase."""
     from repro.serve.admission import QueueFull
+    clock = clock if clock is not None else SERVING_CLOCK
     arrivals = np.asarray(arrivals, float)
     if len(arrivals) != len(reqs):
         raise ValueError(f"{len(reqs)} requests but {len(arrivals)} arrivals")
@@ -457,6 +482,7 @@ def drive_open_loop(eng, reqs, arrivals, *, clock=time.perf_counter,
     while i < len(reqs) or eng.busy:
         now = clock() - t0
         while i < len(reqs) and arrivals[i] <= now:
+            reqs[i].arrival_ts = t0 + float(arrivals[i])
             try:
                 eng.submit(reqs[i])
             except QueueFull:

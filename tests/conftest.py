@@ -70,6 +70,12 @@ def pytest_addoption(parser):
                           "speculative decoding (draft/verify/rollback); "
                           "only meaningful with --cache-layout paged "
                           "--packed-step on (CI runs speculative legs)")
+    parser.addoption("--async-loop", default="off", choices=("on", "off"),
+                     help="run the engine-level suites with the paged "
+                          "engine's pipelined async step loop (dispatch "
+                          "step N+1 before committing step N); only "
+                          "meaningful with --cache-layout paged "
+                          "--packed-step on (CI runs async legs)")
 
 
 def pytest_collection_modifyitems(config, items):
@@ -130,8 +136,14 @@ def speculative(request):
 
 
 @pytest.fixture
+def async_loop(request):
+    """The --async-loop option as a bool (paged packed engines only)."""
+    return request.config.getoption("--async-loop") == "on"
+
+
+@pytest.fixture
 def make_engine(cache_layout, prefix_sharing, decode_sharing, packed_step,
-                kv_quant, speculative):
+                kv_quant, speculative, async_loop):
     """Factory building the continuous-batching engine for the selected
     cache layout: ContinuousEngine (slot arena) or PagedEngine (block pool,
     optionally with --prefix-sharing prompt-prefix reuse, --decode-sharing
@@ -150,9 +162,11 @@ def make_engine(cache_layout, prefix_sharing, decode_sharing, packed_step,
             kw.setdefault("prefix_sharing", prefix_sharing)
             kw.setdefault("decode_sharing", decode_sharing)
             kw.setdefault("packed", packed_step)
-            # speculative decoding rides the packed step only; explicit
-            # lockstep engines built by individual tests stay non-spec
+            # speculative decoding and the async loop ride the packed step
+            # only; explicit lockstep engines built by individual tests
+            # stay non-spec and synchronous
             kw.setdefault("speculative", speculative and kw["packed"])
+            kw.setdefault("async_loop", async_loop and kw["packed"])
             return PagedEngine(params, cfg, **kw)
         from repro.serve import ContinuousEngine
         return ContinuousEngine(params, cfg, **kw)

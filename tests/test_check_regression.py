@@ -41,6 +41,12 @@ def _snapshot():
             dict(kv_quant="int8", tok_per_s=1750.0, kv_bytes_vs_fp32=0.25,
                  greedy_exact_match=0.87),
         ],
+        async_loop={"sync": dict(loop="sync", tok_per_s=1500.0,
+                                 device_stall_share=0.5),
+                    "async": dict(loop="async", tok_per_s=1650.0,
+                                  device_stall_share=0.3),
+                    "vs_sync": 1.1, "stall_share_vs_sync": 0.6,
+                    "greedy_parity": 1.0},
         latency_slo=dict(arrival_rate=8.0, tok_per_s=85.0,
                          phase_coverage=0.98, ttft=dict(dist),
                          tpot=dict(dist), e2e=dict(dist)),
@@ -54,13 +60,16 @@ def _snapshot():
 def test_specs_cover_every_section():
     names = [name for name, *_ in metric_specs(_snapshot())]
     for prefix in ("engines[", "prefill_heavy[", "prefix_sharing[",
-                   "multi_turn[", "kv_int8[", "latency_slo.", "overload."):
+                   "multi_turn[", "kv_int8[", "async_loop", "latency_slo.",
+                   "overload."):
         assert any(n.startswith(prefix) for n in names), prefix
     # higher-is-better latency would be nonsense; spot-check directions
     spec = {name: (d, tol) for name, _, d, tol in metric_specs(_snapshot())}
     assert spec["latency_slo.ttft.p99"][0] == "lower"
     assert spec["engines[wave].tok_per_s"][0] == "higher"
     assert spec["kv_int8[int8].kv_bytes_vs_fp32"][0] == "lower"
+    assert spec["async_loop.stall_share_vs_sync"][0] == "lower"
+    assert spec["async_loop.greedy_parity"][1] == 0.0
     assert spec["overload.per_class[2].slo_fail_rate"][0] == "lower"
     # resume parity is exact-or-fail: zero tolerance band
     assert spec["overload.resume_token_parity"] == ("higher", 0.0)

@@ -372,3 +372,93 @@ def test_drive_open_loop_serves_everything(served, rng, name):
     assert s["requests"] == len(reqs)
     assert s["ttft"]["count"] == len(reqs)
     assert s["queue_wait"]["p50"] >= 0
+
+
+# -------------------------------------------------- serving-clock unity --
+
+
+def _noop_sleep(_):
+    pass
+
+
+@pytest.mark.parametrize("name", ["continuous", "paged"])
+def test_deadline_and_telemetry_share_one_clock(served, name):
+    """Regression: admission deadlines used time.monotonic while telemetry
+    used time.perf_counter — two timebases for one SLA. Injecting a fake
+    clock into Telemetry alone must now drive BOTH: the deadline expires on
+    the fake timebase (it never would on a real one here), the miss counter
+    bumps, and the dropped request's trace agrees with the miss on the
+    same clock."""
+    from repro.serve import AdmissionConfig
+    cfg, params = served
+    clock = FakeClock()
+    tel = Telemetry(enabled=True, clock=clock)
+    kw = dict(max_batch=2, max_len=64, telemetry=tel,
+              admission=AdmissionConfig())          # note: no clock override
+    if name == "paged":
+        eng = PagedEngine(params, cfg.replace(cache_layout="paged"),
+                          block_size=8, packed=True, **kw)
+    else:
+        eng = ContinuousEngine(params, cfg, **kw)
+    rng = np.random.default_rng(0)
+    req = Request(uid=0, prompt=rng.integers(0, 256, 6).astype(np.int32),
+                  max_new_tokens=32, deadline_e2e=1.5)
+    eng.submit(req)
+    guard = 0
+    while eng.busy and guard < 200:
+        eng.step()
+        guard += 1
+    assert req.failed and req.fail_reason == "deadline_e2e"
+    assert eng.robust_counters.deadline_miss_e2e == 1
+    trace = tel.metrics.traces[0]
+    # the trace's submit anchor and the expiry decision read ONE timebase:
+    # the request's age on the fake clock genuinely exceeds its deadline
+    assert clock.t - trace.submit_ts > 1.5
+
+
+def test_explicit_admission_clock_still_wins(served):
+    """Back-compat: an explicitly injected AdmissionConfig.clock overrides
+    the engine's serving clock — a frozen admission clock means deadlines
+    never expire even while telemetry time races ahead."""
+    from repro.serve import AdmissionConfig
+    cfg, params = served
+    tel = Telemetry(enabled=True, clock=FakeClock())
+    eng = ContinuousEngine(params, cfg, max_batch=2, max_len=64,
+                           telemetry=tel,
+                           admission=AdmissionConfig(clock=lambda: 0.0))
+    rng = np.random.default_rng(0)
+    req = Request(uid=0, prompt=rng.integers(0, 256, 6).astype(np.int32),
+                  max_new_tokens=4, deadline_e2e=0.5)
+    eng.submit(req)
+    eng.run()
+    assert req.done and not req.failed
+    assert eng.robust_counters.deadline_miss_e2e == 0
+
+
+@pytest.mark.parametrize("name", ["continuous", "paged"])
+def test_drive_open_loop_stamps_intended_arrivals(served, name):
+    """Regression: queue wait / TTFT were measured from the post-step
+    submit() call, silently absorbing step-granularity jitter. The driver
+    now stamps each request's INTENDED arrival (t0 + offset) and the
+    engines anchor the telemetry trace there — so consecutive submit
+    timestamps reproduce the arrival offsets exactly, fake-clock ticks
+    between arrivals notwithstanding."""
+    cfg, params = served
+    clock = FakeClock()
+    tel = Telemetry(enabled=True, clock=clock)
+    eng = _engines(params, cfg, tel)[name]
+    rng = np.random.default_rng(1)
+    reqs = _requests(rng, 4, max_new=3)
+    arrivals = np.array([0.0, 2.0, 7.0, 9.0])
+    done = drive_open_loop(eng, reqs, arrivals, clock=clock,
+                           sleep=_noop_sleep)
+    assert len(done) == len(reqs)
+    subs = [tel.metrics.traces[r.uid].submit_ts for r in reqs]
+    gaps = np.diff(subs)
+    assert np.allclose(gaps, np.diff(arrivals)), (
+        f"submit timestamps {subs} do not reproduce arrival offsets "
+        f"{list(arrivals)}")
+    # queue wait can only begin at arrival: no admit precedes its submit
+    for r in reqs:
+        t = tel.metrics.traces[r.uid]
+        assert t.admit_ts is None or t.admit_ts >= t.submit_ts
